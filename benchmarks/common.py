@@ -1,0 +1,123 @@
+"""Shared benchmark scaffolding.
+
+All benchmarks run the REAL system (engine + trainer) at reduced scale on
+CPU.  Wall-clock on this container is not TPU time, so every benchmark also
+reports the *hardware-neutral* quantities the paper's TokenPS / TrajPS /
+GPU-hours are built from: model-processed tokens (prefill + decode +
+replay), trajectories produced, shared-prefix savings, and KV bytes.
+"""
+from __future__ import annotations
+
+import dataclasses
+import random
+import time
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+from repro.configs import get_config
+from repro.configs.base import TrainConfig, TreeConfig
+from repro.core.engine import TreeEngine
+from repro.core.sampler import sample_sequential, sample_trees
+from repro.core.tree import QueryTree
+from repro.data.synthetic_math import MathTaskGenerator
+from repro.data.tokenizer import ByteTokenizer
+from repro.models.model import init_params
+from repro.rl.trainer import RLTrainer, TrainerMode
+
+TOK = ByteTokenizer()
+
+ENGINE_KW = dict(num_pages=2048, page_size=16, max_slots=128,
+                 max_queries=32, max_prompt_len=256)
+
+
+def make_model(arch: str = "qwen2.5-7b", seed: int = 0):
+    cfg = get_config(arch, smoke=True)
+    params = init_params(jax.random.PRNGKey(seed), cfg)
+    return cfg, params
+
+
+def make_prompts(n: int, seed: int = 0) -> Tuple[List[List[int]],
+                                                 List[str]]:
+    gen = MathTaskGenerator(seed, 1, 2)
+    samples = gen.batch(n)
+    return ([TOK.encode(s.query, bos=True) for s in samples],
+            [s.answer for s in samples])
+
+
+def warmed_trainer(mode=TrainerMode.TREEPO, *, arch="qwen2.5-7b",
+                   tree_cfg: Optional[TreeConfig] = None,
+                   train_cfg: Optional[TrainConfig] = None,
+                   bc_steps: int = 60, seed: int = 0) -> RLTrainer:
+    cfg = get_config(arch, smoke=True)
+    tree_cfg = tree_cfg or TreeConfig(
+        max_depth=4, segment_len=16, max_width=4, branch_factor=2,
+        init_divergence_low=2, init_divergence_high=2, temperature=0.9)
+    train_cfg = train_cfg or TrainConfig(
+        batch_size=2, group_size=tree_cfg.max_width, oversample_factor=2,
+        max_resample_rounds=0, learning_rate=5e-4, reward_shaping=0.1)
+    tr = RLTrainer(cfg, train_cfg, tree_cfg, mode, seed=seed,
+                   engine_kwargs=ENGINE_KW, min_difficulty=1,
+                   max_difficulty=1)
+    if bc_steps:
+        tr.bc_warmup(steps=bc_steps, batch_size=8, lr=3e-3)
+    return tr
+
+
+@dataclasses.dataclass
+class RolloutCost:
+    wall_s: float
+    model_tokens: int          # prefill + decode + replay (engine-processed)
+    prefill_tokens: int
+    decode_tokens: int
+    trajectories: int
+    trajectory_tokens: int     # tokens in returned trajectories
+    shared_prefix_tokens: int  # trajectory tokens served from shared KV
+
+    @property
+    def token_ps(self) -> float:
+        return self.model_tokens / max(self.wall_s, 1e-9)
+
+    @property
+    def traj_ps(self) -> float:
+        return self.trajectories / max(self.wall_s, 1e-9)
+
+    @property
+    def sharing_ratio(self) -> float:
+        """Fraction of trajectory tokens NOT recomputed thanks to the tree
+        (the paper's KV-amortization win)."""
+        return self.shared_prefix_tokens / max(self.trajectory_tokens, 1)
+
+
+def measure_rollout(params, cfg, tree_cfg: TreeConfig,
+                    prompts: List[List[int]], targets: List[str], *,
+                    sequential: bool = False, seed: int = 0,
+                    engine_kw: Optional[Dict] = None) -> Tuple[
+                        List[QueryTree], RolloutCost]:
+    eng = TreeEngine(params, cfg, tree_cfg, seed=seed,
+                     **(engine_kw or ENGINE_KW))
+    t0 = time.time()
+    fn = sample_sequential if sequential else sample_trees
+    trees, rep = fn(eng, prompts, targets, rng=random.Random(seed))
+    wall = time.time() - t0
+    traj_tokens = sum(len(p.tokens) for t in trees for p in t.finished)
+    n_traj = sum(t.num_trajectories for t in trees)
+    # shared tokens: trajectory tokens whose KV was produced once but used
+    # by multiple descendants = traj_tokens - decode tokens attributable
+    prompt_traj_tokens = sum(
+        len(t.prompt_tokens) * t.num_trajectories for t in trees)
+    total_served = traj_tokens + prompt_traj_tokens
+    shared = max(total_served - eng.stats.model_tokens, 0)
+    cost = RolloutCost(
+        wall_s=wall, model_tokens=eng.stats.model_tokens,
+        prefill_tokens=eng.stats.prefill_tokens,
+        decode_tokens=eng.stats.decode_tokens,
+        trajectories=n_traj, trajectory_tokens=total_served,
+        shared_prefix_tokens=shared)
+    return trees, cost
+
+
+def fmt_row(cols, widths=None) -> str:
+    widths = widths or [18] * len(cols)
+    return "  ".join(str(c)[:w].ljust(w) for c, w in zip(cols, widths))

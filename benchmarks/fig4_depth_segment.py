@@ -1,0 +1,51 @@
+"""Figure 4 — TokenPS / TrajPS across depth×segment trade-offs.
+
+Fixed per-trajectory budget B = d × l; sweep depth d (the paper uses
+{56×128, 28×256, 14×512, 7×1024} under B=7k; scaled here).  Reports the
+paper's throughput metrics plus the sharing ratio that drives them.
+"""
+from __future__ import annotations
+
+from typing import List
+
+from repro.configs.base import TreeConfig
+
+from benchmarks.common import (fmt_row, make_model, make_prompts,
+                               measure_rollout)
+
+
+def run(quick: bool = True) -> List[dict]:
+    cfg, params = make_model()
+    budget = 64 if quick else 192          # d*l per trajectory
+    depths = [2, 4, 8] if quick else [2, 4, 8, 16]
+    width = 4 if quick else 8
+    prompts, targets = make_prompts(2 if quick else 4, seed=2)
+    rows = []
+    for d in depths:
+        l = budget // d
+        tc = TreeConfig(max_depth=d, segment_len=l, max_width=width,
+                        branch_factor=2, init_divergence_low=2,
+                        init_divergence_high=2, temperature=0.9)
+        _, cost = measure_rollout(params, cfg, tc, prompts, targets,
+                                  seed=0, engine_kw=dict(
+                                      num_pages=2048,
+                                      page_size=min(16, l),
+                                      max_slots=128, max_queries=32,
+                                      max_prompt_len=256))
+        rows.append(dict(depth=d, segment=l,
+                         token_ps=round(cost.token_ps, 1),
+                         traj_ps=round(cost.traj_ps, 3),
+                         model_tokens=cost.model_tokens,
+                         sharing=round(cost.sharing_ratio, 3)))
+    print("\n== Fig 4: depth x segment sweep (budget d*l fixed) ==")
+    print(fmt_row(["depth", "segment", "tokenPS", "trajPS", "model_tokens",
+                   "sharing"], [6, 8, 9, 9, 13, 8]))
+    for r in rows:
+        print(fmt_row([r["depth"], r["segment"], r["token_ps"],
+                       r["traj_ps"], r["model_tokens"], r["sharing"]],
+                      [6, 8, 9, 9, 13, 8]))
+    return rows
+
+
+if __name__ == "__main__":
+    run(quick=False)

@@ -1,0 +1,86 @@
+"""Figure 6 — TreePO advantage-term ablation.
+
+Two parts:
+  (a) estimator-level: on identical sampled trees, compare the four
+      estimator variants' assignments (Eq. 5 vs 6 vs 7 vs no-root) —
+      fast, deterministic, shows exactly where they disagree;
+  (b) training-level (quick=False): short RL runs per variant, reporting
+      reward trajectories (the paper's accuracy/entropy/length curves at
+      toy scale).
+"""
+from __future__ import annotations
+
+import random
+from typing import List
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import TreeConfig
+from repro.core.advantage import treepo_advantage
+from repro.core.engine import TreeEngine
+from repro.core.sampler import sample_trees
+from repro.core.tree import Status, ancestor_matrix
+from repro.rl.trainer import TrainerMode
+
+from benchmarks.common import (ENGINE_KW, fmt_row, make_model,
+                               make_prompts, warmed_trainer)
+
+VARIANTS = ["treepo", "treepo_size_weighted", "treepo_subgroup_reject",
+            "treepo_no_root"]
+
+
+def run(quick: bool = True) -> List[dict]:
+    cfg, params = make_model()
+    tc = TreeConfig(max_depth=4, segment_len=16, max_width=6,
+                    branch_factor=2, init_divergence_low=2,
+                    init_divergence_high=2, temperature=1.0)
+    eng = TreeEngine(params, cfg, tc, seed=0, **ENGINE_KW)
+    prompts, targets = make_prompts(2, seed=4)
+    trees, _ = sample_trees(eng, prompts, targets, rng=random.Random(0))
+    rows = []
+    rng = np.random.default_rng(0)
+    for tree in trees:
+        G = len(tree.finished)
+        anc = ancestor_matrix(tree.finished, tc.max_depth)
+        # synthetic mixed rewards (the raw model rarely scores)
+        rewards = rng.choice([0.0, 1.0], size=G).astype(np.float32)
+        if rewards.std() == 0:
+            rewards[0] = 1.0 - rewards[0]
+        per = {}
+        for v in VARIANTS:
+            adv = np.asarray(treepo_advantage(jnp.asarray(rewards),
+                                              jnp.asarray(anc), variant=v))
+            per[v] = adv
+        base = per["treepo"]
+        for v in VARIANTS:
+            rows.append(dict(
+                query=tree.query_idx, variant=v,
+                adv_mean=round(float(per[v].mean()), 4),
+                adv_std=round(float(per[v].std()), 4),
+                corr_vs_eq5=round(float(np.corrcoef(base, per[v])[0, 1]), 4)
+                if per[v].std() > 0 and base.std() > 0 else 1.0))
+    print("\n== Fig 6(a): advantage estimator variants on shared trees ==")
+    print(fmt_row(["query", "variant", "mean", "std", "corr_vs_eq5"],
+                  [5, 24, 8, 8, 11]))
+    for r in rows:
+        print(fmt_row([r["query"], r["variant"], r["adv_mean"],
+                       r["adv_std"], r["corr_vs_eq5"]], [5, 24, 8, 8, 11]))
+
+    if not quick:
+        print("\n== Fig 6(b): short training runs per variant ==")
+        for v in VARIANTS:
+            tr = warmed_trainer(TrainerMode.TREEPO, bc_steps=60, seed=1)
+            tr.train_cfg = tr.train_cfg.__class__(
+                **{**tr.train_cfg.__dict__, "advantage_kind": v})
+            rews = []
+            for _ in range(3):
+                m = tr.train_step(num_queries=2)
+                rews.append(m["reward_mean"])
+            print(fmt_row([v, [round(r, 3) for r in rews]], [24, 30]))
+            rows.append(dict(variant=v, training_rewards=rews))
+    return rows
+
+
+if __name__ == "__main__":
+    run(quick=False)

@@ -1,0 +1,46 @@
+"""Figure 7 — online depth×segment budget study (training-side).
+
+The paper: 14×512 is the sweet spot under budget 7k; 7×1024 lags.  Toy
+mirror: fixed budget d×l, short TreePO runs per (d, l), reporting reward
+and response-length trends.
+"""
+from __future__ import annotations
+
+from typing import List
+
+from repro.configs.base import TrainConfig, TreeConfig
+from repro.rl.trainer import TrainerMode
+
+from benchmarks.common import fmt_row, warmed_trainer
+
+
+def run(quick: bool = True) -> List[dict]:
+    budget = 64
+    combos = [(2, 32), (4, 16)] if quick else [(2, 32), (4, 16), (8, 8)]
+    steps = 1 if quick else 4
+    rows = []
+    for d, l in combos:
+        tc = TreeConfig(max_depth=d, segment_len=l, max_width=4,
+                        branch_factor=2, init_divergence_low=2,
+                        init_divergence_high=2, temperature=0.9)
+        tr = warmed_trainer(TrainerMode.TREEPO, tree_cfg=tc,
+                            bc_steps=50, seed=3)
+        rewards, lens = [], []
+        for _ in range(steps):
+            m = tr.train_step(num_queries=1 if quick else 2)
+            rewards.append(round(m["reward_mean"], 3))
+            lens.append(round(m["response_len"], 1))
+        rows.append(dict(depth=d, segment=l, rewards=rewards,
+                         response_lens=lens))
+    print("\n== Fig 7: depth x segment under fixed budget "
+          f"(d*l={budget}) ==")
+    print(fmt_row(["depth", "segment", "rewards", "response_len"],
+                  [6, 8, 24, 16]))
+    for r in rows:
+        print(fmt_row([r["depth"], r["segment"], r["rewards"],
+                       r["response_lens"]], [6, 8, 24, 16]))
+    return rows
+
+
+if __name__ == "__main__":
+    run(quick=False)

@@ -1,0 +1,71 @@
+"""Figure 9 — test-time compute scaling per tree-divergence factor.
+
+Sweep the compute budget (number of trajectories drawn per query) for
+divergence factors d ∈ {2, 4, 8}; report pass-any / maj accuracy vs the
+model-token cost.  Shows the family-of-curves behaviour: small divergence
+wins at low budget, large divergence peaks higher at large budget.
+"""
+from __future__ import annotations
+
+import random
+from collections import Counter
+from typing import List
+
+from repro.configs.base import TreeConfig
+from repro.core.engine import TreeEngine
+from repro.core.sampler import sample_trees
+from repro.data.reward import extract_boxed, verify_answer
+from repro.data.tokenizer import ByteTokenizer
+from repro.rl.trainer import TrainerMode
+
+from benchmarks.common import ENGINE_KW, fmt_row, make_prompts, \
+    warmed_trainer
+
+TOK = ByteTokenizer()
+
+
+def run(quick: bool = True) -> List[dict]:
+    # a BC-warmed model so answers are sometimes right
+    tr = warmed_trainer(TrainerMode.TREEPO, bc_steps=80 if quick else 150,
+                        seed=4)
+    cfg, params = tr.cfg, tr.params
+    prompts, targets = make_prompts(3 if quick else 8, seed=5)
+    divs = [2, 4] if quick else [2, 4, 8]
+    widths = [2, 4] if quick else [2, 4, 8, 16]
+    rows = []
+    for div in divs:
+        for w in widths:
+            if w < div:
+                continue
+            tc = TreeConfig(max_depth=4, segment_len=16, max_width=w,
+                            branch_factor=2, init_divergence_low=div,
+                            init_divergence_high=div, temperature=1.0)
+            eng = TreeEngine(params, cfg, tc, seed=0, **ENGINE_KW)
+            trees, _ = sample_trees(eng, prompts, targets,
+                                    rng=random.Random(0))
+            n_any, n_maj = 0, 0
+            for tree, target in zip(trees, targets):
+                answers = [extract_boxed(TOK.decode(p.tokens))
+                           for p in tree.finished]
+                answers = [a for a in answers if a]
+                if any(verify_answer(a, target) for a in answers):
+                    n_any += 1
+                if answers and verify_answer(
+                        Counter(answers).most_common(1)[0][0], target):
+                    n_maj += 1
+            rows.append(dict(
+                tree_div=div, width=w,
+                compute_tokens=eng.stats.model_tokens,
+                pass_any=round(n_any / len(trees), 3),
+                maj=round(n_maj / len(trees), 3)))
+    print("\n== Fig 9: test-time compute scaling by divergence factor ==")
+    print(fmt_row(["div", "width", "compute_tokens", "pass-any", "maj"],
+                  [4, 6, 14, 9, 6]))
+    for r in rows:
+        print(fmt_row([r["tree_div"], r["width"], r["compute_tokens"],
+                       r["pass_any"], r["maj"]], [4, 6, 14, 9, 6]))
+    return rows
+
+
+if __name__ == "__main__":
+    run(quick=False)

@@ -1,0 +1,92 @@
+"""Roofline table from the dry-run artifacts (results/dryrun.jsonl).
+
+Prints, per (arch × shape × mesh): the three roofline terms in seconds,
+the dominant bottleneck, MODEL_FLOPS/HLO_FLOPs (useful-compute fraction),
+and per-collective byte counts.  This is the §Roofline source of truth.
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import List
+
+from benchmarks.common import fmt_row
+
+DEFAULT_PATH = os.path.join(os.path.dirname(__file__), "..", "results",
+                            "dryrun.jsonl")
+
+
+def load_records(path: str = DEFAULT_PATH) -> List[dict]:
+    recs = []
+    if not os.path.exists(path):
+        return recs
+    seen = {}
+    with open(path) as f:
+        for line in f:
+            try:
+                r = json.loads(line)
+            except json.JSONDecodeError:
+                continue
+            seen[(r["arch"], r["shape"], r["mesh"],
+                  r.get("tag", "baseline"))] = r
+    return list(seen.values())
+
+
+def run(quick: bool = True, path: str = DEFAULT_PATH) -> List[dict]:
+    recs = load_records(path)
+    if not recs:
+        print("\n== Roofline: no dry-run records yet "
+              "(run python -m repro.launch.dryrun --out "
+              "results/dryrun.jsonl) ==")
+        return []
+    rows = []
+    print("\n== Roofline terms per (arch x shape x mesh) ==")
+    hdr = ["arch", "shape", "mesh", "tag", "t_comp(s)", "t_mem(s)",
+           "t_coll(s)", "bottleneck", "useful%"]
+    widths = [18, 12, 6, 10, 10, 10, 10, 10, 8]
+    print(fmt_row(hdr, widths))
+    order = {"single": 0, "multi": 1}
+    for r in sorted(recs, key=lambda r: (r["arch"], r["shape"],
+                                         order.get(r["mesh"], 2),
+                                         r.get("tag", "baseline"))):
+        tag = r.get("tag", "baseline")
+        if r["status"] == "skipped":
+            rows.append(dict(arch=r["arch"], shape=r["shape"],
+                             mesh=r["mesh"], tag=tag, status="skipped"))
+            continue
+        if r["status"] != "ok":
+            print(fmt_row([r["arch"], r["shape"], r["mesh"], tag, "ERROR",
+                           r.get("error", "")[:40], "", "", ""], widths))
+            continue
+        # recompute terms from the raw per-device quantities so older
+        # records pick up the current roofline semantics
+        from repro.launch.analysis import Roofline
+        raw = r["roofline"]
+        ro = Roofline(flops=raw["flops"], hbm_bytes=raw["hbm_bytes"],
+                      coll_bytes=raw["coll_bytes"], chips=r["chips"],
+                      model_flops=raw["model_flops"]).as_dict()
+        row = dict(arch=r["arch"], shape=r["shape"], mesh=r["mesh"],
+                   tag=tag,
+                   t_compute=ro["t_compute_s"], t_memory=ro["t_memory_s"],
+                   t_collective=ro["t_collective_s"],
+                   bottleneck=ro["bottleneck"],
+                   useful=ro["useful_flops_frac"],
+                   flops=raw["flops"], hbm_bytes=raw["hbm_bytes"],
+                   coll_bytes=raw["coll_bytes"])
+        rows.append(row)
+        print(fmt_row([r["arch"], r["shape"], r["mesh"], tag,
+                       f"{ro['t_compute_s']:.2e}",
+                       f"{ro['t_memory_s']:.2e}",
+                       f"{ro['t_collective_s']:.2e}",
+                       ro["bottleneck"],
+                       f"{100 * ro['useful_flops_frac']:.0f}"], widths))
+    n_ok = sum(1 for r in recs if r["status"] == "ok")
+    n_skip = sum(1 for r in recs if r["status"] == "skipped")
+    n_err = len(recs) - n_ok - n_skip
+    print(f"\n{n_ok} ok / {n_skip} skipped / {n_err} errors "
+          f"out of {len(recs)} recorded cases")
+    return rows
+
+
+if __name__ == "__main__":
+    run(quick=False)

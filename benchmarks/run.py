@@ -1,0 +1,64 @@
+"""Benchmark harness entry point: one module per paper table/figure.
+
+  PYTHONPATH=src python -m benchmarks.run [--full] [--only NAME]
+
+Quick mode (default) keeps every benchmark CI-sized; --full runs the
+paper-shaped sweeps.  The roofline table reads results/dryrun.jsonl
+produced by ``python -m repro.launch.dryrun``.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+from benchmarks import (
+    fig4_depth_segment,
+    fig5_rollout_scaling,
+    fig6_advantage_ablation,
+    fig7_segment_budget,
+    fig8_prob_branching,
+    fig9_compute_scaling,
+    roofline,
+    table1_training,
+    table2_efficiency,
+)
+
+BENCHES = [
+    ("table2_efficiency", table2_efficiency),
+    ("fig4_depth_segment", fig4_depth_segment),
+    ("fig5_rollout_scaling", fig5_rollout_scaling),
+    ("fig8_prob_branching", fig8_prob_branching),
+    ("fig6_advantage_ablation", fig6_advantage_ablation),
+    ("fig7_segment_budget", fig7_segment_budget),
+    ("fig9_compute_scaling", fig9_compute_scaling),
+    ("table1_training", table1_training),
+    ("roofline", roofline),
+]
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+    failures = 0
+    for name, mod in BENCHES:
+        if args.only and args.only != name:
+            continue
+        t0 = time.time()
+        print(f"\n##### {name} #####", flush=True)
+        try:
+            mod.run(quick=not args.full)
+            print(f"[{name}] done in {time.time() - t0:.1f}s", flush=True)
+        except Exception:
+            failures += 1
+            print(f"[{name}] FAILED:\n{traceback.format_exc()}",
+                  flush=True)
+    print(f"\nbenchmarks: {len(BENCHES) - failures}/{len(BENCHES)} ok")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

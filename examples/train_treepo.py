@@ -1,0 +1,78 @@
+"""End-to-end driver: RL-train a ~small model with TreePO for a few
+hundred steps on synthetic verifiable math (deliverable b).
+
+  PYTHONPATH=src python examples/train_treepo.py            # short demo
+  PYTHONPATH=src python examples/train_treepo.py --steps 200 --bc-steps 300
+
+The pipeline is the paper's: BC-warmed base -> tree rollout (segment
+sampling, branching, fallback) -> boxed-answer reward -> dynamic-sampling
+filter -> TreePO advantage -> DAPO-clipped token-level PG -> AdamW.
+Checkpoints land in ./checkpoints/treepo (interval 50, as in the paper).
+"""
+import argparse
+import sys
+
+sys.path.insert(0, "src")
+
+from repro.checkpoint import save_checkpoint
+from repro.configs import get_config
+from repro.configs.base import TrainConfig, TreeConfig
+from repro.rl.trainer import RLTrainer, TrainerMode
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2.5-7b")
+    ap.add_argument("--steps", type=int, default=8)
+    ap.add_argument("--bc-steps", type=int, default=120)
+    ap.add_argument("--queries", type=int, default=2)
+    ap.add_argument("--width", type=int, default=6)
+    ap.add_argument("--ckpt-dir", default="checkpoints/treepo")
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch, smoke=True)
+    tree_cfg = TreeConfig(max_depth=5, segment_len=16,
+                          max_width=args.width, branch_factor=2,
+                          init_divergence_low=2, init_divergence_high=4,
+                          temperature=0.9)
+    train_cfg = TrainConfig(batch_size=args.queries,
+                            group_size=args.width,
+                            oversample_factor=2, max_resample_rounds=1,
+                            learning_rate=5e-4, advantage_kind="treepo",
+                            reward_shaping=0.1)
+    trainer = RLTrainer(cfg, train_cfg, tree_cfg, TrainerMode.TREEPO,
+                        seed=0,
+                        engine_kwargs=dict(num_pages=4096, page_size=16,
+                                           max_slots=256, max_queries=64,
+                                           max_prompt_len=256),
+                        min_difficulty=1, max_difficulty=2)
+    print(f"model: {cfg.name} ({cfg.num_params():,} params)")
+    print("BC warmup (base-model stand-in)...")
+    w = trainer.bc_warmup(steps=args.bc_steps, batch_size=8, lr=3e-3)
+    print(f"  bc loss: {w['bc_loss']:.4f}")
+    ev = trainer.evaluate(num_queries=8, k=4)
+    print(f"  pre-RL: maj@4={ev['maj_acc']:.2f} pass={ev['pass_any']:.2f}")
+
+    for i in range(args.steps):
+        m = trainer.train_step(num_queries=args.queries,
+                               progress=i / max(args.steps - 1, 1))
+        print(f"step {m['step']:4d} "
+              f"loss={m.get('loss', float('nan')):.4f} "
+              f"reward={m['reward_mean']:.3f} "
+              f"trajs={m['num_trajectories']:.0f} "
+              f"len={m['response_len']:.0f} "
+              f"entropy={m.get('entropy', float('nan')):.3f}",
+              flush=True)
+        if m["step"] % 50 == 0:
+            save_checkpoint(args.ckpt_dir, m["step"],
+                            {"params": trainer.params,
+                             "opt": trainer.opt_state})
+    ev = trainer.evaluate(num_queries=8, k=4)
+    print(f"post-RL: maj@4={ev['maj_acc']:.2f} pass={ev['pass_any']:.2f}")
+    save_checkpoint(args.ckpt_dir, trainer.step,
+                    {"params": trainer.params, "opt": trainer.opt_state})
+    print(f"checkpoint saved to {args.ckpt_dir}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,56 @@
+"""Architecture registry: ``get_config("<arch-id>")`` resolves ``--arch`` ids."""
+from __future__ import annotations
+
+import importlib
+from typing import Dict, List
+
+from repro.configs.base import (  # noqa: F401
+    EncoderConfig,
+    FrontendConfig,
+    MLAConfig,
+    MambaConfig,
+    ModelConfig,
+    MoEConfig,
+    RWKVConfig,
+    TrainConfig,
+    TreeConfig,
+    smoke_variant,
+)
+
+# arch-id -> module name
+_REGISTRY: Dict[str, str] = {
+    "internlm2-20b": "internlm2_20b",
+    "gemma3-12b": "gemma3_12b",
+    "olmoe-1b-7b": "olmoe_1b_7b",
+    "yi-6b": "yi_6b",
+    "jamba-v0.1-52b": "jamba_v01_52b",
+    "qwen3-4b": "qwen3_4b",
+    "deepseek-v3-671b": "deepseek_v3_671b",
+    "whisper-tiny": "whisper_tiny",
+    "llava-next-34b": "llava_next_34b",
+    "rwkv6-7b": "rwkv6_7b",
+    "qwen2.5-7b": "qwen2_5_7b",
+}
+
+ASSIGNED_ARCHS: List[str] = [k for k in _REGISTRY if k != "qwen2.5-7b"]
+ALL_ARCHS: List[str] = list(_REGISTRY)
+
+
+def get_config(arch: str, smoke: bool = False) -> ModelConfig:
+    key = arch.strip()
+    if key.endswith("-smoke"):
+        key, smoke = key[: -len("-smoke")], True
+    if key not in _REGISTRY:
+        raise KeyError(f"unknown arch {arch!r}; known: {sorted(_REGISTRY)}")
+    mod = importlib.import_module(f"repro.configs.{_REGISTRY[key]}")
+    cfg: ModelConfig = mod.CONFIG
+    return smoke_variant(cfg) if smoke else cfg
+
+
+# the four assigned input shapes: name -> (seq_len, global_batch, mode)
+INPUT_SHAPES: Dict[str, tuple] = {
+    "train_4k": (4_096, 256, "train"),
+    "prefill_32k": (32_768, 32, "prefill"),
+    "decode_32k": (32_768, 128, "decode"),
+    "long_500k": (524_288, 1, "decode"),
+}

@@ -1,0 +1,347 @@
+"""Config system: frozen dataclasses describing every supported architecture.
+
+Every assigned architecture gets one module in ``repro/configs/`` exporting a
+``CONFIG`` constant built from these dataclasses.  ``repro.configs.get_config``
+resolves ``--arch <id>`` strings, and ``smoke_variant`` derives the reduced
+(2-layer, d_model<=512, <=4-expert) configuration used by CPU smoke tests.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Optional, Tuple
+
+
+@dataclass(frozen=True)
+class MoEConfig:
+    """Mixture-of-experts settings for a single MoE FFN layer."""
+
+    num_experts: int
+    top_k: int
+    expert_d_ff: int
+    num_shared_experts: int = 0
+    shared_d_ff: int = 0
+    # Which layers are MoE: every `every`-th layer starting at `offset`
+    # (dense FFN elsewhere).  deepseek-v3 keeps the first 3 layers dense.
+    every: int = 1
+    offset: int = 0
+    router_aux_free_bias: bool = False  # deepseek-v3 aux-loss-free balancing
+    aux_loss_coef: float = 0.01
+    router_jitter: float = 0.0
+    # expert-parallel capacity factor (shard_map path): 0 = exact (every
+    # shard runs all T*k rows; no drops), > 0 = GShard-style per-expert
+    # capacity cf*T*k/E with overflow dropping — 8-16x less expert compute
+    ep_capacity_factor: float = 0.0
+
+    def is_moe_layer(self, layer_idx: int) -> bool:
+        if layer_idx < self.offset:
+            return False
+        return (layer_idx - self.offset) % self.every == 0
+
+
+@dataclass(frozen=True)
+class MLAConfig:
+    """Multi-head Latent Attention (deepseek-v2/v3)."""
+
+    q_lora_rank: int
+    kv_lora_rank: int
+    qk_nope_head_dim: int
+    qk_rope_head_dim: int
+    v_head_dim: int
+
+    @property
+    def qk_head_dim(self) -> int:
+        return self.qk_nope_head_dim + self.qk_rope_head_dim
+
+
+@dataclass(frozen=True)
+class MambaConfig:
+    """Mamba-1 selective SSM block settings (jamba)."""
+
+    d_state: int = 16
+    d_conv: int = 4
+    expand: int = 2
+    dt_rank: int = 0  # 0 -> ceil(d_model / 16)
+
+    def resolved_dt_rank(self, d_model: int) -> int:
+        return self.dt_rank if self.dt_rank > 0 else max(1, -(-d_model // 16))
+
+
+@dataclass(frozen=True)
+class RWKVConfig:
+    """RWKV-6 "Finch" time-mix settings."""
+
+    head_dim: int = 64
+    decay_lora: int = 64   # rank of the data-dependent decay LoRA
+    token_shift_lora: int = 32
+
+
+@dataclass(frozen=True)
+class EncoderConfig:
+    """Audio/-style encoder for enc-dec models (whisper)."""
+
+    num_layers: int
+    d_model: int
+    num_heads: int
+    d_ff: int
+    max_positions: int = 1500  # whisper: 30s of audio -> 1500 frames
+
+
+@dataclass(frozen=True)
+class FrontendConfig:
+    """Stubbed modality frontend: provides precomputed embeddings.
+
+    The carve-out permitted by the spec: mel+conv (audio) and ViT+projector
+    (vision) are not implemented; ``input_specs`` hands the decoder a
+    ``(batch, num_prefix_tokens, embed_dim)`` embedding tensor instead.
+    """
+
+    kind: str  # "audio" | "vision"
+    num_prefix_tokens: int
+    embed_dim: int
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    arch_type: str  # dense | moe | hybrid | ssm | audio | vlm
+    num_layers: int
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int = 0  # 0 -> d_model // num_heads
+    # --- attention variant ---
+    attention_kind: str = "gqa"  # gqa | mla | none
+    qk_norm: bool = False
+    rope_theta: float = 10_000.0
+    max_position_embeddings: int = 131_072
+    # sliding window: window size for local layers; `global_every` = every
+    # n-th layer is global full attention (gemma3: 5 local : 1 global -> 6).
+    sliding_window: int = 0  # 0 = no sliding window anywhere
+    global_every: int = 0    # 0 = all layers local if sliding_window>0
+    # --- layer pattern for hybrids ---
+    # e.g. jamba: ("mamba",)*4 + ("attn",) + ("mamba",)*3 repeated; empty =
+    # every layer is `attn` (or `rwkv` for ssm archs).
+    layer_pattern: Tuple[str, ...] = ()
+    # --- sub-configs ---
+    moe: Optional[MoEConfig] = None
+    mla: Optional[MLAConfig] = None
+    mamba: Optional[MambaConfig] = None
+    rwkv: Optional[RWKVConfig] = None
+    encoder: Optional[EncoderConfig] = None
+    frontend: Optional[FrontendConfig] = None
+    # --- misc ---
+    tie_embeddings: bool = False
+    norm_eps: float = 1e-6
+    act: str = "silu"  # silu | gelu
+    mlp_kind: str = "gated"  # gated (swiglu) | plain (whisper)
+    source: str = ""  # citation bracket from the assignment
+    # decode-shape applicability notes
+    supports_long_context: bool = False  # may run long_500k
+
+    @property
+    def resolved_head_dim(self) -> int:
+        return self.head_dim if self.head_dim > 0 else self.d_model // self.num_heads
+
+    def layer_kind(self, layer_idx: int) -> str:
+        if self.layer_pattern:
+            return self.layer_pattern[layer_idx % len(self.layer_pattern)]
+        if self.attention_kind == "none":
+            return "rwkv"
+        return "attn"
+
+    def is_global_attn_layer(self, layer_idx: int) -> bool:
+        """For sliding-window models: is this layer full/global attention?"""
+        if self.sliding_window <= 0:
+            return True
+        if self.global_every <= 0:
+            return False
+        return (layer_idx + 1) % self.global_every == 0
+
+    def num_params(self) -> int:
+        """Analytic parameter count (used for 6ND model-FLOPs roofline)."""
+        d, hd = self.d_model, self.resolved_head_dim
+        n_q, n_kv = self.num_heads, self.num_kv_heads
+        total = self.vocab_size * d  # embed
+        if not self.tie_embeddings:
+            total += self.vocab_size * d  # lm head
+        for i in range(self.num_layers):
+            kind = self.layer_kind(i)
+            if kind == "attn":
+                if self.attention_kind == "mla":
+                    m = self.mla
+                    total += d * m.q_lora_rank + m.q_lora_rank * n_q * m.qk_head_dim
+                    total += d * (m.kv_lora_rank + m.qk_rope_head_dim)
+                    total += m.kv_lora_rank * n_q * (m.qk_nope_head_dim + m.v_head_dim)
+                    total += n_q * m.v_head_dim * d
+                else:
+                    total += d * n_q * hd + 2 * d * n_kv * hd + n_q * hd * d
+            elif kind == "mamba":
+                mc = self.mamba
+                d_in = mc.expand * d
+                dtr = mc.resolved_dt_rank(d)
+                total += d * 2 * d_in            # in_proj
+                total += d_in * mc.d_conv        # conv
+                total += d_in * (dtr + 2 * mc.d_state)  # x_proj
+                total += dtr * d_in + d_in       # dt_proj
+                total += d_in * mc.d_state + d_in  # A_log, D
+                total += d_in * d                # out_proj
+            elif kind == "rwkv":
+                rc = self.rwkv
+                total += 4 * d * d + d * d       # r,k,v,o,g  (time-mix)
+                total += d * rc.decay_lora * 2   # decay lora
+                total += 2 * d * self.d_ff       # channel mix (k,v)  + recv
+            # FFN
+            if kind != "rwkv":  # rwkv channel-mix counted above
+                if self.moe is not None and self.moe.is_moe_layer(i):
+                    m = self.moe
+                    total += d * m.num_experts  # router
+                    total += m.num_experts * 3 * d * m.expert_d_ff
+                    if m.num_shared_experts:
+                        total += m.num_shared_experts * 3 * d * m.shared_d_ff
+                else:
+                    mult = 3 if self.mlp_kind == "gated" else 2
+                    total += mult * d * self.d_ff
+        if self.encoder is not None:
+            e = self.encoder
+            per = 4 * e.d_model * e.d_model + 2 * e.d_model * e.d_ff
+            total += e.num_layers * per
+            total += 2 * self.d_model * d  # cross-attn kv proj (approx)
+        return total
+
+    def num_active_params(self) -> int:
+        """Active params per token (MoE: only top-k experts count)."""
+        if self.moe is None:
+            return self.num_params()
+        m = self.moe
+        total = self.num_params()
+        n_moe_layers = sum(
+            1 for i in range(self.num_layers) if m.is_moe_layer(i)
+        )
+        inactive = n_moe_layers * (m.num_experts - m.top_k) * 3 * self.d_model * m.expert_d_ff
+        return total - inactive
+
+
+@dataclass(frozen=True)
+class TreeConfig:
+    """TreePO sampling hyper-parameters (paper §2.2, §3.1)."""
+
+    max_depth: int = 14           # d
+    segment_len: int = 512        # l  (d*l = response budget)
+    max_width: int = 16           # w  (trajectory group size)
+    branch_factor: int = 2        # N  (budget N^depth, binary default)
+    init_divergence_low: int = 2  # "More Init Divergence": random 2..8 forks at root
+    init_divergence_high: int = 2 #   (low==high -> "Fixed Init Divergence")
+    budget_transfer: bool = True  # reassign dead paths' budget to live ones
+    fallback: bool = True         # DFS fallback when w_q < w and no active paths
+    fallback_align: int = 0       # 0 -> segment-aligned (page-aligned) fallback
+    # heuristic branching: "uniform" | "low_prob" | "high_prob" | "scheduled_low_prob"
+    branch_heuristic: str = "uniform"
+    heuristic_temp: float = 2.0
+    heuristic_temp_end: float = 2.0  # for scheduled variant
+    # early stop
+    repetition_ngram: int = 16
+    repetition_count: int = 4
+    temperature: float = 1.0
+    top_p: float = 1.0
+
+    @property
+    def max_response_len(self) -> int:
+        return self.max_depth * self.segment_len
+
+
+@dataclass(frozen=True)
+class TrainConfig:
+    """GRPO/DAPO/TreePO optimization settings (paper Eq. 1, §3.1)."""
+
+    learning_rate: float = 1e-6
+    warmup_steps: int = 10
+    batch_size: int = 512
+    group_size: int = 16            # G == tree width w
+    clip_eps_low: float = 0.2       # DAPO clip-higher: eps_low < eps_high
+    clip_eps_high: float = 0.28
+    advantage_kind: str = "treepo"  # grpo | treepo | treepo_size_weighted |
+                                    # treepo_subgroup_reject | treepo_no_root
+    global_norm: bool = True        # REINFORCE++ global variance normalization
+    dynamic_sampling: bool = True   # DAPO rejection of all-0/all-1 groups
+    oversample_factor: int = 3      # queries sent = 3x batch (paper)
+    max_resample_rounds: int = 2
+    weight_decay: float = 0.0
+    beta1: float = 0.9
+    beta2: float = 0.95
+    eps: float = 1e-8
+    max_grad_norm: float = 1.0
+    ppo_epochs: int = 1
+    # partial credit for a well-formatted but wrong boxed answer.  The paper
+    # uses binary rewards on a pretrained base model; at toy scale the
+    # shaping keeps reward std > 0 early (0.0 = paper-faithful binary).
+    reward_shaping: float = 0.0
+
+
+# ---------------------------------------------------------------------------
+# smoke-variant derivation
+# ---------------------------------------------------------------------------
+
+def smoke_variant(cfg: ModelConfig) -> ModelConfig:
+    """Reduced same-family variant: 2 layers, d_model<=512, <=4 experts.
+
+    Preserves every structural feature (GQA ratio, MLA, MoE, hybrid pattern,
+    sliding window, enc-dec, frontend) at toy scale so a CPU forward/train
+    step exercises the same code paths as the full config.
+    """
+    d_model = min(cfg.d_model, 256)
+    n_heads = min(cfg.num_heads, 4)
+    ratio = max(1, cfg.num_heads // cfg.num_kv_heads)
+    n_kv = max(1, n_heads // min(ratio, n_heads))
+    head_dim = min(cfg.resolved_head_dim, 64)
+    updates = dict(
+        name=cfg.name + "-smoke",
+        num_layers=2,
+        d_model=d_model,
+        num_heads=n_heads,
+        num_kv_heads=n_kv,
+        head_dim=head_dim,
+        d_ff=min(cfg.d_ff, 512),
+        vocab_size=min(cfg.vocab_size, 512),
+        max_position_embeddings=4096,
+    )
+    if cfg.moe is not None:
+        updates["moe"] = dataclasses.replace(
+            cfg.moe,
+            num_experts=min(cfg.moe.num_experts, 4),
+            top_k=min(cfg.moe.top_k, 2),
+            expert_d_ff=min(cfg.moe.expert_d_ff, 128),
+            shared_d_ff=min(cfg.moe.shared_d_ff, 128),
+            offset=min(cfg.moe.offset, 1),
+        )
+    if cfg.mla is not None:
+        updates["mla"] = MLAConfig(
+            q_lora_rank=64, kv_lora_rank=32,
+            qk_nope_head_dim=32, qk_rope_head_dim=16, v_head_dim=32,
+        )
+    if cfg.rwkv is not None:
+        updates["rwkv"] = dataclasses.replace(
+            cfg.rwkv, head_dim=min(cfg.rwkv.head_dim, 32), decay_lora=16,
+            token_shift_lora=8,
+        )
+    if cfg.encoder is not None:
+        updates["encoder"] = EncoderConfig(
+            num_layers=2, d_model=d_model, num_heads=n_heads,
+            d_ff=min(cfg.encoder.d_ff, 512), max_positions=64,
+        )
+    if cfg.frontend is not None:
+        updates["frontend"] = dataclasses.replace(
+            cfg.frontend, num_prefix_tokens=16, embed_dim=d_model
+        )
+    if cfg.sliding_window > 0:
+        updates["sliding_window"] = min(cfg.sliding_window, 64)
+    if cfg.layer_pattern:
+        # keep a 2-layer slice containing both kinds when hybrid
+        kinds = list(dict.fromkeys(cfg.layer_pattern))
+        if len(kinds) >= 2:
+            updates["layer_pattern"] = (kinds[0], kinds[1])
+        else:
+            updates["layer_pattern"] = (kinds[0], kinds[0])
+    return dataclasses.replace(cfg, **updates)

@@ -1,0 +1,42 @@
+"""deepseek-v3-671b — MLA + MoE (1 shared + 256 routed, top-8), MTP
+[arXiv:2412.19437].
+
+d_ff=2048 is the routed-expert intermediate size; the first 3 layers are
+dense with d_ff=18432.  MLA: q_lora 1536, kv_lora 512, nope 128 + rope 64,
+v_head 128.  MTP (multi-token prediction) is exposed as an auxiliary head in
+the model (one extra depth), used only at train time.
+"""
+from repro.configs.base import MLAConfig, ModelConfig, MoEConfig
+
+CONFIG = ModelConfig(
+    name="deepseek-v3-671b",
+    arch_type="moe",
+    num_layers=61,
+    d_model=7168,
+    num_heads=128,
+    num_kv_heads=128,  # MLA: effectively MHA over decompressed heads
+    head_dim=128,
+    d_ff=18432,        # dense layers (first 3)
+    vocab_size=129280,
+    attention_kind="mla",
+    rope_theta=10_000.0,
+    max_position_embeddings=163_840,
+    moe=MoEConfig(
+        num_experts=256,
+        top_k=8,
+        expert_d_ff=2048,
+        num_shared_experts=1,
+        shared_d_ff=2048,
+        every=1,
+        offset=3,  # first three layers dense
+        router_aux_free_bias=True,
+    ),
+    mla=MLAConfig(
+        q_lora_rank=1536,
+        kv_lora_rank=512,
+        qk_nope_head_dim=128,
+        qk_rope_head_dim=64,
+        v_head_dim=128,
+    ),
+    source="[arXiv:2412.19437]",
+)

@@ -1,0 +1,25 @@
+"""gemma3-12b — dense GQA with 5:1 local:global sliding-window, 128k context
+[hf:google/gemma-3-1b-pt family]."""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="gemma3-12b",
+    arch_type="dense",
+    num_layers=48,
+    d_model=3840,
+    num_heads=16,
+    num_kv_heads=8,
+    head_dim=256,
+    d_ff=15360,
+    vocab_size=262144,
+    attention_kind="gqa",
+    qk_norm=True,               # gemma3 uses QK-norm
+    rope_theta=1_000_000.0,
+    max_position_embeddings=131_072,
+    sliding_window=1024,
+    global_every=6,             # 5 local : 1 global
+    tie_embeddings=True,
+    act="gelu",
+    source="[hf:google/gemma-3-1b-pt]",
+    supports_long_context=True,  # sliding-window variant: long_500k allowed
+)

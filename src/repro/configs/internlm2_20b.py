@@ -1,0 +1,18 @@
+"""internlm2-20b — dense GQA decoder [arXiv:2403.17297]."""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="internlm2-20b",
+    arch_type="dense",
+    num_layers=48,
+    d_model=6144,
+    num_heads=48,
+    num_kv_heads=8,
+    head_dim=128,
+    d_ff=16384,
+    vocab_size=92544,
+    attention_kind="gqa",
+    rope_theta=1_000_000.0,
+    max_position_embeddings=32_768,
+    source="[arXiv:2403.17297]",
+)

@@ -1,0 +1,29 @@
+"""jamba-v0.1-52b — hybrid Mamba+attention 1:7 interleave, MoE 16e top-2
+[arXiv:2403.19887].
+
+Jamba block: 8 layers, attention at in-block index 4, Mamba elsewhere; MoE FFN
+every other layer (offset 1).
+"""
+from repro.configs.base import MambaConfig, ModelConfig, MoEConfig
+
+_BLOCK = ("mamba", "mamba", "mamba", "mamba", "attn", "mamba", "mamba", "mamba")
+
+CONFIG = ModelConfig(
+    name="jamba-v0.1-52b",
+    arch_type="hybrid",
+    num_layers=32,
+    d_model=4096,
+    num_heads=32,
+    num_kv_heads=8,
+    head_dim=128,
+    d_ff=14336,
+    vocab_size=65536,
+    attention_kind="gqa",
+    rope_theta=0.0,  # jamba attention layers use no positional encoding
+    max_position_embeddings=262_144,
+    layer_pattern=_BLOCK,
+    moe=MoEConfig(num_experts=16, top_k=2, expert_d_ff=14336, every=2, offset=1),
+    mamba=MambaConfig(d_state=16, d_conv=4, expand=2),
+    source="[arXiv:2403.19887]",
+    supports_long_context=True,  # hybrid: Mamba state + linear-decode attn
+)

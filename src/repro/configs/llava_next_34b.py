@@ -1,0 +1,25 @@
+"""llava-next-34b — VLM decoder with anyres tiling; vision tower stubbed
+[hf:llava-hf/llava-v1.6-mistral-7b-hf family].
+
+The SigLIP/CLIP tower + projector are the permitted stub: the decoder
+consumes precomputed patch embeddings.  anyres tiling at the default
+(2x2 tiles + base) x 576 patches = 2880 prefix tokens.
+"""
+from repro.configs.base import FrontendConfig, ModelConfig
+
+CONFIG = ModelConfig(
+    name="llava-next-34b",
+    arch_type="vlm",
+    num_layers=60,
+    d_model=7168,
+    num_heads=56,
+    num_kv_heads=8,
+    head_dim=128,
+    d_ff=20480,
+    vocab_size=64000,
+    attention_kind="gqa",
+    rope_theta=5_000_000.0,
+    max_position_embeddings=32_768,
+    frontend=FrontendConfig(kind="vision", num_prefix_tokens=2880, embed_dim=7168),
+    source="[hf:llava-hf/llava-v1.6-mistral-7b-hf]",
+)

@@ -1,0 +1,20 @@
+"""olmoe-1b-7b — MoE, 64 experts top-8 [arXiv:2409.02060]."""
+from repro.configs.base import ModelConfig, MoEConfig
+
+CONFIG = ModelConfig(
+    name="olmoe-1b-7b",
+    arch_type="moe",
+    num_layers=16,
+    d_model=2048,
+    num_heads=16,
+    num_kv_heads=16,
+    head_dim=128,
+    d_ff=1024,
+    vocab_size=50304,
+    attention_kind="gqa",
+    qk_norm=True,  # olmoe uses qk-norm
+    rope_theta=10_000.0,
+    max_position_embeddings=4096,
+    moe=MoEConfig(num_experts=64, top_k=8, expert_d_ff=1024),
+    source="[arXiv:2409.02060]",
+)

@@ -1,0 +1,18 @@
+"""qwen2.5-7b — the paper's own training model [arXiv Qwen2.5 TR]."""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen2.5-7b",
+    arch_type="dense",
+    num_layers=28,
+    d_model=3584,
+    num_heads=28,
+    num_kv_heads=4,
+    head_dim=128,
+    d_ff=18944,
+    vocab_size=152064,
+    attention_kind="gqa",
+    rope_theta=1_000_000.0,
+    max_position_embeddings=131_072,
+    source="[arXiv:2412.15115 Qwen2.5]",
+)

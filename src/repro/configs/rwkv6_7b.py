@@ -1,0 +1,21 @@
+"""rwkv6-7b "Finch" — attention-free RNN with data-dependent decay
+[arXiv:2404.05892]."""
+from repro.configs.base import ModelConfig, RWKVConfig
+
+CONFIG = ModelConfig(
+    name="rwkv6-7b",
+    arch_type="ssm",
+    num_layers=32,
+    d_model=4096,
+    num_heads=64,        # d_model / rwkv.head_dim
+    num_kv_heads=64,
+    head_dim=64,
+    d_ff=14336,
+    vocab_size=65536,
+    attention_kind="none",
+    rope_theta=0.0,
+    max_position_embeddings=1_048_576,  # state-space: unbounded in principle
+    rwkv=RWKVConfig(head_dim=64, decay_lora=64, token_shift_lora=32),
+    source="[arXiv:2404.05892]",
+    supports_long_context=True,  # constant-size state
+)

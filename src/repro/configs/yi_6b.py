@@ -1,0 +1,18 @@
+"""yi-6b — llama-arch dense GQA [arXiv:2403.04652]."""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="yi-6b",
+    arch_type="dense",
+    num_layers=32,
+    d_model=4096,
+    num_heads=32,
+    num_kv_heads=4,
+    head_dim=128,
+    d_ff=11008,
+    vocab_size=64000,
+    attention_kind="gqa",
+    rope_theta=5_000_000.0,
+    max_position_embeddings=4096,
+    source="[arXiv:2403.04652]",
+)

@@ -1,0 +1,29 @@
+"""TreePO core: tree-based rollout engine + tree-based advantage.
+
+The paper's primary contribution lives here:
+  engine.py    — segment-synchronous paged tree-decoding engine
+  sampler.py   — Algorithm 1 (tree-based sampling) host orchestration
+  branching.py — budget policies (N-ary, budget transfer, prob heuristics)
+  fallback.py  — DFS fallback from finished leaves
+  early_stop.py— EOS / boxed / repetition leaf classification
+  tree.py      — host tree bookkeeping + ancestor matrices
+  advantage.py — Eq. 2/5/6/7 advantage estimators
+  loss.py      — Eq. 1 GRPO/DAPO clipped token-level PG objective
+"""
+from repro.core.advantage import (
+    batch_treepo_advantage,
+    global_normalize,
+    grpo_advantage,
+    query_keep_mask,
+    treepo_advantage,
+)
+from repro.core.engine import EnginePath, SegmentResult, TreeEngine
+from repro.core.loss import dapo_pg_loss, entropy_from_logits, \
+    token_logprobs_from_logits
+from repro.core.sampler import (
+    SamplerReport,
+    sample_sequential,
+    sample_trees,
+    sequential_tree_cfg,
+)
+from repro.core.tree import Path, QueryTree, Status, ancestor_matrix

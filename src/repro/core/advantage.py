@@ -1,0 +1,150 @@
+"""TreePO advantage estimation (paper §2.3, Eq. 2/5/6/7).
+
+A rollout group for one query is ``G`` trajectories (tree leaves).  The tree
+structure is encoded as an *ancestor matrix* ``anc`` of shape (G, J): the
+node id of trajectory i's ancestor at depth j (depth 0 = the root query, so
+``anc[:, 0]`` is constant).  Trajectories shorter than J repeat their leaf id
+(a singleton chain below the leaf — consistent with Eq. 4's nesting).
+
+Variants (paper names in quotes):
+  grpo                  Eq. 2  — classic group-mean/std baseline
+  treepo                Eq. 5  — plain mean over depth subgroups ("averaging"),
+                                 the adopted method
+  treepo_size_weighted  Eq. 6  — |G_j|-weighted aggregation (ablation: worse)
+  treepo_subgroup_reject Eq. 7 — zero out degenerate subgroups
+                                 (std == 0) ("naive rejection": harmful)
+  treepo_no_root                — drop the j=0 root-group term (ablation:
+                                 comparable)
+
+All return a per-trajectory advantage (G,); token-level  = broadcast over
+the trajectory's tokens (Eq. 1 applies it at every t).
+REINFORCE++-style *global* normalization across the whole batch of queries
+is applied separately (``global_normalize``).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def grpo_advantage(rewards: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    """Eq. 2: (R - mean) / std within the group.  rewards: (G,)."""
+    mean = rewards.mean()
+    std = rewards.std()
+    return (rewards - mean) / (std + eps)
+
+
+def _subgroup_means(rewards: jnp.ndarray, anc: jnp.ndarray) -> jnp.ndarray:
+    """Per-(trajectory, depth) mean reward of the trajectory's subgroup.
+
+    rewards: (G,); anc: (G, J) int ancestor ids (unique per node within the
+    tree).  Returns (G, J): mean reward over {i' : anc[i', j] == anc[i, j]}.
+    """
+    G, J = anc.shape
+
+    def per_depth(ids):
+        # ids: (G,) node ids at one depth.  segment-sum by dense relabeling.
+        same = ids[:, None] == ids[None, :]          # (G, G)
+        cnt = same.sum(axis=1).astype(jnp.float32)
+        s = (same * rewards[None, :]).sum(axis=1)
+        return s / jnp.maximum(cnt, 1.0)
+
+    return jax.vmap(per_depth, in_axes=1, out_axes=1)(anc)
+
+
+def _subgroup_stds(rewards: jnp.ndarray, anc: jnp.ndarray) -> jnp.ndarray:
+    """Per-(trajectory, depth) std of rewards within the subgroup."""
+    def per_depth(ids):
+        same = ids[:, None] == ids[None, :]
+        cnt = jnp.maximum(same.sum(axis=1).astype(jnp.float32), 1.0)
+        mean = (same * rewards[None, :]).sum(axis=1) / cnt
+        var = (same * (rewards[None, :] - mean[:, None]) ** 2).sum(axis=1) / cnt
+        return jnp.sqrt(var)
+
+    return jax.vmap(per_depth, in_axes=1, out_axes=1)(anc)
+
+
+def subgroup_sizes(anc: jnp.ndarray) -> jnp.ndarray:
+    """|G_j| for each (trajectory, depth): (G, J) float."""
+    def per_depth(ids):
+        return (ids[:, None] == ids[None, :]).sum(axis=1).astype(jnp.float32)
+
+    return jax.vmap(per_depth, in_axes=1, out_axes=1)(anc)
+
+
+def treepo_advantage(
+    rewards: jnp.ndarray,
+    anc: jnp.ndarray,
+    *,
+    variant: str = "treepo",
+    eps: float = 1e-6,
+) -> jnp.ndarray:
+    """Tree-based advantage for one query group.
+
+    rewards: (G,) terminal rewards; anc: (G, J) ancestor ids.
+    Returns (G,) advantages.  Eq. 5 (variant="treepo"):
+        Â_i = (1/J) Σ_j Â_{i,j} / std_j({Â_{i,j}})
+    with Â_{i,j} = R_i − mean(R over G_j).
+    """
+    G, J = anc.shape
+    means = _subgroup_means(rewards, anc)        # (G, J)
+    adv_j = rewards[:, None] - means             # (G, J) = Â_{i,·,j}
+
+    if variant == "treepo_no_root":
+        adv_j = adv_j[:, 1:]
+        weights = jnp.ones_like(adv_j)
+    elif variant == "treepo_size_weighted":
+        weights = subgroup_sizes(anc)            # Eq. 6: |G_j| weights
+    elif variant == "treepo_subgroup_reject":
+        stds = _subgroup_stds(rewards, anc)      # Eq. 7: drop degenerate G_j
+        weights = (stds > eps).astype(jnp.float32)
+    elif variant == "treepo":
+        weights = jnp.ones_like(adv_j)           # Eq. 5: plain averaging
+    else:
+        raise ValueError(f"unknown variant {variant!r}")
+
+    wsum = jnp.maximum(weights.sum(axis=1), eps)
+    agg = (weights * adv_j).sum(axis=1) / wsum
+    # normalize by std over the per-depth advantages of this trajectory
+    # (the paper's std({Â_{i,t,j}}^{J-1}) denominator term)
+    per_traj_std = adv_j.std(axis=1)
+    return agg / (per_traj_std + eps)
+
+
+def global_normalize(adv: jnp.ndarray, mask: jnp.ndarray,
+                     eps: float = 1e-6) -> jnp.ndarray:
+    """REINFORCE++ global variance normalization over the whole batch.
+
+    adv: any shape; mask: same shape (1 = valid token).  Normalizes by
+    masked batch std (mean is *not* re-subtracted: subgroup baselines
+    already centered the estimate).
+    """
+    denom = jnp.maximum(mask.sum(), 1.0)
+    mean = (adv * mask).sum() / denom
+    var = (((adv - mean) ** 2) * mask).sum() / denom
+    return adv * jax.lax.rsqrt(var + eps)
+
+
+def query_keep_mask(rewards: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    """DAPO dynamic-sampling constraint (Eq. 1 s.t. / Eq. 5 s.t.):
+    keep a query only if its group rewards are not all-equal.
+
+    rewards: (Q, G) -> (Q,) bool.
+    """
+    return rewards.std(axis=1) > eps
+
+
+def batch_treepo_advantage(rewards: jnp.ndarray, anc: jnp.ndarray,
+                           *, variant: str = "treepo",
+                           use_global_norm: bool = True,
+                           eps: float = 1e-6) -> jnp.ndarray:
+    """Vectorized over queries: rewards (Q, G), anc (Q, G, J) -> (Q, G)."""
+    if variant == "grpo":
+        adv = jax.vmap(lambda r: grpo_advantage(r, eps))(rewards)
+    else:
+        adv = jax.vmap(
+            lambda r, a: treepo_advantage(r, a, variant=variant, eps=eps)
+        )(rewards, anc)
+    if use_global_norm and variant != "grpo":
+        adv = global_normalize(adv, jnp.ones_like(adv), eps)
+    return adv

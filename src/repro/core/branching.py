@@ -1,0 +1,102 @@
+"""Branching-budget policies (paper §2.2 Branching, §4.4 heuristics).
+
+The budget contract: at depth ``d`` the tree may hold up to
+``init_div * N^d`` concurrent paths, capped by the remaining width
+(``w - finished``).  *Budget transfer* re-assigns the allowance of early-
+stopped paths to the survivors, keeping the inference batch full.  The
+distribution of extra forks over the active paths is the heuristic knob:
+
+  uniform             — round-robin (the paper's default);
+  low_prob_encourage  — softmax(-seg_logprob / tau): uncertain paths fork
+                        more (paper finds this *harmful* — §4.4);
+  high_prob_encourage — softmax(+seg_logprob / tau): confident paths fork
+                        more (overly greedy);
+  scheduled_low_prob  — low-prob encourage with tau annealed across
+                        training (5.0 -> 1.0 in the paper's ablation).
+
+Every active path always keeps >= 1 continuation (the paper's guarantee).
+"""
+from __future__ import annotations
+
+import math
+import random
+from typing import List, Sequence
+
+from repro.configs.base import TreeConfig
+
+
+def init_divergence(tree_cfg: TreeConfig, rng: random.Random) -> int:
+    """Number of root forks: fixed, or uniform in [low, high] ("More Init
+    Divergence")."""
+    lo, hi = tree_cfg.init_divergence_low, tree_cfg.init_divergence_high
+    if hi <= lo:
+        return max(1, lo)
+    return rng.randint(lo, hi)
+
+
+def depth_budget(tree_cfg: TreeConfig, depth: int, init_div: int,
+                 num_finished: int) -> int:
+    """Max concurrent paths allowed at this depth (budget transfer makes it
+    a *total* across live paths, not per-path)."""
+    raw = init_div * (tree_cfg.branch_factor ** depth)
+    cap = max(tree_cfg.max_width - num_finished, 0)
+    return max(min(raw, cap), 0)
+
+
+def softmax_weights(seg_logprobs: Sequence[float], tau: float,
+                    sign: float) -> List[float]:
+    z = [sign * lp / max(tau, 1e-6) for lp in seg_logprobs]
+    m = max(z)
+    e = [math.exp(v - m) for v in z]
+    s = sum(e)
+    return [v / s for v in e]
+
+
+def heuristic_tau(tree_cfg: TreeConfig, progress: float) -> float:
+    """progress in [0, 1] over training; schedules tau for the scheduled
+    variant, constant otherwise."""
+    if tree_cfg.branch_heuristic == "scheduled_low_prob":
+        start, end = 5.0, 1.0
+        return start + (end - start) * min(max(progress, 0.0), 1.0)
+    return tree_cfg.heuristic_temp
+
+
+def assign_branches(tree_cfg: TreeConfig, seg_logprobs: Sequence[float],
+                    total_budget: int, rng: random.Random,
+                    progress: float = 0.0) -> List[int]:
+    """Split ``total_budget`` continuations over the active paths.
+
+    seg_logprobs: mean logprob of each active path's last segment (the free
+    heuristic signal returned by the engine).  Returns forks-per-path
+    (each >= 1 while budget permits).
+    """
+    n = len(seg_logprobs)
+    if n == 0:
+        return []
+    total = max(total_budget, 0)
+    if total <= n:
+        # not enough budget to even continue everything: keep the first
+        # `total` paths (caller decides survivor order; uniform = as-is)
+        return [1 if i < total else 0 for i in range(n)]
+    extra = total - n
+    kind = tree_cfg.branch_heuristic
+    if kind == "uniform":
+        forks = [1] * n
+        order = list(range(n))
+        rng.shuffle(order)
+        for i in range(extra):
+            forks[order[i % n]] += 1
+        return forks
+    tau = heuristic_tau(tree_cfg, progress)
+    sign = +1.0 if kind == "high_prob" or kind == "high_prob_encourage" \
+        else -1.0
+    w = softmax_weights(seg_logprobs, tau, sign)
+    # largest-remainder apportionment of the extra budget
+    quotas = [wi * extra for wi in w]
+    forks = [1 + int(q) for q in quotas]
+    rem = extra - sum(int(q) for q in quotas)
+    order = sorted(range(n), key=lambda i: quotas[i] - int(quotas[i]),
+                   reverse=True)
+    for i in range(rem):
+        forks[order[i % n]] += 1
+    return forks

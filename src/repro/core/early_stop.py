@@ -1,0 +1,63 @@
+"""Early-stop criteria for search paths (paper §2.2 "Heuristic Sampling").
+
+A freshly generated segment stops its path as:
+  LEAF   — contains [EOS] or a legal ``\\boxed{}`` answer (footnote 1), or the
+           path hit the depth budget (complete-but-unanswered trajectory);
+  FAILED — contains a repetitive substring pattern ("mumbling" of weakly
+           aligned base models): some n-gram tail repeated >= `count` times
+           consecutively.  Pruned; budget transfers to surviving paths.
+"""
+from __future__ import annotations
+
+from typing import List, Optional, Sequence, Tuple
+
+from repro.data.reward import extract_boxed
+from repro.data.tokenizer import ByteTokenizer
+
+_TOK = ByteTokenizer()
+
+
+def has_repetition(tokens: Sequence[int], max_ngram: int = 16,
+                   count: int = 4) -> bool:
+    """True if the tail of ``tokens`` is some n-gram (1 <= n <= max_ngram)
+    repeated >= ``count`` times consecutively."""
+    toks = list(tokens)
+    L = len(toks)
+    for n in range(1, max_ngram + 1):
+        if n * count > L:
+            break
+        tail = toks[L - n:]
+        reps = 1
+        while reps < count and toks[L - (reps + 1) * n: L - reps * n] == tail:
+            reps += 1
+        if reps >= count:
+            return True
+    return False
+
+
+def segment_stop_reason(segment_tokens: Sequence[int],
+                        full_tokens: Sequence[int],
+                        *, eos_id: int = ByteTokenizer.EOS,
+                        max_ngram: int = 16, count: int = 4
+                        ) -> Optional[str]:
+    """Returns None (continue), or 'eos' | 'boxed' | 'repetition'."""
+    if eos_id in segment_tokens:
+        return "eos"
+    # answer detection on the decoded *full* suffix (a box may straddle a
+    # segment boundary)
+    text = _TOK.decode(full_tokens)
+    if extract_boxed(text) is not None:
+        return "boxed"
+    if has_repetition(segment_tokens, max_ngram, count):
+        return "repetition"
+    return None
+
+
+def truncate_at_eos(tokens: List[int], logprobs: List[float],
+                    eos_id: int = ByteTokenizer.EOS
+                    ) -> Tuple[List[int], List[float]]:
+    """Keep tokens up to and including the first EOS."""
+    if eos_id in tokens:
+        idx = tokens.index(eos_id) + 1
+        return tokens[:idx], logprobs[:idx]
+    return tokens, logprobs

@@ -1,0 +1,779 @@
+"""Segment-synchronous tree-decoding engine (the paper's inference engine,
+TPU-native).
+
+vLLM's continuous batching schedules per token; XLA wants fixed shapes, so
+TreePO's own *fixed-length segment* abstraction becomes the scheduling
+quantum (DESIGN.md §2): the host re-batches paths only at segment
+boundaries, and one jitted ``segment_decode`` call generates ``l`` tokens
+for a power-of-two bucket of active paths against the shared paged KV pool.
+
+Branch = block-table copy (+ copy-on-write of at most one partial page);
+KV data of shared prefixes is stored once (the paper's KV amortization).
+Recurrent state (Mamba conv/ssm, RWKV wkv/shift) is slot-indexed and copied
+on fork — it is a running reduction, not a prefix.
+
+Device functions are cached per static shape bucket:
+  prefill  (Q, Sp)      — flash-attention forward, paged KV write-out,
+                          returns last-position logits.
+  decode   (R, l)       — lax.scan over l tokens; paged attention per attn
+                          layer; on-device temperature/top-p sampling.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig, TreeConfig
+from repro.kernels import ops as kops
+from repro.kv.cache import PagedKVState
+from repro.models import attention as attn
+from repro.models import moe as moe_mod
+from repro.models import ssm
+from repro.models.layers import (
+    embed,
+    mlp,
+    rmsnorm,
+    sinusoidal_positions,
+    unembed,
+)
+
+
+# ---------------------------------------------------------------------------
+# path handle
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class EnginePath:
+    """Device-side identity of one search path."""
+
+    table: List[int]                  # page ids (prefix-shared, refcounted)
+    slot: int                         # recurrent-state slot (-1 if none)
+    qslot: int                        # cross-KV slot (-1 if none)
+    position: int                     # tokens whose KV is materialized
+    pending_token: int                # sampled, not yet fed
+    pending_logprob: float
+    last_logits: Optional[np.ndarray]  # (V,) f32 — fork divergence source
+    released: bool = False
+
+
+@dataclasses.dataclass
+class SegmentResult:
+    tokens: List[int]
+    logprobs: List[float]
+    seg_logprob: float                # mean logprob (heuristic signal)
+
+
+@dataclasses.dataclass
+class EngineStats:
+    prefill_tokens: int = 0           # model-processed prompt tokens
+    decode_tokens: int = 0            # model-processed generated tokens
+    segments: int = 0
+    forks: int = 0
+    cow_pages: int = 0
+    replay_tokens: int = 0            # fallback re-prefill cost
+    peak_pages: int = 0
+
+    @property
+    def model_tokens(self) -> int:
+        return self.prefill_tokens + self.decode_tokens + self.replay_tokens
+
+
+# ---------------------------------------------------------------------------
+# sampling
+# ---------------------------------------------------------------------------
+
+def _top_p_mask(logits: jnp.ndarray, top_p: float) -> jnp.ndarray:
+    """Mask logits outside the top-p nucleus. logits: (..., V)."""
+    sort_idx = jnp.argsort(-logits, axis=-1)
+    sorted_logits = jnp.take_along_axis(logits, sort_idx, axis=-1)
+    probs = jax.nn.softmax(sorted_logits, axis=-1)
+    cum = jnp.cumsum(probs, axis=-1)
+    keep_sorted = (cum - probs) < top_p       # always keeps the argmax
+    inv = jnp.argsort(sort_idx, axis=-1)
+    keep = jnp.take_along_axis(keep_sorted, inv, axis=-1)
+    return jnp.where(keep, logits, -1e30)
+
+
+def sample_tokens(key, logits, temperature: float, top_p: float
+                  ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """logits: (R, V) -> (tokens (R,), logprobs (R,)) under the sampling
+    distribution (temperature-scaled, pre-top-p renormalized)."""
+    lg = logits.astype(jnp.float32) / max(temperature, 1e-6)
+    lg_samp = _top_p_mask(lg, top_p) if top_p < 1.0 else lg
+    tok = jax.random.categorical(key, lg_samp, axis=-1)
+    logp = jax.nn.log_softmax(lg, axis=-1)
+    lp = jnp.take_along_axis(logp, tok[:, None], axis=-1)[:, 0]
+    return tok.astype(jnp.int32), lp
+
+
+def sample_token_host(rng: np.random.Generator, logits: np.ndarray,
+                      temperature: float, top_p: float
+                      ) -> Tuple[int, float]:
+    """Host-side mirror of ``sample_tokens`` for fork divergence."""
+    lg = logits.astype(np.float64) / max(temperature, 1e-6)
+    lg = lg - lg.max()
+    if top_p < 1.0:
+        order = np.argsort(-lg)
+        p = np.exp(lg[order])
+        p /= p.sum()
+        cum = np.cumsum(p)
+        cut = np.searchsorted(cum, top_p) + 1
+        mask = np.full_like(lg, -np.inf)
+        mask[order[:cut]] = lg[order[:cut]]
+        lg_samp = mask
+    else:
+        lg_samp = lg
+    p = np.exp(lg_samp - lg_samp.max())
+    p /= p.sum()
+    tok = int(rng.choice(len(p), p=p))
+    logp_all = lg - np.log(np.exp(lg).sum())
+    return tok, float(logp_all[tok])
+
+
+def _bucket(n: int, minimum: int = 1) -> int:
+    return max(minimum, 1 << (max(n, 1) - 1).bit_length())
+
+
+# ---------------------------------------------------------------------------
+# engine
+# ---------------------------------------------------------------------------
+
+class TreeEngine:
+    """Paged tree-decoding engine for one model replica."""
+
+    def __init__(self, params, cfg: ModelConfig, tree_cfg: TreeConfig, *,
+                 num_pages: int = 4096, page_size: Optional[int] = None,
+                 max_slots: int = 256, max_queries: int = 64,
+                 max_prompt_len: int = 512, enc_len: int = 64,
+                 dtype=jnp.float32, seed: int = 0):
+        self.params = params
+        self.cfg = cfg
+        self.tree_cfg = tree_cfg
+        self.page_size = page_size or min(64, tree_cfg.segment_len)
+        self.max_prompt_len = max_prompt_len
+        self.dtype = dtype
+        max_len = max_prompt_len + tree_cfg.max_response_len + enc_len
+        self.MP = -(-max_len // self.page_size) + 1
+        self.kv = PagedKVState(cfg, num_pages, self.page_size, max_slots,
+                               dtype)
+        # page 0 = garbage sink for padded-position writes; slot 0 = scratch
+        self.garbage_page = self.kv.pool.alloc()
+        assert self.garbage_page == 0
+        self.scratch_slot = self.kv.slots.alloc() if self.kv.rec_state else -1
+        self.has_rec = bool(self.kv.rec_state)
+        self.has_cross = cfg.encoder is not None
+        self.enc_len = enc_len
+        self.cross_pool: Dict[int, Dict[str, jnp.ndarray]] = {}
+        self.qslot_alloc: List[int] = list(range(max_queries - 1, -1, -1))
+        if self.has_cross:
+            hd = cfg.resolved_head_dim
+            for i in range(cfg.num_layers):
+                self.cross_pool[i] = {
+                    "k": jnp.zeros((max_queries, enc_len, cfg.num_kv_heads,
+                                    hd), dtype),
+                    "v": jnp.zeros((max_queries, enc_len, cfg.num_kv_heads,
+                                    hd), dtype),
+                }
+        self.n_prefix = (cfg.frontend.num_prefix_tokens
+                         if cfg.frontend is not None
+                         and cfg.frontend.kind == "vision" else 0)
+        self._decode_fns: Dict[Tuple[int, int], Any] = {}
+        self._prefill_fns: Dict[Tuple[int, int], Any] = {}
+        self._rng = np.random.default_rng(seed)
+        self._key = jax.random.PRNGKey(seed)
+        self.stats = EngineStats()
+
+    # -- misc -----------------------------------------------------------------
+
+    def _next_key(self):
+        self._key, sub = jax.random.split(self._key)
+        return sub
+
+    def _window(self, layer_idx: int) -> int:
+        if (self.cfg.sliding_window > 0
+                and not self.cfg.is_global_attn_layer(layer_idx)):
+            return self.cfg.sliding_window
+        return 0
+
+    def _track_pages(self):
+        self.stats.peak_pages = max(self.stats.peak_pages,
+                                    self.kv.pool.pages_in_use)
+
+    # -- page / slot lifecycle --------------------------------------------------
+
+    def _ensure_capacity(self, path: EnginePath, new_len: int) -> None:
+        needed = -(-new_len // self.page_size)
+        while len(path.table) < needed:
+            path.table.append(self.kv.pool.alloc())
+        self._track_pages()
+
+    def _cow_page(self, path: EnginePath, page_idx: int) -> None:
+        """Give ``path`` a private copy of table[page_idx]."""
+        src = path.table[page_idx]
+        if self.kv.pool.refcount[src] == 1:
+            return  # already private
+        dst = self.kv.pool.alloc()
+        for i, pools in self.kv.kv_pools.items():
+            self.kv.kv_pools[i] = {
+                k: v.at[dst].set(v[src]) for k, v in pools.items()
+            }
+        self.kv.pool.release(src)
+        path.table[page_idx] = dst
+        self.stats.cow_pages += 1
+        self._track_pages()
+
+    def release_path(self, path: EnginePath) -> None:
+        if path.released:
+            return
+        self.kv.release_table(path.table)
+        path.table = []
+        if path.slot >= 0:
+            self.kv.slots.release(path.slot)
+            path.slot = -1
+        path.released = True
+
+    def release_qslot(self, qslot: int) -> None:
+        if qslot >= 0:
+            self.qslot_alloc.append(qslot)
+
+    # -- prefill ------------------------------------------------------------------
+
+    def prefill_queries(self, prompts: List[List[int]],
+                        prefix_embeds: Optional[np.ndarray] = None,
+                        enc_frames: Optional[np.ndarray] = None
+                        ) -> List[EnginePath]:
+        """Prefill each query once (the tree root's shared KV).
+
+        prompts: per-query token lists.  prefix_embeds: (Q, P, d) VLM stub;
+        enc_frames: (Q, S_enc, d_enc) audio stub.  Returns one root
+        EnginePath per query with ``pending_token`` already sampled.
+        """
+        Q = len(prompts)
+        n_pre = self.n_prefix
+        max_sp = max(len(p) for p in prompts)
+        Sp = _bucket(max_sp, 8)
+        Qb = _bucket(Q)
+        tokens = np.zeros((Qb, Sp), np.int32)
+        lengths = np.zeros((Qb,), np.int32)
+        for i, p in enumerate(prompts):
+            tokens[i, : len(p)] = p
+            lengths[i] = len(p) + n_pre
+        lengths[Q:] = 1  # dummies
+
+        paths: List[EnginePath] = []
+        tables = np.zeros((Qb, self.MP), np.int32)
+        slots = np.zeros((Qb,), np.int32)
+        qslots = np.zeros((Qb,), np.int32)
+        for i in range(Qb):
+            if i < Q:
+                pth = EnginePath(table=[], slot=-1, qslot=-1,
+                                 position=int(lengths[i]),
+                                 pending_token=0, pending_logprob=0.0,
+                                 last_logits=None)
+                self._ensure_capacity(pth, int(lengths[i]))
+                if self.has_rec:
+                    pth.slot = self.kv.slots.alloc()
+                if self.has_cross or n_pre:
+                    pth.qslot = self.qslot_alloc.pop() \
+                        if self.has_cross else -1
+                paths.append(pth)
+                row = pth.table + [-1] * (self.MP - len(pth.table))
+                tables[i] = row
+                slots[i] = pth.slot if pth.slot >= 0 else self.scratch_slot
+                qslots[i] = max(pth.qslot, 0)
+            else:
+                tables[i, 0] = self.garbage_page
+                tables[i, 1:] = -1
+                slots[i] = max(self.scratch_slot, 0)
+
+        if prefix_embeds is not None:
+            pe = np.zeros((Qb,) + prefix_embeds.shape[1:],
+                          prefix_embeds.dtype)
+            pe[:Q] = prefix_embeds
+            prefix_embeds = jnp.asarray(pe)
+        if enc_frames is not None:
+            ef = np.zeros((Qb,) + enc_frames.shape[1:], enc_frames.dtype)
+            ef[:Q] = enc_frames
+            enc_frames = jnp.asarray(ef)
+
+        fn = self._get_prefill_fn(Qb, Sp, prefix_embeds is not None,
+                                  enc_frames is not None)
+        pools, rec, cross, logits = fn(
+            self.params, self.kv.kv_pools, self.kv.rec_state,
+            self.cross_pool, jnp.asarray(tokens), jnp.asarray(lengths),
+            jnp.asarray(tables), jnp.asarray(slots), jnp.asarray(qslots),
+            prefix_embeds, enc_frames)
+        self.kv.kv_pools = pools
+        self.kv.rec_state = rec
+        self.cross_pool = cross
+        logits_np = np.asarray(logits)
+        for i, pth in enumerate(paths):
+            pth.last_logits = logits_np[i]
+            tok, lp = sample_token_host(self._rng, pth.last_logits,
+                                        self.tree_cfg.temperature,
+                                        self.tree_cfg.top_p)
+            pth.pending_token, pth.pending_logprob = tok, lp
+        self.stats.prefill_tokens += sum(len(p) + n_pre for p in prompts)
+        return paths
+
+    # -- fork ----------------------------------------------------------------------
+
+    def fork_path(self, parent: EnginePath, *, resample: bool = True
+                  ) -> EnginePath:
+        """Branch at the current segment boundary: share every full page,
+        COW the partial tail page (if any), copy recurrent state, and sample
+        a fresh pending token so the child diverges immediately."""
+        child = EnginePath(
+            table=self.kv.fork_table(parent.table),
+            slot=-1, qslot=parent.qslot, position=parent.position,
+            pending_token=parent.pending_token,
+            pending_logprob=parent.pending_logprob,
+            last_logits=parent.last_logits)
+        if parent.position % self.page_size != 0:
+            self._cow_page(child, parent.position // self.page_size)
+        if parent.slot >= 0:
+            child.slot = self.kv.slots.alloc()
+            self.kv.copy_slots([parent.slot], [child.slot])
+        if resample and parent.last_logits is not None:
+            tok, lp = sample_token_host(self._rng, parent.last_logits,
+                                        self.tree_cfg.temperature,
+                                        self.tree_cfg.top_p)
+            child.pending_token, child.pending_logprob = tok, lp
+        self.stats.forks += 1
+        self._track_pages()
+        return child
+
+    def fork_from_prefix(self, src: EnginePath, prefix_position: int,
+                         replay_tokens: Optional[List[int]] = None
+                         ) -> EnginePath:
+        """Fallback fork: a new path whose context is the first
+        ``prefix_position`` tokens of ``src``.
+
+        Attention-only archs: share the prefix pages and run one re-feed
+        decode step to recover boundary logits.  Recurrent archs: replay
+        the prefix through prefill into COW'd pages (state cannot be
+        recovered from the KV pool) — ``replay_tokens`` must then hold the
+        full token sequence (prompt + generated prefix).
+        """
+        n_pages = -(-prefix_position // self.page_size)
+        child = EnginePath(
+            table=self.kv.fork_table(src.table[:n_pages]),
+            slot=-1, qslot=src.qslot, position=prefix_position,
+            pending_token=0, pending_logprob=0.0, last_logits=None)
+        if self.has_rec:
+            assert replay_tokens is not None and \
+                len(replay_tokens) >= prefix_position - self.n_prefix
+            child.slot = self.kv.slots.alloc()
+            # replay rewrites every prefix page -> COW them all
+            for idx in range(len(child.table)):
+                self._cow_page(child, idx)
+            self._replay_prefix(child, replay_tokens[: prefix_position
+                                                     - self.n_prefix])
+        else:
+            if prefix_position % self.page_size != 0:
+                self._cow_page(child, prefix_position // self.page_size)
+            self._refeed(child, replay_tokens[prefix_position
+                                              - self.n_prefix - 1])
+        tok, lp = sample_token_host(self._rng, child.last_logits,
+                                    self.tree_cfg.temperature,
+                                    self.tree_cfg.top_p)
+        child.pending_token, child.pending_logprob = tok, lp
+        self.stats.forks += 1
+        return child
+
+    def _replay_prefix(self, child: EnginePath, tokens: List[int]) -> None:
+        """Recurrent-arch fallback: prefill the prefix into the child's
+        (COW'd) pages + slot; leaves boundary logits on the child."""
+        Sp = _bucket(len(tokens), 8)
+        toks = np.zeros((1, Sp), np.int32)
+        toks[0, : len(tokens)] = tokens
+        lengths = np.asarray([len(tokens) + self.n_prefix], np.int32)
+        tables = np.full((1, self.MP), -1, np.int32)
+        tables[0, : len(child.table)] = child.table
+        slots = np.asarray([child.slot if child.slot >= 0
+                            else self.scratch_slot], np.int32)
+        qslots = np.asarray([max(child.qslot, 0)], np.int32)
+        fn = self._get_prefill_fn(1, Sp, False, False)
+        pools, rec, cross, logits = fn(
+            self.params, self.kv.kv_pools, self.kv.rec_state,
+            self.cross_pool, jnp.asarray(toks), jnp.asarray(lengths),
+            jnp.asarray(tables), jnp.asarray(slots), jnp.asarray(qslots),
+            None, None)
+        self.kv.kv_pools, self.kv.rec_state = pools, rec
+        child.last_logits = np.asarray(logits)[0]
+        self.stats.replay_tokens += len(tokens)
+
+    def _refeed(self, child: EnginePath, last_token: int) -> None:
+        """Attention-arch fallback: one decode step re-feeding the final
+        prefix token (identical KV values — benign write) to recover the
+        boundary logits."""
+        child.position -= 1
+        child.pending_token = int(last_token)
+        child.pending_logprob = 0.0
+        # decode_segments(seg_len=1) rewrites the (identical) KV of the
+        # re-fed token and leaves the boundary logits on the child.
+        self.decode_segments([child], seg_len=1)
+        self.stats.replay_tokens += 1
+
+    # -- segment decode ----------------------------------------------------------
+
+    def decode_segments(self, paths: List[EnginePath],
+                        seg_len: Optional[int] = None
+                        ) -> List[SegmentResult]:
+        """Generate one ``l``-token segment for every path (batched)."""
+        l = seg_len or self.tree_cfg.segment_len
+        R = len(paths)
+        if R == 0:
+            return []
+        Rb = _bucket(R)
+        tok0 = np.zeros((Rb,), np.int32)
+        lp0 = np.zeros((Rb,), np.float32)
+        pos0 = np.zeros((Rb,), np.int32)
+        tables = np.full((Rb, self.MP), -1, np.int32)
+        slots = np.full((Rb,), max(self.scratch_slot, 0), np.int32)
+        qslots = np.zeros((Rb,), np.int32)
+        for i, p in enumerate(paths):
+            self._ensure_capacity(p, p.position + l)
+            tok0[i] = p.pending_token
+            lp0[i] = p.pending_logprob
+            pos0[i] = p.position
+            tables[i, : len(p.table)] = p.table
+            if p.slot >= 0:
+                slots[i] = p.slot
+            qslots[i] = max(p.qslot, 0)
+        tables[R:, 0] = self.garbage_page
+
+        fn = self._get_decode_fn(Rb, l)
+        pools, rec, toks, lps, pend_tok, pend_lp, last_logits = fn(
+            self.params, self.kv.kv_pools, self.kv.rec_state,
+            self.cross_pool, jnp.asarray(tok0), jnp.asarray(lp0),
+            jnp.asarray(pos0), jnp.asarray(tables), jnp.asarray(slots),
+            jnp.asarray(qslots), self._next_key())
+        self.kv.kv_pools = pools
+        self.kv.rec_state = rec
+        toks = np.asarray(toks)           # (Rb, l)
+        lps = np.asarray(lps)
+        pend_tok = np.asarray(pend_tok)
+        pend_lp = np.asarray(pend_lp)
+        last_logits = np.asarray(last_logits)
+
+        results = []
+        for i, p in enumerate(paths):
+            p.position += l
+            p.pending_token = int(pend_tok[i])
+            p.pending_logprob = float(pend_lp[i])
+            p.last_logits = last_logits[i]
+            seg_t = [int(t) for t in toks[i]]
+            seg_l = [float(v) for v in lps[i]]
+            results.append(SegmentResult(
+                tokens=seg_t, logprobs=seg_l,
+                seg_logprob=float(np.mean(seg_l))))
+        self.stats.decode_tokens += R * l
+        self.stats.segments += R
+        return results
+
+    # -- cross-kv (whisper) -------------------------------------------------------
+
+    # handled inside prefill via enc_frames; decode gathers by qslot.
+
+    # =================== jitted device functions =================================
+
+    def _get_prefill_fn(self, Q: int, Sp: int, has_prefix: bool,
+                        has_frames: bool):
+        key = (Q, Sp, has_prefix, has_frames)
+        if key not in self._prefill_fns:
+            self._prefill_fns[key] = self._build_prefill(Q, Sp)
+        return self._prefill_fns[key]
+
+    def _build_prefill(self, Q: int, Sp: int):
+        cfg = self.cfg
+        page = self.page_size
+        n_pre = self.n_prefix
+        pool_dtype = self.dtype
+        window_of = self._window
+
+        def prefill_fn(params, pools, rec, cross, tokens, lengths, tables,
+                       slots, qslots, prefix_embeds, enc_frames):
+            B = tokens.shape[0]
+            x = embed(params["embed"], tokens)            # (Q,Sp,d)
+            if prefix_embeds is not None and cfg.encoder is None:
+                x = jnp.concatenate(
+                    [prefix_embeds.astype(x.dtype), x], axis=1)
+            S = x.shape[1]
+            positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+            mask = positions < lengths[:, None]            # (Q,S)
+            pos_flat = jnp.arange(S)
+            page_idx = pos_flat // page                    # (S,)
+            offs = jnp.broadcast_to(pos_flat % page, (B, S))
+            pids = jnp.where(mask, jnp.maximum(
+                jnp.take_along_axis(
+                    tables, jnp.broadcast_to(page_idx, (B, S)), axis=1), 0),
+                0)
+
+            enc_out = None
+            if cfg.encoder is not None:
+                from repro.models.model import encode
+                enc_out = encode(params, cfg, enc_frames)
+                x = x + sinusoidal_positions(S, cfg.d_model).astype(
+                    x.dtype)[None]
+
+            new_rec = dict(rec)
+            new_pools = dict(pools)
+            new_cross = dict(cross)
+            last = lengths - 1
+            for i, lp in enumerate(params["layers"]):
+                kind = cfg.layer_kind(i)
+                h = rmsnorm(lp["norm1"], x, cfg.norm_eps)
+                if kind == "attn":
+                    if cfg.attention_kind == "mla":
+                        y, (ckv, k_rope) = attn.mla_forward(
+                            lp["attn"], cfg, h, positions, i, return_kv=True)
+                        new_pools[i] = {
+                            "ckv": new_pools[i]["ckv"].at[pids, offs].set(
+                                ckv.astype(pool_dtype)),
+                            "k_rope": new_pools[i]["k_rope"]
+                            .at[pids, offs].set(k_rope.astype(pool_dtype)),
+                        }
+                    else:
+                        y, (k, v) = attn.gqa_forward(
+                            lp["attn"], cfg, h, positions, i, return_kv=True)
+                        new_pools[i] = {
+                            "k": new_pools[i]["k"].at[pids, offs].set(
+                                k.astype(pool_dtype)),
+                            "v": new_pools[i]["v"].at[pids, offs].set(
+                                v.astype(pool_dtype)),
+                        }
+                elif kind == "mamba":
+                    y, st = ssm.mamba_forward(lp["mamba"], cfg, h,
+                                              mask=mask, last_idx=last)
+                    new_rec[i] = {
+                        "conv": new_rec[i]["conv"].at[slots].set(
+                            st["conv"].astype(pool_dtype)),
+                        "ssm": new_rec[i]["ssm"].at[slots].set(st["ssm"]),
+                    }
+                elif kind == "rwkv":
+                    zero = {
+                        "wkv": jnp.zeros(
+                            (B, cfg.d_model // cfg.rwkv.head_dim,
+                             cfg.rwkv.head_dim, cfg.rwkv.head_dim),
+                            jnp.float32),
+                        "shift": jnp.zeros((B, cfg.d_model), x.dtype),
+                    }
+                    y, st = ssm.rwkv6_time_mix(lp["rwkv"], cfg, h, zero,
+                                               mask=mask, last_idx=last)
+                    new_rec[i] = dict(
+                        new_rec[i],
+                        wkv=new_rec[i]["wkv"].at[slots].set(st["wkv"]),
+                        shift=new_rec[i]["shift"].at[slots].set(
+                            st["shift"].astype(pool_dtype)))
+                x = x + y
+                if cfg.encoder is not None:
+                    hc = rmsnorm(lp["norm_cross"], x, cfg.norm_eps)
+                    k_c, v_c = attn.cross_attn_kv(lp["cross"], cfg, enc_out)
+                    x = x + attn.cross_attn_forward(lp["cross"], cfg, hc,
+                                                    k_c, v_c)
+                    new_cross[i] = {
+                        "k": new_cross[i]["k"].at[qslots].set(
+                            k_c.astype(pool_dtype)),
+                        "v": new_cross[i]["v"].at[qslots].set(
+                            v_c.astype(pool_dtype)),
+                    }
+                h = rmsnorm(lp["norm2"], x, cfg.norm_eps)
+                if kind == "rwkv":
+                    y, sh = ssm.rwkv6_channel_mix(
+                        lp["ffn"], h, jnp.zeros((B, cfg.d_model), h.dtype),
+                        last_idx=last)
+                    new_rec[i] = dict(
+                        new_rec[i],
+                        shift_ffn=new_rec[i]["shift_ffn"].at[slots].set(
+                            sh.astype(pool_dtype)))
+                elif "ffn_moe" in lp:
+                    y, _ = moe_mod.moe_forward(lp["ffn_moe"], cfg, h,
+                                               cfg.act)
+                else:
+                    y = mlp(lp["ffn"], h, cfg.act)
+                x = x + y
+            x = rmsnorm(params["norm_f"], x, cfg.norm_eps)
+            x_last = x[jnp.arange(B), last]
+            logits = unembed(params["embed"], x_last, cfg.tie_embeddings)
+            return new_pools, new_rec, new_cross, logits
+
+        return jax.jit(prefill_fn)
+
+    def _get_decode_fn(self, R: int, l: int):
+        key = (R, l)
+        if key not in self._decode_fns:
+            self._decode_fns[key] = self._build_decode(R, l)
+        return self._decode_fns[key]
+
+    def _build_decode(self, R: int, l: int):
+        cfg = self.cfg
+        page = self.page_size
+        pool_dtype = self.dtype
+        tc = self.tree_cfg
+        window_of = self._window
+        has_cross = self.has_cross
+
+        def mla_paged_attn(lp_attn, q_nope, q_rope, pools_i, tables,
+                           lengths):
+            """Absorbed MLA decode over the gathered latent pages."""
+            m = cfg.mla
+            H = cfg.num_heads
+            tbl = jnp.maximum(tables, 0)
+            ckv = pools_i["ckv"][tbl]                     # (R,MP,page,r)
+            kr = pools_i["k_rope"][tbl]
+            Rr, MP, PG, r = ckv.shape
+            ckv = ckv.reshape(Rr, MP * PG, r).astype(jnp.float32)
+            kr = kr.reshape(Rr, MP * PG, -1).astype(jnp.float32)
+            w_uk = lp_attn["w_uk"].reshape(m.kv_lora_rank, H,
+                                           m.qk_nope_head_dim)
+            q_lat = jnp.einsum("bhd,rhd->bhr", q_nope.astype(jnp.float32),
+                               w_uk.astype(jnp.float32))
+            scale = 1.0 / (m.qk_head_dim ** 0.5)
+            logits = (jnp.einsum("bhr,bsr->bhs", q_lat, ckv)
+                      + jnp.einsum("bhd,bsd->bhs",
+                                   q_rope.astype(jnp.float32), kr)) * scale
+            valid = jnp.arange(MP * PG)[None, :] < lengths[:, None]
+            logits = jnp.where(valid[:, None, :], logits, -1e30)
+            p = jax.nn.softmax(logits, axis=-1)
+            o_lat = jnp.einsum("bhs,bsr->bhr", p, ckv)
+            w_uv = lp_attn["w_uv"].reshape(m.kv_lora_rank, H, m.v_head_dim)
+            o = jnp.einsum("bhr,rhd->bhd", o_lat,
+                           w_uv.astype(jnp.float32))
+            return o.reshape(Rr, -1)
+
+        def decode_fn(params, pools, rec, cross, tok0, lp0, pos0, tables,
+                      slots, qslots, key):
+            rec_g = {i: {k: v[slots] for k, v in st.items()}
+                     for i, st in rec.items()}
+            cross_g = None
+            if has_cross:
+                cross_g = {i: {k: v[qslots] for k, v in st.items()}
+                           for i, st in cross.items()}
+            ar = jnp.arange(R)
+
+            def step(carry, key_t):
+                pools, rec_g, tok, lp, pos, _ = carry
+                x = embed(params["embed"], tok)            # (R,d)
+                if cfg.encoder is not None:
+                    pe = sinusoidal_positions(
+                        cfg.max_position_embeddings, cfg.d_model)
+                    x = x + pe[pos].astype(x.dtype)
+                lengths = pos + 1
+                pids = jnp.take_along_axis(
+                    jnp.maximum(tables, 0), (pos // page)[:, None],
+                    axis=1)[:, 0]
+                offs = pos % page
+                new_rec_g = dict(rec_g)
+                new_pools = dict(pools)
+                for i, lp_ in enumerate(params["layers"]):
+                    kind = cfg.layer_kind(i)
+                    h = rmsnorm(lp_["norm1"], x, cfg.norm_eps)
+                    if kind == "attn":
+                        if cfg.attention_kind == "mla":
+                            x1 = h[:, None, :]
+                            q_nope, q_rope = attn._mla_q(
+                                lp_["attn"], cfg, x1, pos[:, None])
+                            q_nope, q_rope = q_nope[:, 0], q_rope[:, 0]
+                            ckv_t, kr_t = attn._mla_latents(
+                                lp_["attn"], cfg, x1, pos[:, None])
+                            pi = new_pools[i]
+                            pi = {
+                                "ckv": pi["ckv"].at[pids, offs].set(
+                                    ckv_t[:, 0].astype(pool_dtype)),
+                                "k_rope": pi["k_rope"].at[pids, offs].set(
+                                    kr_t[:, 0].astype(pool_dtype)),
+                            }
+                            new_pools[i] = pi
+                            o = mla_paged_attn(lp_["attn"], q_nope, q_rope,
+                                               pi, tables, lengths)
+                            y = o.astype(x.dtype) @ lp_["attn"]["w_o"]
+                        else:
+                            x1 = h[:, None, :]
+                            q, k, v = attn._gqa_qkv(lp_["attn"], cfg, x1,
+                                                    pos[:, None])
+                            q, k, v = q[:, 0], k[:, 0], v[:, 0]
+                            pi = new_pools[i]
+                            pi = {
+                                "k": pi["k"].at[pids, offs].set(
+                                    k.astype(pool_dtype)),
+                                "v": pi["v"].at[pids, offs].set(
+                                    v.astype(pool_dtype)),
+                            }
+                            new_pools[i] = pi
+                            o = kops.paged_attention(
+                                q, pi["k"], pi["v"], tables, lengths,
+                                page_size=page, window=window_of(i))
+                            y = o.reshape(R, -1) @ lp_["attn"]["w_o"]
+                    elif kind == "mamba":
+                        y1, st = ssm.mamba_forward(
+                            lp_["mamba"], cfg, h[:, None, :], new_rec_g[i])
+                        y = y1[:, 0]
+                        new_rec_g[i] = {
+                            "conv": st["conv"].astype(pool_dtype),
+                            "ssm": st["ssm"]}
+                    elif kind == "rwkv":
+                        st_in = {"wkv": new_rec_g[i]["wkv"],
+                                 "shift": new_rec_g[i]["shift"]}
+                        y1, st = ssm.rwkv6_time_mix(
+                            lp_["rwkv"], cfg, h[:, None, :], st_in)
+                        y = y1[:, 0]
+                        new_rec_g[i] = dict(
+                            new_rec_g[i], wkv=st["wkv"],
+                            shift=st["shift"].astype(pool_dtype))
+                    x = x + y
+                    if has_cross:
+                        hc = rmsnorm(lp_["norm_cross"], x, cfg.norm_eps)
+                        hd = cfg.resolved_head_dim
+                        qc = (hc @ lp_["cross"]["w_q"]).reshape(
+                            R, cfg.num_heads, hd)
+                        ck, cv = cross_g[i]["k"], cross_g[i]["v"]
+                        enc_lengths = jnp.full((R,), ck.shape[1], jnp.int32)
+                        oc = kops.decode_attention(qc, ck, cv, enc_lengths)
+                        x = x + oc.reshape(R, -1) @ lp_["cross"]["w_o"]
+                    h = rmsnorm(lp_["norm2"], x, cfg.norm_eps)
+                    if kind == "rwkv":
+                        y1, sh = ssm.rwkv6_channel_mix(
+                            lp_["ffn"], h[:, None, :],
+                            new_rec_g[i]["shift_ffn"])
+                        y = y1[:, 0]
+                        new_rec_g[i] = dict(
+                            new_rec_g[i],
+                            shift_ffn=sh.astype(pool_dtype))
+                    elif "ffn_moe" in lp_:
+                        y, _ = moe_mod.moe_forward(
+                            lp_["ffn_moe"], cfg, h[:, None, :], cfg.act)
+                        y = y[:, 0]
+                    else:
+                        y = mlp(lp_["ffn"], h, cfg.act)
+                    x = x + y
+                xf = rmsnorm(params["norm_f"], x, cfg.norm_eps)
+                logits = unembed(params["embed"], xf, cfg.tie_embeddings)
+                tnext, lpnext = sample_tokens(key_t, logits,
+                                              tc.temperature, tc.top_p)
+                new_carry = (new_pools, new_rec_g, tnext, lpnext, pos + 1,
+                             logits.astype(jnp.float32))
+                return new_carry, (tok, lp)
+
+            keys = jax.random.split(key, l)
+            V = (params["embed"]["embedding"].shape[0]
+                 if cfg.tie_embeddings else
+                 params["embed"]["lm_head"].shape[1])
+            init = (pools, rec_g, tok0, lp0, pos0,
+                    jnp.zeros((R, V), jnp.float32))
+            (pools_f, rec_gf, pend_tok, pend_lp, _, last_logits), outs = \
+                jax.lax.scan(step, init, keys)
+            toks, lps = outs                                # (l, R)
+            new_rec = {i: {k: rec[i][k].at[slots].set(rec_gf[i][k])
+                           for k in rec[i]}
+                       for i in rec}
+            return (pools_f, new_rec, toks.T, lps.T, pend_tok, pend_lp,
+                    last_logits)
+
+        return jax.jit(decode_fn)

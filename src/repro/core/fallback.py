@@ -1,0 +1,46 @@
+"""DFS fallback (paper §2.2): when a query has no active paths but fewer
+than ``w`` trajectories, stem new branches from the *finished* paths.
+
+Selection rule (paper): only stopped paths containing a formatted answer or
+ending with [EOS] are candidates; the fork point is a random segment
+boundary (token-aligned — §4.2(4) shows misaligned fallback is harmful, so
+alignment is an invariant here, not an option).
+"""
+from __future__ import annotations
+
+import random
+from typing import List, Optional, Tuple
+
+from repro.core.tree import Path, QueryTree, Status
+
+
+def pick_fallback(tree: QueryTree, rng: random.Random
+                  ) -> Optional[Tuple[Path, int]]:
+    """Returns (source leaf path, fork depth j) or None.
+
+    Fork depth j in [1, depth-1]: the new branch replays the first j
+    segments of the source and diverges from there (DFS-style: prefer
+    deeper fork points to preserve long-reasoning capability).
+    """
+    cands = tree.fallback_candidates()
+    if not cands:
+        return None
+    src = rng.choice(cands)
+    # seg_bounds includes the leading 0; forking at the final boundary would
+    # replay the whole (answered) trajectory, so j stops one short.
+    max_j = len(src.seg_bounds) - 2
+    if max_j < 1:
+        return None
+    # DFS bias: sample depth weighted toward the deep end
+    depths = list(range(1, max_j + 1))
+    weights = [j for j in depths]
+    total = sum(weights)
+    r = rng.random() * total
+    acc = 0.0
+    j = depths[-1]
+    for d_, w_ in zip(depths, weights):
+        acc += w_
+        if r <= acc:
+            j = d_
+            break
+    return src, j

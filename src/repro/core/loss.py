@@ -1,0 +1,59 @@
+"""GRPO/DAPO policy-gradient objective (paper Eq. 1).
+
+Token-level clipped importance-weighted PG with DAPO's clip-higher
+(eps_low != eps_high) and token-level (not sequence-level) normalization:
+the sum over all tokens of all trajectories is divided by the total token
+count of the batch, as in Eq. 1's 1/Σ|o_i| prefactor.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def token_logprobs_from_logits(logits: jnp.ndarray,
+                               tokens: jnp.ndarray) -> jnp.ndarray:
+    """logits: (..., S, V); tokens: (..., S) -> log pi(token) (..., S)."""
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    tok_logit = jnp.take_along_axis(logits, tokens[..., None],
+                                    axis=-1)[..., 0]
+    return tok_logit - logz
+
+
+def dapo_pg_loss(
+    logprobs_new: jnp.ndarray,
+    logprobs_old: jnp.ndarray,
+    advantages: jnp.ndarray,
+    mask: jnp.ndarray,
+    *,
+    clip_eps_low: float = 0.2,
+    clip_eps_high: float = 0.28,
+) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    """Eq. 1. All inputs (..., S) token-level; advantages broadcastable.
+
+    Returns (scalar loss, metrics).
+    """
+    ratio = jnp.exp(logprobs_new - logprobs_old)
+    clipped = jnp.clip(ratio, 1.0 - clip_eps_low, 1.0 + clip_eps_high)
+    obj = jnp.minimum(ratio * advantages, clipped * advantages)
+    denom = jnp.maximum(mask.sum(), 1.0)
+    loss = -(obj * mask).sum() / denom
+    clip_frac = ((jnp.abs(ratio - 1.0) >
+                  jnp.where(advantages > 0, clip_eps_high, clip_eps_low))
+                 * mask).sum() / denom
+    metrics = {
+        "pg_loss": loss,
+        "ratio_mean": (ratio * mask).sum() / denom,
+        "clip_frac": clip_frac,
+        "adv_mean": (advantages * mask).sum() / denom,
+    }
+    return loss, metrics
+
+
+def entropy_from_logits(logits: jnp.ndarray, mask: jnp.ndarray) -> jnp.ndarray:
+    """Mean per-token entropy (reported in the paper's 'entropy loss' plots)."""
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    ent = -(jnp.exp(logp) * logp).sum(axis=-1)
+    return (ent * mask).sum() / jnp.maximum(mask.sum(), 1.0)

@@ -1,0 +1,220 @@
+"""Tree-based sampling — Algorithm 1 of the paper, host-side orchestration.
+
+One call to :func:`sample_trees` turns a batch of queries into ``w``
+trajectories each by driving the :class:`~repro.core.engine.TreeEngine`
+through segment-synchronous rounds:
+
+  1. prefill every query once (the shared tree root),
+  2. init divergence (fixed or randomized 2..8 root forks),
+  3. loop: batched segment decode over *all* queries' active paths →
+     early-stop / leaf classification → branching-budget assignment
+     (with budget transfer + heuristics) → DFS fallback for starved
+     queries,
+  4. finish when every query has ``w`` trajectories (or budgets exhaust).
+
+Sequential (non-tree) sampling — the paper's baseline — is the same
+machinery with ``branch_factor=1`` and ``init_divergence == w``: ``w``
+independent rollouts that share only the prompt KV.
+"""
+from __future__ import annotations
+
+import dataclasses
+import random
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from repro.configs.base import TreeConfig
+from repro.core import branching as br
+from repro.core.early_stop import segment_stop_reason, truncate_at_eos
+from repro.core.engine import TreeEngine
+from repro.core.fallback import pick_fallback
+from repro.core.tree import Path, QueryTree, Status, new_node_id
+from repro.data.tokenizer import ByteTokenizer
+
+
+@dataclasses.dataclass
+class SamplerReport:
+    num_queries: int = 0
+    num_trajectories: int = 0
+    num_leaves: int = 0
+    num_failed: int = 0
+    num_fallbacks: int = 0
+    decode_rounds: int = 0
+
+
+def _finish_path(tree: QueryTree, path: Path, status: Status,
+                 reason: str, engine: TreeEngine) -> None:
+    path.status = status
+    path.finish_reason = reason
+    tree.finished.append(path)
+    if status == Status.FAILED and path.ep is not None:
+        # failed paths are never fallback sources: free their pages now
+        engine.release_path(path.ep)
+
+
+def _process_segment(tree: QueryTree, path: Path, seg_tokens: List[int],
+                     seg_logprobs: List[float], seg_logprob: float,
+                     tree_cfg: TreeConfig, engine: TreeEngine) -> None:
+    seg_tokens, seg_logprobs = truncate_at_eos(seg_tokens, seg_logprobs)
+    path.tokens.extend(seg_tokens)
+    path.logprobs.extend(seg_logprobs)
+    path.depth += 1
+    path.node_ids.append(new_node_id())
+    path.seg_bounds.append(len(path.tokens))
+    path.seg_logprob = seg_logprob
+    tree.total_segments += 1
+
+    reason = segment_stop_reason(
+        seg_tokens, path.tokens,
+        max_ngram=tree_cfg.repetition_ngram,
+        count=tree_cfg.repetition_count)
+    if reason in ("eos", "boxed"):
+        _finish_path(tree, path, Status.LEAF, reason, engine)
+    elif reason == "repetition":
+        _finish_path(tree, path, Status.FAILED, reason, engine)
+    elif path.depth >= tree_cfg.max_depth:
+        _finish_path(tree, path, Status.LEAF, "length", engine)
+    else:
+        tree.active.append(path)
+
+
+def _branch_tree(tree: QueryTree, tree_cfg: TreeConfig, engine: TreeEngine,
+                 rng: random.Random, progress: float) -> None:
+    """Apply the depth budget to this tree's active paths (paper §2.2:
+    budget transfer evens dead paths' allowance over the survivors)."""
+    if not tree.active:
+        return
+    depth = tree.active[0].depth
+    budget = br.depth_budget(tree_cfg, depth, tree.init_div,
+                             tree.num_trajectories)
+    forks = br.assign_branches(
+        tree_cfg, [p.seg_logprob for p in tree.active], budget, rng,
+        progress)
+    new_active: List[Path] = []
+    for path, k in zip(tree.active, forks):
+        if k <= 0:
+            # width budget exhausted: prune (counts as failed, no reward)
+            _finish_path(tree, path, Status.FAILED, "budget", engine)
+            continue
+        new_active.append(path)
+        for _ in range(k - 1):
+            child_ep = engine.fork_path(path.ep)
+            new_active.append(path.clone_for_branch(child_ep))
+    tree.active = new_active
+
+
+def _fallback_tree(tree: QueryTree, tree_cfg: TreeConfig,
+                   engine: TreeEngine, rng: random.Random,
+                   guard: int, n_prefix: int,
+                   report: SamplerReport) -> None:
+    """DFS fallback: refill a starved query from its finished leaves."""
+    if tree.active or not tree_cfg.fallback:
+        return
+    needed = tree_cfg.max_width - tree.num_trajectories
+    while needed > 0 and tree.total_segments < guard:
+        picked = pick_fallback(tree, rng)
+        if picked is None:
+            return
+        src, j = picked
+        prefix_count = src.seg_bounds[j]
+        prefix_position = n_prefix + len(tree.prompt_tokens) + prefix_count
+        replay = list(tree.prompt_tokens) + src.tokens[:prefix_count]
+        child_ep = engine.fork_from_prefix(src.ep, prefix_position, replay)
+        child = Path(
+            query_idx=tree.query_idx,
+            depth=j,
+            node_ids=src.node_ids[: j + 1],
+            tokens=src.tokens[:prefix_count],
+            logprobs=src.logprobs[:prefix_count],
+            ep=child_ep,
+            seg_bounds=src.seg_bounds[: j + 1],
+            seg_logprob=src.seg_logprob,
+        )
+        tree.active.append(child)
+        report.num_fallbacks += 1
+        needed -= 1
+
+
+def sample_trees(engine: TreeEngine, prompts: List[List[int]],
+                 targets: List[str], tree_cfg: Optional[TreeConfig] = None,
+                 *, rng: Optional[random.Random] = None,
+                 progress: float = 0.0,
+                 prefix_embeds=None, enc_frames=None,
+                 guard_factor: int = 4,
+                 ) -> Tuple[List[QueryTree], SamplerReport]:
+    """Run Algorithm 1 for a batch of queries.  Returns the query trees
+    (finished paths = trajectories) and a sampling report."""
+    tree_cfg = tree_cfg or engine.tree_cfg
+    rng = rng or random.Random(0)
+    report = SamplerReport(num_queries=len(prompts))
+    guard = tree_cfg.max_width * tree_cfg.max_depth * guard_factor
+
+    trees = [QueryTree(query_idx=i, prompt_tokens=list(p), target=t)
+             for i, (p, t) in enumerate(zip(prompts, targets))]
+
+    # 1-2. prefill + init divergence --------------------------------------
+    roots = engine.prefill_queries(prompts, prefix_embeds=prefix_embeds,
+                                   enc_frames=enc_frames)
+    for tree, root_ep in zip(trees, roots):
+        n_init = min(br.init_divergence(tree_cfg, rng), tree_cfg.max_width)
+        tree.init_div = n_init
+        eps = [root_ep] + [engine.fork_path(root_ep)
+                           for _ in range(n_init - 1)]
+        tree.active = [
+            Path(query_idx=tree.query_idx, depth=0,
+                 node_ids=[tree.root_id], tokens=[], logprobs=[], ep=ep)
+            for ep in eps
+        ]
+
+    # 3. segment-synchronous search loop ----------------------------------
+    while True:
+        batch = [(tree, p) for tree in trees for p in tree.active]
+        if not batch:
+            break
+        paths = [p for _, p in batch]
+        for tree in trees:
+            tree.active = []
+        results = engine.decode_segments([p.ep for p in paths])
+        report.decode_rounds += 1
+        for (tree, path), res in zip(batch, results):
+            _process_segment(tree, path, res.tokens, res.logprobs,
+                             res.seg_logprob, tree_cfg, engine)
+        for tree in trees:
+            _branch_tree(tree, tree_cfg, engine, rng, progress)
+            _fallback_tree(tree, tree_cfg, engine, rng, guard,
+                           engine.n_prefix, report)
+
+    # 4. release device resources ------------------------------------------
+    for tree in trees:
+        for p in tree.finished:
+            if p.ep is not None:
+                engine.release_path(p.ep)
+        if tree.finished and tree.finished[0].ep is not None:
+            engine.release_qslot(tree.finished[0].ep.qslot)
+        report.num_trajectories += tree.num_trajectories
+        report.num_leaves += tree.num_leaves
+        report.num_failed += sum(1 for p in tree.finished
+                                 if p.status == Status.FAILED)
+    return trees, report
+
+
+def sequential_tree_cfg(tree_cfg: TreeConfig) -> TreeConfig:
+    """The paper's sequential baseline expressed in tree terms: ``w``
+    independent rollouts, no branching, no fallback, no early stop
+    transfer (repetition stop retained — both samplers use it)."""
+    return dataclasses.replace(
+        tree_cfg,
+        branch_factor=1,
+        init_divergence_low=tree_cfg.max_width,
+        init_divergence_high=tree_cfg.max_width,
+        fallback=False,
+        budget_transfer=False,
+    )
+
+
+def sample_sequential(engine: TreeEngine, prompts: List[List[int]],
+                      targets: List[str],
+                      tree_cfg: Optional[TreeConfig] = None, **kw
+                      ) -> Tuple[List[QueryTree], SamplerReport]:
+    """Vanilla i.i.d. rollout baseline driven through the same engine."""
+    tree_cfg = sequential_tree_cfg(tree_cfg or engine.tree_cfg)
+    return sample_trees(engine, prompts, targets, tree_cfg, **kw)

@@ -1,0 +1,111 @@
+"""Host-side tree bookkeeping for TreePO sampling (paper §2.2).
+
+A *node* is one generated segment; a *path* is the chain root→node.  The
+tree for query q tracks every path's status, its per-depth node-id chain
+(which feeds the tree-based advantage, ``repro.core.advantage``), and its
+device-side identity (``EnginePath``: block table / recurrent slot).
+"""
+from __future__ import annotations
+
+import dataclasses
+import enum
+from typing import Any, List, Optional
+
+
+class Status(enum.Enum):
+    ACTIVE = "active"
+    LEAF = "leaf"          # finished with EOS / boxed answer / length cap
+    FAILED = "failed"      # early-stopped (repetition / budget pruned)
+
+
+_NODE_COUNTER = [0]
+
+
+def _next_node_id() -> int:
+    _NODE_COUNTER[0] += 1
+    return _NODE_COUNTER[0]
+
+
+@dataclasses.dataclass
+class Path:
+    """One active/finished search path (the chain up to its last node)."""
+
+    query_idx: int
+    depth: int                        # segments generated so far
+    node_ids: List[int]               # ancestor node id per depth (root first)
+    tokens: List[int]                 # generated tokens (suffix after prompt)
+    logprobs: List[float]             # per generated token
+    ep: Optional[Any] = None          # EnginePath (device-side identity)
+    status: Status = Status.ACTIVE
+    seg_logprob: float = 0.0          # mean logprob of the last segment
+    finish_reason: str = ""
+    # segment boundaries in `tokens` (starts with 0; token-aligned fallback)
+    seg_bounds: List[int] = dataclasses.field(
+        default_factory=lambda: [0])
+
+    def clone_for_branch(self, ep: Optional[Any] = None) -> "Path":
+        """Fork at the current segment boundary."""
+        return Path(
+            query_idx=self.query_idx,
+            depth=self.depth,
+            node_ids=list(self.node_ids),
+            tokens=list(self.tokens),
+            logprobs=list(self.logprobs),
+            ep=ep,
+            status=Status.ACTIVE,
+            seg_logprob=self.seg_logprob,
+            seg_bounds=list(self.seg_bounds),
+        )
+
+
+@dataclasses.dataclass
+class QueryTree:
+    """All paths for one query."""
+
+    query_idx: int
+    prompt_tokens: List[int]
+    target: str                       # ground-truth answer (reward check)
+    root_id: int = dataclasses.field(default_factory=_next_node_id)
+    active: List[Path] = dataclasses.field(default_factory=list)
+    finished: List[Path] = dataclasses.field(default_factory=list)
+    init_div: int = 1
+    total_segments: int = 0
+
+    @property
+    def num_leaves(self) -> int:
+        return sum(1 for p in self.finished if p.status == Status.LEAF)
+
+    @property
+    def num_trajectories(self) -> int:
+        return len(self.finished)
+
+    def fallback_candidates(self) -> List[Path]:
+        """Paper §2.2: only paths with a formatted answer or EOS may seed
+        fallback (FAILED / length-capped paths may not)."""
+        return [p for p in self.finished
+                if p.status == Status.LEAF
+                and p.finish_reason in ("eos", "boxed")
+                and len(p.seg_bounds) > 2]
+
+
+def new_node_id() -> int:
+    return _next_node_id()
+
+
+def ancestor_matrix(paths: List[Path], max_depth: int):
+    """(G, J) ancestor-node-id matrix for advantage estimation.
+
+    J = max_depth + 1 (row 0 = the shared root).  Shorter trajectories
+    repeat their leaf id below their final depth (consistent with Eq. 4's
+    subgroup nesting: a finished path is a singleton chain downward).
+    """
+    import numpy as np
+
+    G = len(paths)
+    anc = np.zeros((G, max_depth + 1), dtype=np.int64)
+    for i, p in enumerate(paths):
+        ids = p.node_ids[: max_depth + 1]
+        anc[i, : len(ids)] = ids
+        if len(ids) < max_depth + 1:
+            anc[i, len(ids):] = ids[-1]
+    return anc

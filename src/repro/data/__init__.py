@@ -1,0 +1,8 @@
+from repro.data.tokenizer import ByteTokenizer
+from repro.data.synthetic_math import MathTaskGenerator, MathSample
+from repro.data.reward import extract_boxed, verify_answer, reward_fn
+
+__all__ = [
+    "ByteTokenizer", "MathTaskGenerator", "MathSample",
+    "extract_boxed", "verify_answer", "reward_fn",
+]

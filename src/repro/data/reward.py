@@ -1,0 +1,50 @@
+"""Outcome reward: boxed-answer exact-match equivalence (paper's RLVR).
+
+``is_equivalent(a, o_i)`` from Eq. 1 — binary terminal reward; a trajectory
+is a LEAF iff it contains a legal boxed answer or [EOS] (the paper's leaf
+criterion, §2.2 footnote 1).
+"""
+from __future__ import annotations
+
+import re
+from typing import Optional
+
+_BOXED_RE = re.compile(r"\\boxed\{([^{}]*)\}")
+
+
+def extract_boxed(text: str) -> Optional[str]:
+    """Last \\boxed{...} content, or None."""
+    matches = _BOXED_RE.findall(text)
+    return matches[-1].strip() if matches else None
+
+
+def _canon(s: str) -> Optional[str]:
+    s = s.strip().replace(",", "").replace(" ", "")
+    if not s:
+        return None
+    try:
+        # canonicalize numerics: 7.0 == 7, -0 == 0
+        f = float(s)
+        if f == int(f):
+            return str(int(f))
+        return repr(f)
+    except ValueError:
+        return s.lower()
+
+
+def verify_answer(prediction: str, target: str) -> bool:
+    """is_equivalent: canonical numeric / lowered-string match."""
+    p, t = _canon(prediction), _canon(target)
+    return p is not None and p == t
+
+
+def reward_fn(response_text: str, target: str,
+              shaping: float = 0.0) -> float:
+    """Terminal reward from raw generated text.
+
+    Binary (paper-faithful) by default; ``shaping`` grants partial credit
+    for a well-formatted but wrong boxed answer (toy-scale aid)."""
+    boxed = extract_boxed(response_text)
+    if boxed is None:
+        return 0.0
+    return 1.0 if verify_answer(boxed, target) else shaping

@@ -1,0 +1,73 @@
+"""Synthetic verifiable math-reasoning tasks (MATH/DeepScaleR stand-in).
+
+The RLVR contract the paper trains under: a query with a unique numeric
+answer, a sparse terminal reward = exact-match of the ``\\boxed{}`` answer.
+Tasks are multi-step integer arithmetic chains whose intermediate steps form
+a natural chain-of-thought, so a small model *can* learn them RL-zero style
+and trajectories exhibit the shared-prefix structure the paper exploits
+(§2.1): the problem restatement and early derivation steps coincide across
+rollouts.
+
+Difficulty levels 3–5 (matching the paper's MATH subset) map to chain
+length / operand magnitude.
+"""
+from __future__ import annotations
+
+import dataclasses
+import random
+from typing import List, Optional, Tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class MathSample:
+    query: str          # natural-language prompt
+    answer: str         # ground-truth final answer (canonical string)
+    cot: str            # a reference chain-of-thought (for analysis only)
+    difficulty: int
+
+
+_OPS = [("+", lambda a, b: a + b),
+        ("-", lambda a, b: a - b),
+        ("*", lambda a, b: a * b)]
+
+
+class MathTaskGenerator:
+    """Deterministic-by-seed generator of verifiable arithmetic CoT tasks."""
+
+    def __init__(self, seed: int = 0, min_difficulty: int = 3,
+                 max_difficulty: int = 5):
+        self.rng = random.Random(seed)
+        self.min_difficulty = min_difficulty
+        self.max_difficulty = max_difficulty
+
+    def sample(self) -> MathSample:
+        diff = self.rng.randint(self.min_difficulty, self.max_difficulty)
+        n_steps = diff  # chain length grows with difficulty
+        lo, hi = 2, 6 + 2 * diff
+        x = self.rng.randint(lo, hi)
+        steps: List[str] = []
+        expr_parts = [f"start with {x}"]
+        val = x
+        for s in range(n_steps):
+            op_name, op = self.rng.choice(_OPS)
+            y = self.rng.randint(lo, hi)
+            new_val = op(val, y)
+            verb = {"+": "add", "-": "subtract", "*": "multiply by"}[op_name]
+            expr_parts.append(f"{verb} {y}")
+            steps.append(f"Step {s + 1}: {val} {op_name} {y} = {new_val}.")
+            val = new_val
+        query = ("Compute the following: " + ", then ".join(expr_parts)
+                 + ". Show your steps and put the final answer in \\boxed{}.")
+        cot = " ".join(steps) + f" The final answer is \\boxed{{{val}}}."
+        return MathSample(query=query, answer=str(val), cot=cot,
+                          difficulty=diff)
+
+    def batch(self, n: int) -> List[MathSample]:
+        return [self.sample() for _ in range(n)]
+
+
+def make_dataset(num_samples: int, seed: int = 0,
+                 min_difficulty: int = 3,
+                 max_difficulty: int = 5) -> List[MathSample]:
+    gen = MathTaskGenerator(seed, min_difficulty, max_difficulty)
+    return gen.batch(num_samples)

@@ -1,0 +1,55 @@
+"""Byte-level tokenizer with reserved special tokens.
+
+Vocabulary layout: [0, 256) raw bytes, then specials.  Matches the RLVR
+setting: the policy emits bytes; ``[EOS]`` terminates a trajectory;
+``[PAD]`` right-pads fixed-shape device batches (TPU-friendly).
+"""
+from __future__ import annotations
+
+from typing import Iterable, List
+
+
+class ByteTokenizer:
+    PAD = 256
+    BOS = 257
+    EOS = 258
+
+    SPECIALS = {PAD: "[PAD]", BOS: "[BOS]", EOS: "[EOS]"}
+
+    @property
+    def vocab_size(self) -> int:
+        return 256 + len(self.SPECIALS)
+
+    def encode(self, text: str, *, bos: bool = False,
+               eos: bool = False) -> List[int]:
+        ids = list(text.encode("utf-8"))
+        if bos:
+            ids = [self.BOS] + ids
+        if eos:
+            ids = ids + [self.EOS]
+        return ids
+
+    def decode(self, ids: Iterable[int]) -> str:
+        out = bytearray()
+        for t in ids:
+            t = int(t)
+            if t < 256:
+                out.append(t)
+            # specials are dropped in text form
+        return out.decode("utf-8", errors="replace")
+
+    def decode_with_specials(self, ids: Iterable[int]) -> str:
+        parts = []
+        buf = bytearray()
+        for t in ids:
+            t = int(t)
+            if t < 256:
+                buf.append(t)
+            else:
+                if buf:
+                    parts.append(buf.decode("utf-8", errors="replace"))
+                    buf = bytearray()
+                parts.append(self.SPECIALS.get(t, f"[UNK{t}]"))
+        if buf:
+            parts.append(buf.decode("utf-8", errors="replace"))
+        return "".join(parts)

@@ -1,0 +1,10 @@
+from repro.distributed.sharding import (
+    batch_pspec,
+    cache_pspecs,
+    fsdp_axes,
+    param_pspecs,
+    to_named_sharding,
+)
+
+__all__ = ["param_pspecs", "cache_pspecs", "batch_pspec", "fsdp_axes",
+           "to_named_sharding"]

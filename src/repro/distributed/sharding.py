@@ -1,0 +1,201 @@
+"""Sharding rules: parameter / optimizer / activation / cache PartitionSpecs.
+
+Scheme (DESIGN.md §6) — Megatron tensor parallel on the ``model`` axis +
+FSDP-style parameter sharding on (``pod``, ``data``):
+
+  * column-parallel weights (d -> out):   P(fsdp, "model")
+  * row-parallel weights (in -> d):       P("model", fsdp)
+  * MoE expert banks (E, ..., ...):       P("model", fsdp-ish, ...) — expert
+    parallelism; GSPMD inserts the dispatch all-to-all.
+  * vocab embedding / head:               vocab on "model", d on fsdp
+  * norm scales / small vectors:          replicated (or channel-sharded
+    when the channel dim is model-sharded downstream)
+
+Every rule is *divisibility-filtered*: an axis is only applied if it evenly
+divides the corresponding dimension (e.g. whisper's 51865-token vocab is
+not divisible by 16 -> replicated).  This is a perf hint, not a semantics
+change — GSPMD keeps the program correct either way.
+
+KV-cache specs for serving: batch on ``data``, sequence on ``model``
+(distributed KV — each model shard holds a slice of the context; XLA turns
+the softmax over the sharded length into a distributed LSE combine).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+
+
+def fsdp_axes(mesh: Mesh) -> Tuple[str, ...]:
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def _axis_size(mesh: Mesh, axes) -> int:
+    if axes is None:
+        return 1
+    if isinstance(axes, str):
+        axes = (axes,)
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    return n
+
+
+def _filter_spec(spec: Tuple, shape: Tuple[int, ...], mesh: Mesh) -> P:
+    """Drop spec entries that don't evenly divide their dimension."""
+    out = []
+    for dim, axes in zip(shape, spec):
+        if axes is not None and dim % _axis_size(mesh, axes) == 0 \
+                and _axis_size(mesh, axes) > 1:
+            out.append(axes)
+        else:
+            out.append(None)
+    return P(*out)
+
+
+# ---------------------------------------------------------------------------
+# parameter rules
+# ---------------------------------------------------------------------------
+
+_COL = {"w_q", "w_k", "w_v", "w_uq", "w_uk", "w_uv", "w_gate", "w_up",
+        "w_in", "w_r", "w_g"}
+_ROW = {"w_o", "w_down", "w_out"}
+_REPL = {"scale", "mix_base", "mix_k", "router_bias", "dt_bias", "conv_b",
+         "D", "decay_base", "bonus_u"}
+
+
+def _param_rule(path: Tuple[str, ...], shape: Tuple[int, ...],
+                fsdp) -> Tuple:
+    """Raw (unfiltered) spec for one parameter, from its pytree path."""
+    name = path[-1]
+    in_moe = "ffn_moe" in path
+    ndim = len(shape)
+    if name == "embedding":                      # (V, d)
+        return ("model", fsdp)
+    if name == "lm_head":                        # (d, V)
+        return (fsdp, "model")
+    if name == "scale":
+        return (None,) * ndim
+    if in_moe and name in ("w_gate", "w_up"):    # (E, d, ff)
+        return ("model", fsdp, None)
+    if in_moe and name == "w_down":              # (E, ff, d)
+        return ("model", None, fsdp)
+    if in_moe and name == "router":              # (d, E)
+        return (fsdp, None)
+    if name in _COL and ndim == 2:               # (in, out)
+        return (fsdp, "model")
+    if name in _ROW and ndim == 2:               # (in, out): in is sharded
+        return ("model", fsdp)
+    # --- mamba ---
+    if name == "conv_w":                         # (d_conv, d_in)
+        return (None, "model")
+    if name == "w_x":                            # (d_in, dtr + 2N)
+        return ("model", None)
+    if name == "w_dt":                           # (dtr, d_in)
+        return (None, "model")
+    if name == "A_log":                          # (d_in, N)
+        return ("model", None)
+    # --- rwkv ---
+    if name == "decay_lora_a":                   # (d, L)
+        return (fsdp, None)
+    if name == "decay_lora_b":                   # (L, d)
+        return (None, "model")
+    if name == "mix_lora_a":                     # (d, L)
+        return (fsdp, None)
+    if name == "mix_lora_b":                     # (5, L, d)
+        return (None, None, None)
+    # --- small latent projections (MLA down-proj etc.) ---
+    if name in ("w_dq", "w_dkv", "w_kr"):        # (d, r)
+        return (fsdp, None)
+    if name in _REPL:
+        return (None,) * ndim
+    # 1-D channel vectors riding a model-sharded dimension
+    if ndim == 1:
+        return (None,)
+    # default: FSDP on dim 0 only
+    return (fsdp,) + (None,) * (ndim - 1)
+
+
+def _path_names(path) -> Tuple[str, ...]:
+    names = []
+    for k in path:
+        if hasattr(k, "key"):
+            names.append(str(k.key))
+        elif hasattr(k, "idx"):
+            names.append(str(k.idx))
+        else:
+            names.append(str(k))
+    return tuple(names)
+
+
+def param_pspecs(cfg: ModelConfig, params_shape, mesh: Mesh,
+                 use_fsdp: bool = True):
+    """PartitionSpec pytree matching ``params_shape`` (ShapeDtypeStructs).
+
+    ``use_fsdp=False``: tensor-parallel only (params replicated over the
+    data axes) — the right layout for decode serving, where per-step FSDP
+    weight gathers dominate the collective roofline (§Perf)."""
+    fsdp = fsdp_axes(mesh) if use_fsdp else ()
+    fsdp = fsdp if fsdp else None
+
+    def rule(path, leaf):
+        names = _path_names(path)
+        raw = _param_rule(names, leaf.shape, fsdp)
+        return _filter_spec(raw, leaf.shape, mesh)
+
+    return jax.tree_util.tree_map_with_path(rule, params_shape)
+
+
+# ---------------------------------------------------------------------------
+# activation / batch / cache rules
+# ---------------------------------------------------------------------------
+
+def batch_pspec(mesh: Mesh, batch: int) -> P:
+    """Batch axis over (pod, data) when divisible."""
+    axes = fsdp_axes(mesh)
+    if axes and batch % _axis_size(mesh, axes) == 0:
+        return P(axes)
+    if "data" in mesh.axis_names and batch % mesh.shape["data"] == 0:
+        return P("data")
+    return P(None)
+
+
+def cache_pspecs(cfg: ModelConfig, cache_shape, mesh: Mesh,
+                 *, shard_seq: bool = True):
+    """Dense decode-cache specs: batch on data, sequence on model.
+
+    Recurrent state: batch on data, channel/head dim on model.
+    """
+    def rule(path, leaf):
+        names = _path_names(path)
+        name = names[-1]
+        shape = leaf.shape
+        spec: list = [None] * len(shape)
+        # dim 0 is always batch
+        if "data" in mesh.axis_names and shape[0] % mesh.shape["data"] == 0 \
+                and mesh.shape["data"] > 1:
+            spec[0] = "data"
+        if name in ("k", "v", "ckv", "k_rope"):
+            # (B, S, H, hd) or (B, S, r): shard sequence on model
+            if shard_seq and shape[1] % mesh.shape["model"] == 0:
+                spec[1] = "model"
+        elif name in ("conv", "ssm", "shift", "shift_ffn", "wkv"):
+            # recurrent state: channel/head dim on model
+            ch_dim = {"conv": 2, "ssm": 1, "shift": 1, "shift_ffn": 1,
+                      "wkv": 1}[name]
+            if shape[ch_dim] % mesh.shape["model"] == 0:
+                spec[ch_dim] = "model"
+        return P(*spec)
+
+    return jax.tree_util.tree_map_with_path(rule, cache_shape)
+
+
+def to_named_sharding(mesh: Mesh, spec_tree):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), spec_tree,
+        is_leaf=lambda x: isinstance(x, P))

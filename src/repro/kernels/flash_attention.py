@@ -1,0 +1,126 @@
+"""Flash attention (prefill / train) Pallas kernel.
+
+TPU mapping: grid ``(B, Hq, num_q_blocks, num_kv_blocks)`` with the kv-block
+axis innermost; a ``(blk_q, D)`` query tile stays resident in VMEM while
+``(blk_k, D)`` key/value tiles stream through, maintaining the online-softmax
+running max/denominator in f32 VMEM scratch.  Q/K tiles are MXU-shaped
+(blk_q, blk_k multiples of 128 when the sequence allows).  GQA is handled in
+the index map: the kv-head coordinate is ``q_head // group`` — no
+materialized head repetition (saves Hq/Hkv × KV bandwidth).
+
+Causal masking, sliding windows and the chunked-prefill ``q_offset`` are all
+position masks computed from grid coordinates (no mask tensors in HBM).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+_NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
+                  scale: float, causal: bool, window: int, q_offset: int,
+                  blk_q: int, blk_k: int, sq: int, skv: int):
+    iq = pl.program_id(2)
+    ik = pl.program_id(3)
+    nk = pl.num_programs(3)
+
+    @pl.when(ik == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, _NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0, :, 0, :].astype(jnp.float32)          # (blk_q, D)
+    k = k_ref[0, :, 0, :].astype(jnp.float32)          # (blk_k, D)
+    v = v_ref[0, :, 0, :].astype(jnp.float32)
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+
+    qpos = iq * blk_q + jax.lax.broadcasted_iota(jnp.int32, (blk_q, blk_k), 0) \
+        + q_offset
+    kpos = ik * blk_k + jax.lax.broadcasted_iota(jnp.int32, (blk_q, blk_k), 1)
+    mask = kpos < skv                                   # kv padding
+    if causal:
+        mask &= kpos <= qpos
+    if window > 0:
+        mask &= kpos > qpos - window
+    s = jnp.where(mask, s, _NEG_INF)
+
+    m_prev = m_ref[...]                                 # (blk_q,)
+    m_cur = jnp.maximum(m_prev, s.max(axis=1))
+    alpha = jnp.exp(m_prev - m_cur)
+    p = jnp.exp(s - m_cur[:, None])
+    l_ref[...] = l_ref[...] * alpha + p.sum(axis=1)
+    acc_ref[...] = acc_ref[...] * alpha[:, None] + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    m_ref[...] = m_cur
+
+    @pl.when(ik == nk - 1)
+    def _flush():
+        denom = jnp.maximum(l_ref[...], 1e-30)[:, None]
+        o_ref[0, :, 0, :] = (acc_ref[...] / denom).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "window", "scale", "q_offset", "blk_q",
+                     "blk_k", "interpret"),
+)
+def flash_attention_pallas(q, k, v, *, causal: bool = True, window: int = 0,
+                           scale=None, q_offset: int = 0, blk_q: int = 128,
+                           blk_k: int = 128, interpret: bool = False):
+    """q: (B, Sq, Hq, D); k/v: (B, Skv, Hkv, D) -> (B, Sq, Hq, D)."""
+    B, Sq, Hq, D = q.shape
+    Skv, Hkv = k.shape[1], k.shape[2]
+    group = Hq // Hkv
+    if scale is None:
+        scale = 1.0 / (D ** 0.5)
+
+    blk_q = min(blk_q, max(Sq, 1))
+    blk_k = min(blk_k, max(Skv, 1))
+    pad_q = (-Sq) % blk_q
+    pad_k = (-Skv) % blk_k
+    if pad_q:
+        q = jnp.pad(q, ((0, 0), (0, pad_q), (0, 0), (0, 0)))
+    if pad_k:
+        k = jnp.pad(k, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+    nq = q.shape[1] // blk_q
+    nk = k.shape[1] // blk_k
+
+    out = pl.pallas_call(
+        functools.partial(
+            _flash_kernel, scale=float(scale), causal=causal, window=window,
+            q_offset=q_offset, blk_q=blk_q, blk_k=blk_k, sq=Sq, skv=Skv),
+        grid=(B, Hq, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, blk_q, 1, D), lambda b, h, i, j: (b, i, h, 0)),
+            pl.BlockSpec((1, blk_k, 1, D),
+                         lambda b, h, i, j: (b, j, h // group, 0)),
+            pl.BlockSpec((1, blk_k, 1, D),
+                         lambda b, h, i, j: (b, j, h // group, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, blk_q, 1, D),
+                               lambda b, h, i, j: (b, i, h, 0)),
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((blk_q, D), jnp.float32),
+            pltpu.VMEM((blk_q,), jnp.float32),
+            pltpu.VMEM((blk_q,), jnp.float32),
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "parallel",
+                                 "arbitrary"),
+        ),
+        interpret=interpret,
+    )(q, k, v)
+    if pad_q:
+        out = out[:, :Sq]
+    return out

@@ -1,0 +1,144 @@
+"""Public kernel entry points.
+
+Each op dispatches between the Pallas TPU kernel and the pure-jnp reference
+depending on backend/flags.  On this CPU container the jnp path (or the
+Pallas interpreter in tests) executes; on TPU the pallas_call path compiles.
+
+Set ``REPRO_FORCE_REF=1`` to force reference implementations everywhere.
+"""
+from __future__ import annotations
+
+import functools
+import os
+
+import jax
+import jax.numpy as jnp
+
+
+def _interpret() -> bool:
+    """REPRO_PALLAS_INTERPRET=1 routes ops through the Pallas interpreter on
+    CPU — used by tests to exercise the real kernel bodies end-to-end."""
+    return os.environ.get("REPRO_PALLAS_INTERPRET", "0") == "1"
+
+
+def _use_pallas() -> bool:
+    if os.environ.get("REPRO_FORCE_REF", "0") == "1":
+        return False
+    return jax.default_backend() == "tpu" or _interpret()
+
+
+# ---------------------------------------------------------------------------
+# rmsnorm
+# ---------------------------------------------------------------------------
+
+def rmsnorm(x, scale, eps: float = 1e-6):
+    if _use_pallas():
+        from repro.kernels.rmsnorm import rmsnorm_pallas
+
+        return rmsnorm_pallas(x, scale, eps=eps, interpret=_interpret())
+    from repro.kernels.ref import rmsnorm_ref
+
+    return rmsnorm_ref(x, scale, eps=eps)
+
+
+# ---------------------------------------------------------------------------
+# flash attention (prefill / train)
+# ---------------------------------------------------------------------------
+
+def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                    scale: float | None = None, q_offset: int = 0):
+    """q: (B, Sq, Hq, D); k/v: (B, Skv, Hkv, D). Returns (B, Sq, Hq, D).
+
+    ``window``: sliding-window size (0 = full). ``q_offset``: absolute
+    position of q[0] relative to k[0] (for chunked prefill).
+    """
+    if _use_pallas():
+        from repro.kernels.flash_attention import flash_attention_pallas
+
+        return flash_attention_pallas(q, k, v, causal=causal, window=window,
+                                      scale=scale, q_offset=q_offset,
+                                      interpret=_interpret())
+    from repro.kernels.ref import attention_ref
+
+    return attention_ref(q, k, v, causal=causal, window=window, scale=scale,
+                         q_offset=q_offset)
+
+
+# ---------------------------------------------------------------------------
+# dense-cache decode attention
+# ---------------------------------------------------------------------------
+
+def decode_attention(q, k_cache, v_cache, lengths, *, window: int = 0,
+                     scale: float | None = None):
+    """Single-token decode. q: (B, Hq, D); caches: (B, S, Hkv, D);
+    lengths: (B,) valid cache lengths (the new token is at lengths-1)."""
+    from repro.kernels.ref import decode_attention_ref
+
+    return decode_attention_ref(q, k_cache, v_cache, lengths, window=window,
+                                scale=scale)
+
+
+# ---------------------------------------------------------------------------
+# paged (tree) decode attention
+# ---------------------------------------------------------------------------
+
+def paged_attention(q, k_pool, v_pool, block_tables, lengths, *,
+                    page_size: int, scale: float | None = None,
+                    window: int = 0):
+    """Tree-decode attention over a shared paged KV pool.
+
+    q: (B, Hq, D); pools: (num_pages, page, Hkv, D);
+    block_tables: (B, max_pages) int32 page ids (-1 pad);
+    lengths: (B,) total valid tokens per path.
+    ``window`` > 0: sliding-window layers attend the last `window` keys.
+    """
+    if _use_pallas():
+        from repro.kernels.paged_attention import paged_attention_pallas
+
+        return paged_attention_pallas(q, k_pool, v_pool, block_tables,
+                                      lengths, page_size=page_size,
+                                      scale=scale, window=window,
+                                      interpret=_interpret())
+    from repro.kernels.ref import paged_attention_ref
+
+    return paged_attention_ref(q, k_pool, v_pool, block_tables, lengths,
+                               page_size=page_size, scale=scale,
+                               window=window)
+
+
+# ---------------------------------------------------------------------------
+# mamba selective scan
+# ---------------------------------------------------------------------------
+
+def mamba_scan(u, dt, B_, C_, A, D, h0):
+    """Selective scan: u,dt (B,T,d_in); B_,C_ (B,T,N); A (d_in,N); D
+    (d_in,); h0 (B,d_in,N) -> (y, h_final).  Pallas keeps the state in
+    VMEM across the time loop (vs. an HBM round-trip per step in the XLA
+    scan lowering — §Perf)."""
+    if _use_pallas():
+        from repro.kernels.mamba_scan import mamba_scan_pallas
+
+        return mamba_scan_pallas(u, dt, B_, C_, A, D, h0,
+                                 interpret=_interpret())
+    from repro.kernels.ref import mamba_scan_ref
+
+    return mamba_scan_ref(u, dt, B_, C_, A, D, h0)
+
+
+# ---------------------------------------------------------------------------
+# rwkv6 wkv recurrence
+# ---------------------------------------------------------------------------
+
+def wkv6(r, k, v, w, u, state):
+    """RWKV6 time-mix recurrence.
+
+    r,k,v: (B, T, H, D); w: (B, T, H, D) decay in (0,1); u: (H, D) bonus;
+    state: (B, H, D, D). Returns (out (B,T,H,D), new_state).
+    """
+    if _use_pallas():
+        from repro.kernels.wkv6 import wkv6_pallas
+
+        return wkv6_pallas(r, k, v, w, u, state, interpret=_interpret())
+    from repro.kernels.ref import wkv6_ref
+
+    return wkv6_ref(r, k, v, w, u, state)

@@ -1,0 +1,125 @@
+"""Paged (tree-decode) attention Pallas kernel.
+
+The TPU adaptation of vLLM-style PagedAttention for TreePO's shared-prefix
+tree: every search path holds a *block table* of page ids into a global KV
+pool; branching copies the table, never the KV data.  GPU PagedAttention
+gathers pages with per-warp loads; the TPU version instead uses **scalar
+prefetch** — the block table is a scalar-prefetch operand, and the kernel's
+``index_map`` reads it to choose which ``(page, Hkv, D)`` tile the next grid
+step DMAs from HBM into VMEM.  The MXU sees only dense, aligned tiles; page
+indirection is resolved entirely in the (scalar) index map, so the gather
+costs no vector compute.
+
+Grid: ``(B, max_pages)`` with pages innermost; online softmax over pages in
+f32 VMEM scratch (one (Hq, D) accumulator per path).  Invalid table entries
+(-1) are clamped to page 0 and masked, so early-terminating paths of the
+tree cost nothing extra.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+_NEG_INF = -1e30
+
+
+def _paged_kernel(tables_ref, lengths_ref, q_ref, k_ref, v_ref, o_ref,
+                  acc_ref, m_ref, l_ref, *, scale: float, page_size: int,
+                  group: int, window: int):
+    b = pl.program_id(0)
+    i = pl.program_id(1)
+    np_ = pl.num_programs(1)
+
+    @pl.when(i == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, _NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0].astype(jnp.float32)                    # (Hq, D)
+    k = k_ref[...].astype(jnp.float32)                  # (page, Hkv, D)
+    v = v_ref[...].astype(jnp.float32)
+
+    Hq, D = q.shape
+    page, Hkv, _ = k.shape
+    # (Hkv, group, D) x (page, Hkv, D) -> (Hkv, group, page)
+    qg = q.reshape(Hkv, group, D)
+    s = jax.lax.dot_general(
+        qg, k, (((2,), (2,)), ((0,), (1,))),
+        preferred_element_type=jnp.float32) * scale     # (Hkv, group, page)
+
+    # table pages are consecutive per path, so `lengths` alone masks both
+    # the tail of the last page and the -1 (clamped-to-0) padding pages.
+    pos = i * page_size + jax.lax.broadcasted_iota(
+        jnp.int32, (Hkv, group, page), 2)
+    valid = pos < lengths_ref[b]
+    if window > 0:
+        valid &= pos >= lengths_ref[b] - window
+    s = jnp.where(valid, s, _NEG_INF)
+
+    m_prev = m_ref[...]                                 # (Hkv, group)
+    m_cur = jnp.maximum(m_prev, s.max(axis=2))
+    alpha = jnp.exp(m_prev - m_cur)
+    p = jnp.exp(s - m_cur[..., None])                   # (Hkv, group, page)
+    l_ref[...] = l_ref[...] * alpha + p.sum(axis=2)
+    # (Hkv, group, page) x (page, Hkv, D) -> (Hkv, group, D)
+    pv = jax.lax.dot_general(
+        p, v, (((2,), (0,)), ((0,), (1,))),
+        preferred_element_type=jnp.float32)
+    acc_ref[...] = acc_ref[...] * alpha[..., None] + pv
+    m_ref[...] = m_cur
+
+    @pl.when(i == np_ - 1)
+    def _flush():
+        denom = jnp.maximum(l_ref[...], 1e-30)[..., None]
+        o_ref[0] = (acc_ref[...] / denom).reshape(Hq, D).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("page_size", "scale", "window",
+                                    "interpret"))
+def paged_attention_pallas(q, k_pool, v_pool, block_tables, lengths, *,
+                           page_size: int, scale=None, window: int = 0,
+                           interpret: bool = False):
+    """q: (B, Hq, D); pools: (P, page, Hkv, D);
+    block_tables: (B, max_pages) int32 (-1 pad); lengths: (B,)."""
+    B, Hq, D = q.shape
+    P, page, Hkv, _ = k_pool.shape
+    assert page == page_size
+    group = Hq // Hkv
+    if scale is None:
+        scale = 1.0 / (D ** 0.5)
+    max_pages = block_tables.shape[1]
+    safe_tables = jnp.maximum(block_tables, 0).astype(jnp.int32)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(B, max_pages),
+        in_specs=[
+            pl.BlockSpec((1, Hq, D), lambda b, i, tbl, ln: (b, 0, 0)),
+            pl.BlockSpec((None, page, Hkv, D),
+                         lambda b, i, tbl, ln: (tbl[b, i], 0, 0, 0)),
+            pl.BlockSpec((None, page, Hkv, D),
+                         lambda b, i, tbl, ln: (tbl[b, i], 0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, Hq, D), lambda b, i, tbl, ln: (b, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((Hkv, group, D), jnp.float32),
+            pltpu.VMEM((Hkv, group), jnp.float32),
+            pltpu.VMEM((Hkv, group), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        functools.partial(_paged_kernel, scale=float(scale),
+                          page_size=page_size, group=group, window=window),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(safe_tables, lengths, q, k_pool, v_pool)

@@ -1,0 +1,147 @@
+"""Pure-jnp reference oracles for every kernel.
+
+These are the semantics contracts: Pallas kernels must match them
+(assert_allclose in tests/test_kernels.py) and they serve as the CPU
+execution path of ``repro.kernels.ops``.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def rmsnorm_ref(x, scale, eps: float = 1e-6):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps) * scale.astype(jnp.float32)
+    return out.astype(x.dtype)
+
+
+def _repeat_kv(k, num_q_heads: int):
+    """(B, S, Hkv, D) -> (B, S, Hq, D) by group repetition."""
+    hkv = k.shape[-2]
+    if hkv == num_q_heads:
+        return k
+    return jnp.repeat(k, num_q_heads // hkv, axis=-2)
+
+
+def attention_ref(q, k, v, *, causal: bool = True, window: int = 0,
+                  scale=None, q_offset: int = 0, bias=None):
+    """Full-sequence attention. q: (B,Sq,Hq,D); k,v: (B,Skv,Hkv,D)."""
+    B, Sq, Hq, D = q.shape
+    Skv = k.shape[1]
+    scale = scale if scale is not None else 1.0 / (D ** 0.5)
+    k = _repeat_kv(k, Hq)
+    v = _repeat_kv(v, Hq)
+    logits = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    qpos = jnp.arange(Sq) + q_offset
+    kpos = jnp.arange(Skv)
+    mask = jnp.ones((Sq, Skv), dtype=bool)
+    if causal:
+        mask &= kpos[None, :] <= qpos[:, None]
+    if window > 0:
+        mask &= kpos[None, :] > qpos[:, None] - window
+    logits = jnp.where(mask[None, None], logits, -1e30)
+    if bias is not None:
+        logits = logits + bias
+    p = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", p, v.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def decode_attention_ref(q, k_cache, v_cache, lengths, *, window: int = 0,
+                         scale=None):
+    """One-token decode vs dense cache. q: (B,Hq,D); cache: (B,S,Hkv,D).
+
+    GQA is a grouped einsum (no head materialization) and the cache enters
+    the dot in its stored dtype with f32 accumulation — both matter under
+    GSPMD: a repeat/upcast of a sequence-sharded cache doubles (or 8x-es)
+    the bytes any resharding has to move.
+    """
+    B, Hq, D = q.shape
+    S, Hkv = k_cache.shape[1], k_cache.shape[2]
+    g = Hq // Hkv
+    scale = scale if scale is not None else 1.0 / (D ** 0.5)
+    qg = q.reshape(B, Hkv, g, D).astype(jnp.float32)
+    logits = jnp.einsum("bkgd,bskd->bkgs", qg, k_cache,
+                        preferred_element_type=jnp.float32) * scale
+    kpos = jnp.arange(S)[None, :]  # (1, S)
+    valid = kpos < lengths[:, None]
+    if window > 0:
+        valid &= kpos >= (lengths[:, None] - window)
+    logits = jnp.where(valid[:, None, None, :], logits, -1e30)
+    p = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bkgs,bskd->bkgd", p, v_cache,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(B, Hq, D).astype(q.dtype)
+
+
+def paged_attention_ref(q, k_pool, v_pool, block_tables, lengths, *,
+                        page_size: int, scale=None, window: int = 0):
+    """Tree-decode attention: gather pages per path, then masked attention.
+
+    q: (B, Hq, D); pools: (P, page, Hkv, D); block_tables: (B, max_pages)
+    int32 (-1 = unused); lengths: (B,).  ``window`` > 0 restricts keys to
+    the last ``window`` positions (sliding-window layers).
+    """
+    B, Hq, D = q.shape
+    scale = scale if scale is not None else 1.0 / (D ** 0.5)
+    tables = jnp.maximum(block_tables, 0)  # (B, MP)
+    k = k_pool[tables]  # (B, MP, page, Hkv, D)
+    v = v_pool[tables]
+    B_, MP, PG, Hkv, _ = k.shape
+    k = k.reshape(B, MP * PG, Hkv, D)
+    v = v.reshape(B, MP * PG, Hkv, D)
+    k = _repeat_kv(k, Hq)
+    v = _repeat_kv(v, Hq)
+    logits = jnp.einsum("bhd,bkhd->bhk", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    pos = jnp.arange(MP * PG)[None, :]
+    valid = (pos < lengths[:, None]) & (block_tables[:, pos[0] // page_size] >= 0)
+    if window > 0:
+        valid &= pos >= (lengths[:, None] - window)
+    logits = jnp.where(valid[:, None, :], logits, -1e30)
+    p = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhk,bkhd->bhd", p, v.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def mamba_scan_ref(u, dt, B_, C_, A, D, h0):
+    """Selective-scan oracle. u,dt: (B,T,d_in); B_,C_: (B,T,N);
+    A: (d_in,N); D: (d_in,); h0: (B,d_in,N)."""
+    def step(h, inp):
+        u_t, dt_t, b_t, c_t = inp
+        dA = jnp.exp(dt_t[..., None] * A[None])
+        h = dA * h + (dt_t * u_t)[..., None] * b_t[:, None, :]
+        y = jnp.einsum("bdn,bn->bd", h, c_t)
+        return h, y
+
+    xs = tuple(jnp.moveaxis(a, 1, 0).astype(jnp.float32)
+               for a in (u, dt, B_, C_))
+    h_final, ys = jax.lax.scan(step, h0.astype(jnp.float32), xs)
+    y = jnp.moveaxis(ys, 0, 1) + u.astype(jnp.float32) * D[None, None]
+    return y.astype(u.dtype), h_final.astype(h0.dtype)
+
+
+def wkv6_ref(r, k, v, w, u, state):
+    """RWKV6 recurrence, scanned over time in f32.
+
+    o_t = r_t . (S_{t-1} + diag(u) k_t v_t^T);  S_t = diag(w_t) S_{t-1} + k_t v_t^T
+    Shapes: r,k,v,w (B,T,H,D); u (H,D); state (B,H,D,D) [key-dim first].
+    """
+    rf, kf, vf, wf = (a.astype(jnp.float32) for a in (r, k, v, w))
+    uf = u.astype(jnp.float32)
+    s0 = state.astype(jnp.float32)
+
+    def step(s, inp):
+        rt, kt, vt, wt = inp  # (B,H,D) each
+        kv = kt[..., :, None] * vt[..., None, :]  # (B,H,D,D)
+        out = jnp.einsum("bhk,bhkv->bhv", rt, s + uf[None, :, :, None] * kv)
+        s_new = wt[..., :, None] * s + kv
+        return s_new, out
+
+    xs = tuple(jnp.moveaxis(a, 1, 0) for a in (rf, kf, vf, wf))
+    s_final, outs = jax.lax.scan(step, s0, xs)
+    out = jnp.moveaxis(outs, 0, 1)  # (B,T,H,D)
+    return out.astype(r.dtype), s_final.astype(state.dtype)

@@ -1,0 +1,176 @@
+"""Paged KV cache with tree-structured prefix sharing.
+
+The device side is a set of fixed-size pools (one K and one V array per
+attention layer, shape ``(num_pages, page_size, n_kv, head_dim)``) plus
+recurrent-state slot arrays for SSM/hybrid layers.  The host side is a page
+allocator with **refcounts**: forking a search path at a segment boundary
+copies the child's *block table* (a Python list of page ids) and bumps the
+refcount of every shared page — KV data is never copied (the paper's prefix
+amortization).  Branches only ever happen at page-aligned segment
+boundaries (DESIGN.md deviation #1 — the paper's own §4.2 shows misaligned
+fallback is harmful), so copy-on-write is never needed.
+
+Recurrent state (Mamba conv/ssm, RWKV wkv/shift) *is* copied on fork — it is
+a running reduction, not a prefix (DESIGN.md §4) — via slot-to-slot device
+copies batched per fork generation.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+
+
+class OutOfPages(RuntimeError):
+    pass
+
+
+@dataclasses.dataclass
+class PagePool:
+    """Host-side page allocator with refcounts."""
+
+    num_pages: int
+
+    def __post_init__(self):
+        self.refcount = np.zeros(self.num_pages, dtype=np.int32)
+        self.free: List[int] = list(range(self.num_pages - 1, -1, -1))
+
+    def alloc(self) -> int:
+        if not self.free:
+            raise OutOfPages(f"pool exhausted ({self.num_pages} pages)")
+        pid = self.free.pop()
+        assert self.refcount[pid] == 0
+        self.refcount[pid] = 1
+        return pid
+
+    def retain(self, pid: int) -> None:
+        assert self.refcount[pid] > 0
+        self.refcount[pid] += 1
+
+    def release(self, pid: int) -> None:
+        assert self.refcount[pid] > 0
+        self.refcount[pid] -= 1
+        if self.refcount[pid] == 0:
+            self.free.append(pid)
+
+    @property
+    def pages_in_use(self) -> int:
+        return int((self.refcount > 0).sum())
+
+
+class SlotAllocator:
+    """Fixed pool of per-path slots (recurrent state / scratch rows)."""
+
+    def __init__(self, num_slots: int):
+        self.num_slots = num_slots
+        self.free: List[int] = list(range(num_slots - 1, -1, -1))
+
+    def alloc(self) -> int:
+        if not self.free:
+            raise OutOfPages(f"slots exhausted ({self.num_slots})")
+        return self.free.pop()
+
+    def release(self, slot: int) -> None:
+        self.free.append(slot)
+
+    @property
+    def in_use(self) -> int:
+        return self.num_slots - len(self.free)
+
+
+class PagedKVState:
+    """Device arrays + host bookkeeping for the tree engine.
+
+    Layout:
+      kv_pools: per attn layer {"k": (P, page, n_kv, hd), "v": ...}
+                (MLA layers: {"ckv": (P, page, r), "k_rope": (P, page, rd)})
+      rec_state: per recurrent layer, slot-indexed state arrays
+                 (S_max, ...) — slot dim first.
+    """
+
+    def __init__(self, cfg: ModelConfig, num_pages: int, page_size: int,
+                 max_slots: int, dtype=jnp.float32):
+        self.cfg = cfg
+        self.page_size = page_size
+        self.pool = PagePool(num_pages)
+        self.slots = SlotAllocator(max_slots)
+        self.dtype = dtype
+        hd = cfg.resolved_head_dim
+        self.kv_pools: Dict[int, Dict[str, jnp.ndarray]] = {}
+        self.rec_state: Dict[int, Dict[str, jnp.ndarray]] = {}
+        for i in range(cfg.num_layers):
+            kind = cfg.layer_kind(i)
+            if kind == "attn":
+                if cfg.attention_kind == "mla":
+                    m = cfg.mla
+                    self.kv_pools[i] = {
+                        "ckv": jnp.zeros((num_pages, page_size,
+                                          m.kv_lora_rank), dtype),
+                        "k_rope": jnp.zeros((num_pages, page_size,
+                                             m.qk_rope_head_dim), dtype),
+                    }
+                else:
+                    self.kv_pools[i] = {
+                        "k": jnp.zeros((num_pages, page_size,
+                                        cfg.num_kv_heads, hd), dtype),
+                        "v": jnp.zeros((num_pages, page_size,
+                                        cfg.num_kv_heads, hd), dtype),
+                    }
+            elif kind == "mamba":
+                mc = cfg.mamba
+                d_in = mc.expand * cfg.d_model
+                self.rec_state[i] = {
+                    "conv": jnp.zeros((max_slots, mc.d_conv - 1, d_in), dtype),
+                    "ssm": jnp.zeros((max_slots, d_in, mc.d_state),
+                                     jnp.float32),
+                }
+            elif kind == "rwkv":
+                rc = cfg.rwkv
+                H = cfg.d_model // rc.head_dim
+                self.rec_state[i] = {
+                    "wkv": jnp.zeros((max_slots, H, rc.head_dim, rc.head_dim),
+                                     jnp.float32),
+                    "shift": jnp.zeros((max_slots, cfg.d_model), dtype),
+                    "shift_ffn": jnp.zeros((max_slots, cfg.d_model), dtype),
+                }
+        # whisper cross-attention KV: per request, shared by every branch
+        self.cross_kv: Optional[tuple] = None
+
+    # -- host bookkeeping ---------------------------------------------------
+
+    def fork_table(self, table: List[int]) -> List[int]:
+        """Child block table sharing every page of the parent prefix."""
+        for pid in table:
+            self.pool.retain(pid)
+        return list(table)
+
+    def release_table(self, table: List[int]) -> None:
+        for pid in table:
+            self.pool.release(pid)
+
+    def copy_slots(self, src_slots: List[int], dst_slots: List[int]) -> None:
+        """Batched device copy of recurrent state rows (fork of SSM state)."""
+        if not src_slots or not self.rec_state:
+            return
+        src = jnp.asarray(src_slots, jnp.int32)
+        dst = jnp.asarray(dst_slots, jnp.int32)
+        for i, st in self.rec_state.items():
+            self.rec_state[i] = {
+                k: v.at[dst].set(v[src]) for k, v in st.items()
+            }
+
+    # -- stats ---------------------------------------------------------------
+
+    def kv_bytes_per_token(self) -> int:
+        """Bytes of KV written per generated token (all attn layers)."""
+        total = 0
+        for pools in self.kv_pools.values():
+            for arr in pools.values():
+                per_tok = int(np.prod(arr.shape[2:])) * arr.dtype.itemsize
+                total += per_tok
+        return total

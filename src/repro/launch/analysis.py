@@ -1,0 +1,173 @@
+"""Compiled-artifact analysis: roofline terms from the dry-run.
+
+Three terms per (arch × shape × mesh), in seconds (§Roofline):
+
+  compute    = HLO_FLOPs / (chips × peak_FLOP/s)
+  memory     = HLO_bytes / (chips × HBM_bw)
+  collective = collective_bytes / (chips × link_bw)
+
+HLO_FLOPs / HLO_bytes come from ``compiled.cost_analysis()``.  Collective
+bytes are NOT in cost_analysis: we parse the post-SPMD HLO text and sum the
+operand sizes of every all-gather / all-reduce / reduce-scatter /
+all-to-all / collective-permute op.
+
+Hardware constants: TPU v5e — 197 TFLOP/s bf16, 819 GB/s HBM,
+~50 GB/s/link ICI.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+# TPU v5e per-chip constants
+PEAK_FLOPS = 197e12          # bf16 FLOP/s
+HBM_BW = 819e9               # bytes/s
+LINK_BW = 50e9               # bytes/s per ICI link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "s32": 4, "u32": 4, "s64": 8, "u64": 8,
+    "f8e4m3fn": 1, "f8e5m2": 1, "bf16": 2, "f16": 2, "f32": 4, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+
+_COLLECTIVE_OPS = ("all-gather", "all-reduce", "reduce-scatter",
+                   "all-to-all", "collective-permute")
+
+# e.g.  %x = bf16[16,128,4096]{2,1,0} all-gather(...)
+_HLO_RE = re.compile(
+    r"=\s*(?:\()?([a-z0-9]+)\[([0-9,]*)\][^=]*?\s("
+    + "|".join(_COLLECTIVE_OPS) + r")[\.\(]")
+
+# tuple-result form: (bf16[...], bf16[...]) all-reduce(
+_TUPLE_RE = re.compile(
+    r"=\s*\(([^)]*)\)\s*(" + "|".join(_COLLECTIVE_OPS) + r")[\.\(]")
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    if dims.strip():
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Total bytes moved by each collective kind (output-shape sized)."""
+    out: Dict[str, int] = {k: 0 for k in _COLLECTIVE_OPS}
+    for line in hlo_text.splitlines():
+        line = line.strip()
+        m = _TUPLE_RE.search(line)
+        if m:
+            kind = m.group(2)
+            for sm in _SHAPE_RE.finditer(m.group(1)):
+                out[kind] += _shape_bytes(sm.group(1), sm.group(2))
+            continue
+        m = _HLO_RE.search(line)
+        if m:
+            out[m.group(3)] += _shape_bytes(m.group(1), m.group(2))
+    return out
+
+
+@dataclasses.dataclass
+class Roofline:
+    """All raw quantities are PER-DEVICE: the compiled artifact is the SPMD
+    (single-device) program, so ``cost_analysis`` FLOPs/bytes and the HLO
+    collective shapes are one chip's share.  The roofline terms therefore
+    need no further division by chip count; the *useful-compute* ratio
+    compares the global analytic 6·N·D against flops × chips."""
+
+    flops: float                 # HLO FLOPs per device
+    hbm_bytes: float             # HLO bytes accessed per device
+    coll_bytes: Dict[str, int]   # per collective kind, per device
+    chips: int
+    model_flops: float = 0.0     # global analytic 6·N·D
+
+    @property
+    def total_coll_bytes(self) -> float:
+        return float(sum(self.coll_bytes.values()))
+
+    @property
+    def t_compute(self) -> float:
+        return self.flops / PEAK_FLOPS
+
+    @property
+    def t_memory(self) -> float:
+        return self.hbm_bytes / HBM_BW
+
+    @property
+    def t_collective(self) -> float:
+        return self.total_coll_bytes / LINK_BW
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def useful_flops_frac(self) -> float:
+        total = self.flops * self.chips
+        return self.model_flops / total if total else 0.0
+
+    def as_dict(self) -> Dict:
+        return {
+            "flops": self.flops,
+            "hbm_bytes": self.hbm_bytes,
+            "coll_bytes": dict(self.coll_bytes),
+            "total_coll_bytes": self.total_coll_bytes,
+            "chips": self.chips,
+            "t_compute_s": self.t_compute,
+            "t_memory_s": self.t_memory,
+            "t_collective_s": self.t_collective,
+            "bottleneck": self.bottleneck,
+            "model_flops": self.model_flops,
+            "useful_flops_frac": self.useful_flops_frac,
+        }
+
+
+def roofline_from_compiled(compiled, chips: int,
+                           model_flops: float = 0.0) -> Roofline:
+    cost = compiled.cost_analysis()
+    if isinstance(cost, list):  # older jax returns [dict]
+        cost = cost[0]
+    flops = float(cost.get("flops", 0.0))
+    hbm = float(cost.get("bytes accessed", 0.0))
+    try:
+        hlo = compiled.as_text()
+    except Exception:
+        hlo = ""
+    coll = collective_bytes(hlo)
+    return Roofline(flops=flops, hbm_bytes=hbm, coll_bytes=coll,
+                    chips=chips, model_flops=model_flops)
+
+
+def model_flops_estimate(cfg, shape_name: str) -> float:
+    """6·N·D (dense) / 6·N_active·D (MoE); decode: D = batch tokens."""
+    from repro.configs import INPUT_SHAPES
+    seq_len, batch, mode = INPUT_SHAPES[shape_name]
+    n = cfg.num_active_params()
+    if mode == "train":
+        return 6.0 * n * batch * seq_len
+    if mode == "prefill":
+        return 2.0 * n * batch * seq_len
+    return 2.0 * n * batch  # one token per sequence
+
+
+def memory_analysis_dict(compiled) -> Optional[Dict[str, float]]:
+    try:
+        ma = compiled.memory_analysis()
+    except Exception:
+        return None
+    if ma is None:
+        return None
+    out = {}
+    for k in ("generated_code_size_in_bytes", "argument_size_in_bytes",
+              "output_size_in_bytes", "alias_size_in_bytes",
+              "temp_size_in_bytes"):
+        v = getattr(ma, k, None)
+        if v is not None:
+            out[k] = float(v)
+    return out or None

@@ -1,0 +1,189 @@
+"""Multi-pod dry-run: ``lower().compile()`` every (architecture × input
+shape × mesh) combination on the production placeholder mesh.
+
+  single-pod: (data=16, model=16)        = 256 chips
+  multi-pod : (pod=2, data=16, model=16) = 512 chips
+
+Success proves the sharding config is coherent (no sharding mismatch, no
+unsupported collective).  The compiled artifacts feed §Roofline:
+``cost_analysis`` (FLOPs/bytes), ``memory_analysis`` (per-device bytes),
+and the post-SPMD HLO (collective bytes).
+
+Usage:
+  python -m repro.launch.dryrun                      # everything
+  python -m repro.launch.dryrun --arch yi-6b         # one arch
+  python -m repro.launch.dryrun --shape train_4k --mesh single
+  python -m repro.launch.dryrun --out /tmp/dryrun.json
+"""
+from __future__ import annotations
+
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
+                           " --xla_force_host_platform_device_count=512")
+# ^ MUST precede every jax import: jax locks the device count on first init.
+os.environ.setdefault("TF_CPP_MIN_LOG_LEVEL", "3")  # mute SPMD chatter
+
+import argparse
+import json
+import time
+import traceback
+from typing import Dict, List
+
+import jax
+
+from repro.configs import ASSIGNED_ARCHS, INPUT_SHAPES, get_config
+from repro.launch.analysis import (
+    memory_analysis_dict,
+    model_flops_estimate,
+    roofline_from_compiled,
+)
+from repro.launch.mesh import make_production_mesh
+from repro.launch.steps import applicable, build_case
+
+
+def run_case(arch: str, shape_name: str, multi_pod: bool,
+             verbose: bool = True, tag: str = "baseline",
+             ep_moe: bool = False, **case_kw) -> Dict:
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = mesh.devices.size
+    cfg = get_config(arch)
+    ok, why = applicable(cfg, shape_name)
+    rec: Dict = {
+        "arch": arch, "shape": shape_name,
+        "mesh": "multi" if multi_pod else "single", "chips": chips,
+        "tag": tag,
+    }
+    if not ok:
+        rec.update(status="skipped", reason=why)
+        return rec
+    t0 = time.time()
+    try:
+        case = build_case(arch, shape_name, mesh, **case_kw)
+        # jax.set_mesh exposes the abstract mesh -> activates the explicit
+        # expert-parallel shard_map MoE path (§Perf lever); the plain
+        # `with mesh:` context keeps the GSPMD-propagated baseline.
+        ctx = jax.set_mesh(mesh) if ep_moe else mesh
+        with ctx:
+            jitted = jax.jit(case.fn, in_shardings=case.in_shardings,
+                             out_shardings=case.out_shardings,
+                             donate_argnums=case.donate_argnums)
+            lowered = jitted.lower(*case.args)
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+            t_compile = time.time() - t0 - t_lower
+        roof = roofline_from_compiled(
+            compiled, chips, model_flops_estimate(cfg, shape_name))
+        mem = memory_analysis_dict(compiled)
+        rec.update(
+            status="ok",
+            mode=case.mode,
+            lower_s=round(t_lower, 2),
+            compile_s=round(t_compile, 2),
+            roofline=roof.as_dict(),
+            memory=mem,
+            params=cfg.num_params(),
+            active_params=cfg.num_active_params(),
+        )
+        if verbose:
+            print(f"[ok] {arch:18s} {shape_name:12s} "
+                  f"{'multi' if multi_pod else 'single':6s} "
+                  f"flops={roof.flops:.3e} bytes={roof.hbm_bytes:.3e} "
+                  f"coll={roof.total_coll_bytes:.3e} "
+                  f"bottleneck={roof.bottleneck} "
+                  f"(compile {t_compile:.1f}s)", flush=True)
+            if mem:
+                print(f"     memory_analysis: {mem}", flush=True)
+    except Exception as e:  # a failure here is a bug in the system
+        rec.update(status="error", error=f"{type(e).__name__}: {e}",
+                   traceback=traceback.format_exc()[-2000:])
+        if verbose:
+            print(f"[ERR] {arch:18s} {shape_name:12s} "
+                  f"{'multi' if multi_pod else 'single':6s} {e}", flush=True)
+    return rec
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None, help="one arch id (default all)")
+    ap.add_argument("--shape", default=None,
+                    choices=list(INPUT_SHAPES) + [None])
+    ap.add_argument("--mesh", default="both",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--out", default=None,
+                    help="append JSONL records here (supports --resume)")
+    ap.add_argument("--resume", action="store_true",
+                    help="skip (arch, shape, mesh) triples already in --out")
+    ap.add_argument("--tag", default="baseline",
+                    help="variant label stored with each record")
+    ap.add_argument("--kv-update", default="scatter",
+                    choices=["scatter", "masked"],
+                    help="decode cache write strategy (§Perf lever)")
+    ap.add_argument("--no-shard-seq", action="store_true",
+                    help="replicate the cache sequence dim (§Perf lever)")
+    ap.add_argument("--donate-cache", action="store_true",
+                    help="alias the decode cache in/out (§Perf lever)")
+    ap.add_argument("--ep-moe", action="store_true",
+                    help="explicit expert-parallel shard_map MoE "
+                         "(§Perf lever)")
+    ap.add_argument("--moe-cf", type=float, default=0.0,
+                    help="GShard capacity factor for the EP MoE path "
+                         "(0 = exact)")
+    ap.add_argument("--serve-tp-only", action="store_true",
+                    help="decode shapes: tensor-parallel-only params "
+                         "(no per-step FSDP weight gathers; §Perf lever)")
+    args = ap.parse_args()
+
+    assert len(jax.devices()) == 512, \
+        "dry-run needs the 512-device placeholder platform"
+    archs = [args.arch] if args.arch else ASSIGNED_ARCHS
+    shapes = [args.shape] if args.shape else list(INPUT_SHAPES)
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+
+    done = set()
+    if args.resume and args.out and os.path.exists(args.out):
+        with open(args.out) as f:
+            for line in f:
+                try:
+                    r = json.loads(line)
+                except json.JSONDecodeError:
+                    continue
+                if r.get("status") in ("ok", "skipped"):
+                    done.add((r["arch"], r["shape"], r["mesh"],
+                              r.get("tag", "baseline")))
+
+    outf = open(args.out, "a") if args.out else None
+    records: List[Dict] = []
+    # cheap shapes first so most of the table lands early
+    shape_order = ["decode_32k", "long_500k", "prefill_32k", "train_4k"]
+    shapes = sorted(shapes, key=lambda s: shape_order.index(s))
+    for shape in shapes:
+        for arch in archs:
+            for multi in meshes:
+                mesh_name = "multi" if multi else "single"
+                if (arch, shape, mesh_name, args.tag) in done:
+                    continue
+                rec = run_case(arch, shape, multi, tag=args.tag,
+                               ep_moe=args.ep_moe,
+                               kv_update=args.kv_update,
+                               shard_seq=not args.no_shard_seq,
+                               donate_cache=args.donate_cache,
+                               moe_cf=args.moe_cf,
+                               serve_tp_only=args.serve_tp_only)
+                records.append(rec)
+                if outf:
+                    outf.write(json.dumps(rec) + "\n")
+                    outf.flush()
+    n_err = sum(1 for r in records if r["status"] == "error")
+    n_ok = sum(1 for r in records if r["status"] == "ok")
+    n_skip = sum(1 for r in records if r["status"] == "skipped")
+    print(f"\ndry-run: {n_ok} ok, {n_skip} skipped (documented), "
+          f"{n_err} errors")
+    if outf:
+        outf.close()
+        print(f"appended to {args.out}")
+    return 1 if n_err else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,26 @@
+"""Production mesh builders.
+
+Target hardware: TPU v5e pods — 256 chips per pod, 16x16 ICI torus.
+Single-pod mesh: (data=16, model=16).  Multi-pod: (pod=2, data=16,
+model=16) — the ``pod`` axis crosses DCN, so only data-parallel collectives
+(gradient all-reduce, FSDP all-gather) ride it.
+
+Functions, not module constants: importing this module never touches jax
+device state (the dry-run sets XLA_FLAGS *before* any jax import).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(model_parallel: int = 1):
+    """Small mesh over the real local devices (tests / examples)."""
+    n = len(jax.devices())
+    mp = max(1, min(model_parallel, n))
+    return jax.make_mesh((n // mp, mp), ("data", "model"))

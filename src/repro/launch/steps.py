@@ -1,0 +1,238 @@
+"""Distributed step functions + input specs for the multi-pod dry-run.
+
+Three lowering targets per the assigned input shapes:
+  train_4k                  -> ``train_step``   (PG update: fwd+bwd+AdamW)
+  prefill_32k               -> ``prefill_step`` (forward + KV write-out)
+  decode_32k / long_500k    -> ``serve_step``   (ONE token vs a full cache)
+
+``input_specs`` hands back ShapeDtypeStruct stand-ins (weak-type-correct,
+shardable, zero allocation) for every model input of a case; ``build_case``
+bundles the step fn with its in/out shardings for ``jax.jit(...).lower``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs import INPUT_SHAPES, get_config
+from repro.configs.base import ModelConfig, TrainConfig
+from repro.core.loss import dapo_pg_loss, token_logprobs_from_logits
+from repro.distributed.sharding import (
+    batch_pspec,
+    cache_pspecs,
+    param_pspecs,
+    to_named_sharding,
+)
+from repro.models.model import decode_step, forward, init_cache, init_params, \
+    prefill
+from repro.optim import adamw_init, adamw_update, clip_by_global_norm
+
+
+# ---------------------------------------------------------------------------
+# step functions
+# ---------------------------------------------------------------------------
+
+def make_train_step(cfg: ModelConfig, train_cfg: Optional[TrainConfig] = None,
+                    remat: bool = True) -> Callable:
+    tc = train_cfg or TrainConfig()
+
+    def train_step(params, opt_state, batch):
+        def loss_fn(p):
+            kwargs = {}
+            if "prefix_embeds" in batch:
+                kwargs["prefix_embeds"] = batch["prefix_embeds"]
+            if "enc_frames" in batch:
+                kwargs["enc_frames"] = batch["enc_frames"]
+            logits, aux = forward(p, cfg, batch["tokens"], remat=remat,
+                                  **kwargs)
+            S = batch["tokens"].shape[1]
+            logits = logits[:, -S:]  # drop modality prefix positions
+            lp_new = token_logprobs_from_logits(logits[:, :-1],
+                                                batch["tokens"][:, 1:])
+            mask = batch["response_mask"][:, 1:]
+            loss, metrics = dapo_pg_loss(
+                lp_new, batch["logprobs_old"][:, 1:],
+                batch["advantages"][:, 1:], mask,
+                clip_eps_low=tc.clip_eps_low,
+                clip_eps_high=tc.clip_eps_high)
+            if cfg.moe is not None:
+                loss = loss + cfg.moe.aux_loss_coef * aux
+            return loss, metrics
+
+        (loss, metrics), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(params)
+        grads, gnorm = clip_by_global_norm(grads, tc.max_grad_norm)
+        new_params, new_opt = adamw_update(
+            params, grads, opt_state, lr=tc.learning_rate,
+            beta1=tc.beta1, beta2=tc.beta2, eps=tc.eps,
+            weight_decay=tc.weight_decay)
+        metrics = dict(metrics, loss=loss, grad_norm=gnorm)
+        return new_params, new_opt, metrics
+
+    return train_step
+
+
+def make_prefill_step(cfg: ModelConfig) -> Callable:
+    def prefill_step(params, batch):
+        kwargs = {}
+        if "prefix_embeds" in batch:
+            kwargs["prefix_embeds"] = batch["prefix_embeds"]
+        if "enc_frames" in batch:
+            kwargs["enc_frames"] = batch["enc_frames"]
+        S_tot = batch["tokens"].shape[1] + (
+            cfg.frontend.num_prefix_tokens
+            if cfg.frontend is not None and cfg.frontend.kind == "vision"
+            else 0)
+        logits, cache = prefill(params, cfg, batch["tokens"], S_tot,
+                                **kwargs)
+        return logits, cache
+
+    return prefill_step
+
+
+def make_serve_step(cfg: ModelConfig, kv_update: str = "scatter"
+                    ) -> Callable:
+    def serve_step(params, cache, tokens_t, positions):
+        logits, new_cache = decode_step(params, cfg, tokens_t, cache,
+                                        positions, kv_update=kv_update)
+        return logits, new_cache
+
+    return serve_step
+
+
+# ---------------------------------------------------------------------------
+# input specs
+# ---------------------------------------------------------------------------
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def input_specs(cfg: ModelConfig, shape_name: str,
+                dtype=jnp.bfloat16) -> Dict[str, Any]:
+    """ShapeDtypeStruct stand-ins for every model input of this case."""
+    seq_len, batch, mode = INPUT_SHAPES[shape_name]
+    specs: Dict[str, Any] = {}
+    if mode == "train":
+        specs["tokens"] = _sds((batch, seq_len), jnp.int32)
+        specs["response_mask"] = _sds((batch, seq_len), jnp.float32)
+        specs["logprobs_old"] = _sds((batch, seq_len), jnp.float32)
+        specs["advantages"] = _sds((batch, seq_len), jnp.float32)
+        if cfg.frontend is not None and cfg.frontend.kind == "vision":
+            specs["prefix_embeds"] = _sds(
+                (batch, cfg.frontend.num_prefix_tokens,
+                 cfg.frontend.embed_dim), dtype)
+        if cfg.encoder is not None:
+            specs["enc_frames"] = _sds(
+                (batch, cfg.encoder.max_positions, cfg.encoder.d_model),
+                dtype)
+    elif mode == "prefill":
+        specs["tokens"] = _sds((batch, seq_len), jnp.int32)
+        if cfg.frontend is not None and cfg.frontend.kind == "vision":
+            specs["prefix_embeds"] = _sds(
+                (batch, cfg.frontend.num_prefix_tokens,
+                 cfg.frontend.embed_dim), dtype)
+        if cfg.encoder is not None:
+            specs["enc_frames"] = _sds(
+                (batch, cfg.encoder.max_positions, cfg.encoder.d_model),
+                dtype)
+    else:  # decode
+        specs["tokens_t"] = _sds((batch,), jnp.int32)
+        specs["positions"] = _sds((batch,), jnp.int32)
+        specs["cache"] = init_cache(cfg, batch, seq_len, dtype)
+    return specs
+
+
+def applicable(cfg: ModelConfig, shape_name: str) -> Tuple[bool, str]:
+    """Shape × arch applicability (DESIGN.md §5)."""
+    if shape_name == "long_500k" and not cfg.supports_long_context:
+        return False, ("full-attention arch: 500k decode is quadratic-cost/"
+                       "OOM; skipped per DESIGN.md §5")
+    return True, ""
+
+
+# ---------------------------------------------------------------------------
+# case assembly for the dry-run
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class LowerCase:
+    arch: str
+    shape_name: str
+    fn: Callable
+    args: Tuple
+    in_shardings: Tuple
+    out_shardings: Any
+    mode: str
+    donate_argnums: Tuple[int, ...] = ()
+
+
+def build_case(arch: str, shape_name: str, mesh: Mesh,
+               dtype=jnp.bfloat16, remat: bool = True,
+               kv_update: str = "scatter",
+               shard_seq: bool = True,
+               donate_cache: bool = False,
+               moe_cf: float = 0.0,
+               serve_tp_only: bool = False) -> LowerCase:
+    """``kv_update`` / ``shard_seq`` / ``donate_cache`` / ``moe_cf`` are
+    §Perf hillclimb levers (baseline: scatter + sequence-sharded cache,
+    no donation, exact expert compute)."""
+    cfg = get_config(arch)
+    if moe_cf > 0 and cfg.moe is not None:
+        cfg = dataclasses.replace(
+            cfg, moe=dataclasses.replace(cfg.moe,
+                                         ep_capacity_factor=moe_cf))
+    seq_len, batch, mode = INPUT_SHAPES[shape_name]
+    params_shape = jax.eval_shape(
+        functools.partial(init_params, cfg=cfg, dtype=dtype),
+        _sds((2,), jnp.uint32))
+    use_fsdp = not (serve_tp_only and mode == "decode")
+    p_specs = param_pspecs(cfg, params_shape, mesh, use_fsdp=use_fsdp)
+    p_shard = to_named_sharding(mesh, p_specs)
+    bspec = batch_pspec(mesh, batch)
+    bshard = NamedSharding(mesh, bspec)
+    specs = input_specs(cfg, shape_name, dtype)
+
+    if mode == "train":
+        from repro.optim.adamw import AdamWState
+        opt_shape = jax.eval_shape(adamw_init, params_shape)
+        opt_shard = AdamWState(step=NamedSharding(mesh, P()),
+                               m=p_shard, v=p_shard)
+        batch_shard = {k: bshard for k in specs}
+        fn = make_train_step(cfg, remat=remat)
+        args = (params_shape, opt_shape, specs)
+        in_shardings = (p_shard, opt_shard, batch_shard)
+        out_shardings = (p_shard, opt_shard, None)
+    elif mode == "prefill":
+        cache_shape = init_cache(
+            cfg, batch,
+            seq_len + (cfg.frontend.num_prefix_tokens
+                       if cfg.frontend is not None
+                       and cfg.frontend.kind == "vision" else 0), dtype)
+        c_specs = cache_pspecs(cfg, cache_shape, mesh)
+        c_shard = to_named_sharding(mesh, c_specs)
+        fn = make_prefill_step(cfg)
+        args = (params_shape, specs)
+        in_shardings = (p_shard, {k: bshard for k in specs})
+        out_shardings = (bshard, c_shard)
+    else:
+        cache_shape = specs["cache"]
+        c_specs = cache_pspecs(cfg, cache_shape, mesh, shard_seq=shard_seq)
+        c_shard = to_named_sharding(mesh, c_specs)
+        fn = make_serve_step(cfg, kv_update=kv_update)
+        args = (params_shape, cache_shape, specs["tokens_t"],
+                specs["positions"])
+        in_shardings = (p_shard, c_shard, bshard, bshard)
+        out_shardings = (bshard, c_shard)
+        return LowerCase(arch=arch, shape_name=shape_name, fn=fn,
+                         args=args, in_shardings=in_shardings,
+                         out_shardings=out_shardings, mode=mode,
+                         donate_argnums=(1,) if donate_cache else ())
+    return LowerCase(arch=arch, shape_name=shape_name, fn=fn, args=args,
+                     in_shardings=in_shardings,
+                     out_shardings=out_shardings, mode=mode)

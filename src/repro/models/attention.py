@@ -1,0 +1,269 @@
+"""Attention blocks: GQA (w/ qk-norm, sliding window) and MLA (deepseek).
+
+Each block exposes:
+  *_init(key, cfg)                      -> params
+  *_forward(params, cfg, x, positions, layer_idx, kv_write=None)
+        full-sequence (train / prefill); optionally returns written K/V
+  *_decode(params, cfg, x_t, cache, position, layer_idx)
+        one-token decode against a dense cache dict
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.kernels import ops as kops
+from repro.models.layers import _dense_init, apply_rope, rmsnorm, rmsnorm_init
+
+
+# ---------------------------------------------------------------------------
+# GQA
+# ---------------------------------------------------------------------------
+
+def gqa_init(key, cfg: ModelConfig, dtype=jnp.float32):
+    d, hd = cfg.d_model, cfg.resolved_head_dim
+    ks = jax.random.split(key, 6)
+    p = {
+        "w_q": _dense_init(ks[0], (d, cfg.num_heads * hd), dtype=dtype),
+        "w_k": _dense_init(ks[1], (d, cfg.num_kv_heads * hd), dtype=dtype),
+        "w_v": _dense_init(ks[2], (d, cfg.num_kv_heads * hd), dtype=dtype),
+        "w_o": _dense_init(ks[3], (cfg.num_heads * hd, d), dtype=dtype),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = rmsnorm_init(hd, dtype)
+        p["k_norm"] = rmsnorm_init(hd, dtype)
+    return p
+
+
+def _gqa_qkv(params, cfg: ModelConfig, x, positions):
+    """x: (B, S, d) -> q (B,S,Hq,hd), k/v (B,S,Hkv,hd) with rope+qknorm."""
+    B, S, _ = x.shape
+    hd = cfg.resolved_head_dim
+    q = (x @ params["w_q"]).reshape(B, S, cfg.num_heads, hd)
+    k = (x @ params["w_k"]).reshape(B, S, cfg.num_kv_heads, hd)
+    v = (x @ params["w_v"]).reshape(B, S, cfg.num_kv_heads, hd)
+    if cfg.qk_norm:
+        q = rmsnorm(params["q_norm"], q, cfg.norm_eps)
+        k = rmsnorm(params["k_norm"], k, cfg.norm_eps)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def gqa_forward(params, cfg: ModelConfig, x, positions, layer_idx: int,
+                *, causal: bool = True,
+                return_kv: bool = False):
+    q, k, v = _gqa_qkv(params, cfg, x, positions)
+    window = 0
+    if cfg.sliding_window > 0 and not cfg.is_global_attn_layer(layer_idx):
+        window = cfg.sliding_window
+    out = kops.flash_attention(q, k, v, causal=causal, window=window)
+    B, S, _, _ = out.shape
+    y = out.reshape(B, S, -1) @ params["w_o"]
+    if return_kv:
+        return y, (k, v)
+    return y
+
+
+def _cache_write(cache_arr, new_vals, slot, kv_update: str):
+    """Insert one token per row into a (B, S, ...) cache.
+
+    ``scatter``: per-row dynamic_update_slice (vmap -> scatter HLO).  Under
+    GSPMD with the sequence dim sharded this forces an involuntary
+    resharding/remat of the whole cache (observed in the baseline dry-run).
+    ``masked``: one-hot jnp.where — elementwise, so the cache's sharding is
+    preserved and only the (tiny) new KV is replicated.  Same result.
+    """
+    if kv_update == "masked":
+        S = cache_arr.shape[1]
+        iota = jnp.arange(S, dtype=slot.dtype)
+        onehot = iota[None, :] == slot[:, None]           # (B, S)
+        onehot = onehot.reshape(onehot.shape + (1,) * (cache_arr.ndim - 2))
+        return jnp.where(onehot, new_vals[:, None].astype(cache_arr.dtype),
+                         cache_arr)
+    return jax.vmap(lambda c, n, s: jax.lax.dynamic_update_slice(
+        c, n[None].astype(c.dtype), (s,) + (0,) * (c.ndim - 1)
+    ))(cache_arr, new_vals, slot)
+
+
+def gqa_decode(params, cfg: ModelConfig, x_t, cache: dict, position,
+               layer_idx: int, kv_update: str = "scatter"
+               ) -> Tuple[jnp.ndarray, dict]:
+    """x_t: (B, d); cache {k,v: (B, S, Hkv, hd)}; position: (B,) int32."""
+    B, _ = x_t.shape
+    hd = cfg.resolved_head_dim
+    x1 = x_t[:, None, :]  # (B,1,d)
+    q, k, v = _gqa_qkv(params, cfg, x1, position[:, None])
+    q = q[:, 0]  # (B,Hq,hd)
+    k, v = k[:, 0], v[:, 0]
+    window = 0
+    if cfg.sliding_window > 0 and not cfg.is_global_attn_layer(layer_idx):
+        window = cfg.sliding_window
+    S = cache["k"].shape[1]
+    # ring-buffer write for windowed layers whose cache is only `window` long
+    slot = position % S
+    k_cache = _cache_write(cache["k"], k, slot, kv_update)
+    v_cache = _cache_write(cache["v"], v, slot, kv_update)
+    lengths = jnp.minimum(position + 1, S)
+    eff_window = window if (window > 0 and S > window) else 0
+    out = kops.decode_attention(q, k_cache, v_cache, lengths,
+                                window=eff_window)
+    y = out.reshape(B, -1) @ params["w_o"]
+    return y, {"k": k_cache, "v": v_cache}
+
+
+def gqa_cache_shape(cfg: ModelConfig, batch: int, seq: int, layer_idx: int,
+                    dtype=jnp.bfloat16):
+    """Dense-cache spec for this layer (windowed layers store only window)."""
+    S = seq
+    if cfg.sliding_window > 0 and not cfg.is_global_attn_layer(layer_idx):
+        S = min(seq, cfg.sliding_window)
+    hd = cfg.resolved_head_dim
+    return {
+        "k": jax.ShapeDtypeStruct((batch, S, cfg.num_kv_heads, hd), dtype),
+        "v": jax.ShapeDtypeStruct((batch, S, cfg.num_kv_heads, hd), dtype),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Cross attention (whisper decoder)
+# ---------------------------------------------------------------------------
+
+def cross_attn_init(key, cfg: ModelConfig, enc_d: int, dtype=jnp.float32):
+    d, hd = cfg.d_model, cfg.resolved_head_dim
+    ks = jax.random.split(key, 4)
+    return {
+        "w_q": _dense_init(ks[0], (d, cfg.num_heads * hd), dtype=dtype),
+        "w_k": _dense_init(ks[1], (enc_d, cfg.num_kv_heads * hd), dtype=dtype),
+        "w_v": _dense_init(ks[2], (enc_d, cfg.num_kv_heads * hd), dtype=dtype),
+        "w_o": _dense_init(ks[3], (cfg.num_heads * hd, d), dtype=dtype),
+    }
+
+
+def cross_attn_kv(params, cfg: ModelConfig, enc_out):
+    """Precompute cross K/V once per request (shared by the whole tree)."""
+    B, S, _ = enc_out.shape
+    hd = cfg.resolved_head_dim
+    k = (enc_out @ params["w_k"]).reshape(B, S, cfg.num_kv_heads, hd)
+    v = (enc_out @ params["w_v"]).reshape(B, S, cfg.num_kv_heads, hd)
+    return k, v
+
+
+def cross_attn_forward(params, cfg: ModelConfig, x, k, v):
+    B, S, _ = x.shape
+    hd = cfg.resolved_head_dim
+    q = (x @ params["w_q"]).reshape(B, S, cfg.num_heads, hd)
+    out = kops.flash_attention(q, k, v, causal=False)
+    return out.reshape(B, S, -1) @ params["w_o"]
+
+
+# ---------------------------------------------------------------------------
+# MLA (deepseek-v3): latent-compressed KV with decoupled rope
+# ---------------------------------------------------------------------------
+
+def mla_init(key, cfg: ModelConfig, dtype=jnp.float32):
+    m = cfg.mla
+    d, H = cfg.d_model, cfg.num_heads
+    ks = jax.random.split(key, 8)
+    return {
+        "w_dq": _dense_init(ks[0], (d, m.q_lora_rank), dtype=dtype),
+        "q_norm": rmsnorm_init(m.q_lora_rank, dtype),
+        "w_uq": _dense_init(ks[1], (m.q_lora_rank, H * m.qk_head_dim), dtype=dtype),
+        "w_dkv": _dense_init(ks[2], (d, m.kv_lora_rank), dtype=dtype),
+        "kv_norm": rmsnorm_init(m.kv_lora_rank, dtype),
+        "w_kr": _dense_init(ks[3], (d, m.qk_rope_head_dim), dtype=dtype),
+        "w_uk": _dense_init(ks[4], (m.kv_lora_rank, H * m.qk_nope_head_dim), dtype=dtype),
+        "w_uv": _dense_init(ks[5], (m.kv_lora_rank, H * m.v_head_dim), dtype=dtype),
+        "w_o": _dense_init(ks[6], (H * m.v_head_dim, d), dtype=dtype),
+    }
+
+
+def _mla_q(params, cfg, x, positions):
+    m = cfg.mla
+    B, S, _ = x.shape
+    H = cfg.num_heads
+    cq = rmsnorm(params["q_norm"], x @ params["w_dq"], cfg.norm_eps)
+    q = (cq @ params["w_uq"]).reshape(B, S, H, m.qk_head_dim)
+    q_nope = q[..., : m.qk_nope_head_dim]
+    q_rope = apply_rope(q[..., m.qk_nope_head_dim:], positions,
+                        cfg.rope_theta or 10_000.0)
+    return q_nope, q_rope
+
+
+def _mla_latents(params, cfg, x, positions):
+    m = cfg.mla
+    ckv = rmsnorm(params["kv_norm"], x @ params["w_dkv"], cfg.norm_eps)
+    k_rope = apply_rope((x @ params["w_kr"])[:, :, None, :], positions,
+                        cfg.rope_theta or 10_000.0)[:, :, 0]
+    return ckv, k_rope  # (B,S,r), (B,S,rope_dim)
+
+
+def mla_forward(params, cfg: ModelConfig, x, positions, layer_idx: int,
+                *, causal: bool = True, return_kv: bool = False):
+    """Decompressed (train/prefill) MLA: materialize per-head K/V."""
+    m = cfg.mla
+    B, S, _ = x.shape
+    H = cfg.num_heads
+    q_nope, q_rope = _mla_q(params, cfg, x, positions)
+    ckv, k_rope = _mla_latents(params, cfg, x, positions)
+    k_nope = (ckv @ params["w_uk"]).reshape(B, S, H, m.qk_nope_head_dim)
+    v = (ckv @ params["w_uv"]).reshape(B, S, H, m.v_head_dim)
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope[:, :, None, :],
+                                  (B, S, H, m.qk_rope_head_dim))], axis=-1)
+    scale = 1.0 / (m.qk_head_dim ** 0.5)
+    out = kops.flash_attention(q, k, v, causal=causal, scale=scale)
+    y = out.reshape(B, S, -1) @ params["w_o"]
+    if return_kv:
+        return y, (ckv, k_rope)
+    return y
+
+
+def mla_decode(params, cfg: ModelConfig, x_t, cache: dict, position,
+               layer_idx: int, kv_update: str = "scatter"):
+    """Absorbed-form decode: score/aggregate in the 512-d latent space.
+
+    The KV cache stores only (ckv, k_rope) per token — the MLA compression
+    the paper's tree sharing composes with (DESIGN.md §4).
+    """
+    m = cfg.mla
+    B, _ = x_t.shape
+    H = cfg.num_heads
+    x1 = x_t[:, None, :]
+    q_nope, q_rope = _mla_q(params, cfg, x1, position[:, None])
+    q_nope, q_rope = q_nope[:, 0], q_rope[:, 0]  # (B,H,·)
+    ckv_t, kr_t = _mla_latents(params, cfg, x1, position[:, None])
+    S = cache["ckv"].shape[1]
+    ckv_cache = _cache_write(cache["ckv"], ckv_t[:, 0], position, kv_update)
+    kr_cache = _cache_write(cache["k_rope"], kr_t[:, 0], position,
+                            kv_update)
+    # absorb W_uk into q: q_lat (B,H,r)
+    w_uk = params["w_uk"].reshape(m.kv_lora_rank, H, m.qk_nope_head_dim)
+    q_lat = jnp.einsum("bhd,rhd->bhr", q_nope.astype(jnp.float32),
+                       w_uk.astype(jnp.float32))
+    scale = 1.0 / (m.qk_head_dim ** 0.5)
+    logits = (jnp.einsum("bhr,bsr->bhs", q_lat,
+                         ckv_cache.astype(jnp.float32))
+              + jnp.einsum("bhd,bsd->bhs", q_rope.astype(jnp.float32),
+                           kr_cache.astype(jnp.float32))) * scale
+    valid = jnp.arange(S)[None, :] < (position + 1)[:, None]
+    logits = jnp.where(valid[:, None, :], logits, -1e30)
+    p = jax.nn.softmax(logits, axis=-1)
+    o_lat = jnp.einsum("bhs,bsr->bhr", p, ckv_cache.astype(jnp.float32))
+    w_uv = params["w_uv"].reshape(m.kv_lora_rank, H, m.v_head_dim)
+    o = jnp.einsum("bhr,rhd->bhd", o_lat, w_uv.astype(jnp.float32))
+    y = o.reshape(B, -1).astype(x_t.dtype) @ params["w_o"]
+    return y, {"ckv": ckv_cache, "k_rope": kr_cache}
+
+
+def mla_cache_shape(cfg: ModelConfig, batch: int, seq: int, layer_idx: int,
+                    dtype=jnp.bfloat16):
+    m = cfg.mla
+    return {
+        "ckv": jax.ShapeDtypeStruct((batch, seq, m.kv_lora_rank), dtype),
+        "k_rope": jax.ShapeDtypeStruct((batch, seq, m.qk_rope_head_dim), dtype),
+    }

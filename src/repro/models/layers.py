@@ -1,0 +1,132 @@
+"""Shared layer primitives: norms, rope, MLPs, embeddings.
+
+All layers are pure functions over param pytrees (nested dicts of jnp
+arrays).  Initialization helpers return params; apply helpers consume them.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+
+def _dense_init(key, shape, scale: Optional[float] = None, dtype=jnp.float32):
+    fan_in = shape[0]
+    if scale is None:
+        scale = 1.0 / jnp.sqrt(fan_in)
+    return (jax.random.normal(key, shape) * scale).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# RMSNorm
+# ---------------------------------------------------------------------------
+
+def rmsnorm_init(d: int, dtype=jnp.float32):
+    return {"scale": jnp.ones((d,), dtype)}
+
+
+def rmsnorm(params, x, eps: float = 1e-6):
+    from repro.kernels import ops as kops
+
+    return kops.rmsnorm(x, params["scale"], eps=eps)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float):
+    if theta <= 0:
+        return None
+    half = head_dim // 2
+    inv = 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+    return inv  # (half,)
+
+
+def apply_rope(x, positions, theta: float):
+    """x: (..., seq, heads, head_dim); positions: (..., seq)."""
+    if theta <= 0:
+        return x
+    head_dim = x.shape[-1]
+    inv = rope_freqs(head_dim, theta)  # (hd/2,)
+    ang = positions[..., None].astype(jnp.float32) * inv  # (..., seq, hd/2)
+    cos = jnp.cos(ang)[..., None, :]  # broadcast over heads
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLP (gated swiglu / plain)
+# ---------------------------------------------------------------------------
+
+def mlp_init(key, d_model: int, d_ff: int, kind: str = "gated",
+             dtype=jnp.float32):
+    ks = jax.random.split(key, 3)
+    if kind == "gated":
+        return {
+            "w_gate": _dense_init(ks[0], (d_model, d_ff), dtype=dtype),
+            "w_up": _dense_init(ks[1], (d_model, d_ff), dtype=dtype),
+            "w_down": _dense_init(ks[2], (d_ff, d_model), dtype=dtype),
+        }
+    return {
+        "w_up": _dense_init(ks[0], (d_model, d_ff), dtype=dtype),
+        "w_down": _dense_init(ks[1], (d_ff, d_model), dtype=dtype),
+    }
+
+
+def _act(x, act: str):
+    if act == "silu":
+        return jax.nn.silu(x)
+    if act == "gelu":
+        return jax.nn.gelu(x)
+    raise ValueError(act)
+
+
+def mlp(params, x, act: str = "silu"):
+    if "w_gate" in params:
+        h = _act(x @ params["w_gate"], act) * (x @ params["w_up"])
+    else:
+        h = _act(x @ params["w_up"], act)
+    return h @ params["w_down"]
+
+
+# ---------------------------------------------------------------------------
+# Embedding / unembedding
+# ---------------------------------------------------------------------------
+
+def embed_init(key, vocab: int, d_model: int, tie: bool, dtype=jnp.float32):
+    ks = jax.random.split(key, 2)
+    p = {"embedding": (jax.random.normal(ks[0], (vocab, d_model)) * 0.02).astype(dtype)}
+    if not tie:
+        p["lm_head"] = _dense_init(ks[1], (d_model, vocab), dtype=dtype)
+    return p
+
+
+def embed(params, tokens):
+    return jnp.take(params["embedding"], tokens, axis=0)
+
+
+def unembed(params, x, tie: bool):
+    if tie:
+        return x @ params["embedding"].T
+    return x @ params["lm_head"]
+
+
+# ---------------------------------------------------------------------------
+# Sinusoidal positions (whisper)
+# ---------------------------------------------------------------------------
+
+def sinusoidal_positions(num_positions: int, d_model: int):
+    pos = jnp.arange(num_positions, dtype=jnp.float32)[:, None]
+    dim = jnp.arange(d_model // 2, dtype=jnp.float32)[None, :]
+    ang = pos / (10_000.0 ** (2 * dim / d_model))
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+def config_eps(cfg: ModelConfig) -> float:
+    return cfg.norm_eps

@@ -1,0 +1,446 @@
+"""Generic decoder assembly: every assigned architecture is this one module
+instantiated by its ``ModelConfig``.
+
+Public API
+----------
+  init_params(key, cfg, dtype)                     -> params pytree
+  forward(params, cfg, tokens, prefix_embeds=None) -> (logits, aux)   (train)
+  init_cache(cfg, batch, max_seq, dtype)           -> cache *specs*
+  zeros_cache(cfg, batch, max_seq, dtype)          -> concrete zero cache
+  prefill(params, cfg, tokens, cache, ...)         -> (logits, cache)
+  decode_step(params, cfg, tokens_t, cache, pos)   -> (logits, cache)
+
+Cache layout: ``{"layers": (per-layer dict, ...), "cross": optional}`` —
+per-layer entries are dense ring-buffer KV (attn), latent KV (mla), or
+recurrent state (mamba / rwkv).  The tree sampler uses its own paged cache
+(repro/kv) and drives the same per-layer blocks through
+``repro.core.engine``.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as attn
+from repro.models import moe as moe_mod
+from repro.models import ssm
+from repro.models.layers import (
+    embed,
+    embed_init,
+    mlp,
+    mlp_init,
+    rmsnorm,
+    rmsnorm_init,
+    sinusoidal_positions,
+    unembed,
+)
+
+Params = Dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def _layer_init(key, cfg: ModelConfig, layer_idx: int, dtype) -> Params:
+    kind = cfg.layer_kind(layer_idx)
+    ks = jax.random.split(key, 4)
+    p: Params = {"norm1": rmsnorm_init(cfg.d_model, dtype)}
+    if kind == "attn":
+        if cfg.attention_kind == "mla":
+            p["attn"] = attn.mla_init(ks[0], cfg, dtype)
+        else:
+            p["attn"] = attn.gqa_init(ks[0], cfg, dtype)
+    elif kind == "mamba":
+        p["mamba"] = ssm.mamba_init(ks[0], cfg, dtype)
+    elif kind == "rwkv":
+        p["rwkv"] = ssm.rwkv6_init(ks[0], cfg, dtype)
+    else:
+        raise ValueError(kind)
+    if kind == "rwkv":
+        p["norm2"] = rmsnorm_init(cfg.d_model, dtype)
+        p["ffn"] = ssm.rwkv6_channel_mix_init(ks[1], cfg, dtype)
+    else:
+        p["norm2"] = rmsnorm_init(cfg.d_model, dtype)
+        if cfg.moe is not None and cfg.moe.is_moe_layer(layer_idx):
+            p["ffn_moe"] = moe_mod.moe_init(ks[1], cfg, dtype)
+        else:
+            p["ffn"] = mlp_init(ks[1], cfg.d_model, cfg.d_ff,
+                                kind=cfg.mlp_kind, dtype=dtype)
+    if cfg.encoder is not None:  # whisper decoder layer: add cross-attn
+        p["norm_cross"] = rmsnorm_init(cfg.d_model, dtype)
+        p["cross"] = attn.cross_attn_init(ks[2], cfg, cfg.encoder.d_model,
+                                          dtype)
+    return p
+
+
+def _encoder_init(key, cfg: ModelConfig, dtype) -> Params:
+    e = cfg.encoder
+    ks = jax.random.split(key, e.num_layers + 1)
+    enc_cfg = ModelConfig(
+        name="enc", arch_type="dense", num_layers=e.num_layers,
+        d_model=e.d_model, num_heads=e.num_heads, num_kv_heads=e.num_heads,
+        d_ff=e.d_ff, vocab_size=1, rope_theta=0.0, act=cfg.act,
+        mlp_kind="plain",
+    )
+    layers = []
+    for i in range(e.num_layers):
+        lk = jax.random.split(ks[i], 2)
+        layers.append({
+            "norm1": rmsnorm_init(e.d_model, dtype),
+            "attn": attn.gqa_init(lk[0], enc_cfg, dtype),
+            "norm2": rmsnorm_init(e.d_model, dtype),
+            "ffn": mlp_init(lk[1], e.d_model, e.d_ff, kind="plain",
+                            dtype=dtype),
+        })
+    return {"layers": tuple(layers),
+            "norm_f": rmsnorm_init(e.d_model, dtype),
+            "_cfg": enc_cfg}
+
+
+def init_params(key, cfg: ModelConfig, dtype=jnp.float32) -> Params:
+    ks = jax.random.split(key, cfg.num_layers + 3)
+    params: Params = {
+        "embed": embed_init(ks[0], cfg.vocab_size, cfg.d_model,
+                            cfg.tie_embeddings, dtype),
+        "norm_f": rmsnorm_init(cfg.d_model, dtype),
+        "layers": tuple(
+            _layer_init(ks[i + 1], cfg, i, dtype)
+            for i in range(cfg.num_layers)
+        ),
+    }
+    if cfg.encoder is not None:
+        enc = _encoder_init(ks[-1], cfg, dtype)
+        enc.pop("_cfg")
+        params["encoder"] = enc
+    return params
+
+
+# ---------------------------------------------------------------------------
+# encoder (whisper)
+# ---------------------------------------------------------------------------
+
+def encode(params, cfg: ModelConfig, frames):
+    """frames: (B, S_enc, d_enc) precomputed stub embeddings -> (B,S_enc,d)."""
+    e = cfg.encoder
+    x = frames + sinusoidal_positions(frames.shape[1], e.d_model).astype(
+        frames.dtype)[None]
+    ecfg = ModelConfig(
+        name="enc", arch_type="dense", num_layers=e.num_layers,
+        d_model=e.d_model, num_heads=e.num_heads, num_kv_heads=e.num_heads,
+        d_ff=e.d_ff, vocab_size=1, rope_theta=0.0, act=cfg.act,
+        mlp_kind="plain",
+    )
+    positions = jnp.broadcast_to(jnp.arange(frames.shape[1]),
+                                 frames.shape[:2])
+    for lp in params["encoder"]["layers"]:
+        h = rmsnorm(lp["norm1"], x, cfg.norm_eps)
+        x = x + attn.gqa_forward(lp["attn"], ecfg, h, positions, 0,
+                                 causal=False)
+        h = rmsnorm(lp["norm2"], x, cfg.norm_eps)
+        x = x + mlp(lp["ffn"], h, cfg.act)
+    return rmsnorm(params["encoder"]["norm_f"], x, cfg.norm_eps)
+
+
+# ---------------------------------------------------------------------------
+# full-sequence forward (train / eval / prefill-logits)
+# ---------------------------------------------------------------------------
+
+def _ffn_apply(lp: Params, cfg: ModelConfig, h):
+    """Returns (out, aux_loss)."""
+    if "ffn_moe" in lp:
+        return moe_mod.moe_forward(lp["ffn_moe"], cfg, h, cfg.act)
+    return mlp(lp["ffn"], h, cfg.act), jnp.float32(0.0)
+
+
+def _decoder_layer_body(lp: Params, x, positions, cross_k, cross_v, *,
+                        cfg: ModelConfig, layer_idx: int):
+    """One decoder layer (attention/ssm + FFN [+ cross-attn]).
+
+    Standalone so ``jax.checkpoint`` can wrap it for activation remat in
+    the distributed train step.  Returns (x, aux_loss).
+    """
+    i = layer_idx
+    B = x.shape[0]
+    kind = cfg.layer_kind(i)
+    h = rmsnorm(lp["norm1"], x, cfg.norm_eps)
+    if kind == "attn":
+        if cfg.attention_kind == "mla":
+            y = attn.mla_forward(lp["attn"], cfg, h, positions, i)
+        else:
+            y = attn.gqa_forward(lp["attn"], cfg, h, positions, i)
+    elif kind == "mamba":
+        y, _ = ssm.mamba_forward(lp["mamba"], cfg, h)
+    elif kind == "rwkv":
+        zero_shift = jnp.zeros((B, cfg.d_model), h.dtype)
+        zero_wkv = jnp.zeros(
+            (B, cfg.d_model // cfg.rwkv.head_dim, cfg.rwkv.head_dim,
+             cfg.rwkv.head_dim), jnp.float32)
+        y, _ = ssm.rwkv6_time_mix(lp["rwkv"], cfg, h,
+                                  {"wkv": zero_wkv, "shift": zero_shift})
+    x = x + y
+    if cfg.encoder is not None:
+        h = rmsnorm(lp["norm_cross"], x, cfg.norm_eps)
+        x = x + attn.cross_attn_forward(lp["cross"], cfg, h, cross_k,
+                                        cross_v)
+    h = rmsnorm(lp["norm2"], x, cfg.norm_eps)
+    if kind == "rwkv":
+        y, _ = ssm.rwkv6_channel_mix(lp["ffn"], h,
+                                     jnp.zeros((B, cfg.d_model), h.dtype))
+        aux = jnp.float32(0.0)
+    else:
+        y, aux = _ffn_apply(lp, cfg, h)
+    x = x + y
+    return x, aux
+
+
+def forward(params, cfg: ModelConfig, tokens, *,
+            prefix_embeds: Optional[jnp.ndarray] = None,
+            enc_frames: Optional[jnp.ndarray] = None,
+            positions: Optional[jnp.ndarray] = None,
+            remat: bool = False,
+            ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """tokens: (B, S) -> (logits (B, S_total, V), moe_aux scalar).
+
+    ``prefix_embeds``: (B, P, d) modality prefix (vlm/audio stub) prepended
+    before token embeddings; logits cover the full combined sequence.
+    ``remat``: checkpoint each decoder layer (training memory).
+    """
+    B, S = tokens.shape
+    x = embed(params["embed"], tokens)
+    if prefix_embeds is not None and cfg.encoder is None:
+        x = jnp.concatenate([prefix_embeds.astype(x.dtype), x], axis=1)
+    S_tot = x.shape[1]
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(S_tot), (B, S_tot))
+    enc_out = None
+    cross_kv = None
+    if cfg.encoder is not None:
+        frames = enc_frames if enc_frames is not None else prefix_embeds
+        enc_out = encode(params, cfg, frames)
+        cross_kv = [attn.cross_attn_kv(lp["cross"], cfg, enc_out)
+                    for lp in params["layers"]]
+        x = x + sinusoidal_positions(S_tot, cfg.d_model).astype(x.dtype)[None]
+    aux_total = jnp.float32(0.0)
+    dummy_kv = jnp.zeros((B, 1, 1), x.dtype)
+    for i, lp in enumerate(params["layers"]):
+        body = functools.partial(_decoder_layer_body, cfg=cfg, layer_idx=i)
+        if remat:
+            body = jax.checkpoint(body)
+        ck, cv = cross_kv[i] if cross_kv is not None else (dummy_kv, dummy_kv)
+        x, aux = body(lp, x, positions, ck, cv)
+        aux_total = aux_total + aux
+    x = rmsnorm(params["norm_f"], x, cfg.norm_eps)
+    logits = unembed(params["embed"], x, cfg.tie_embeddings)
+    return logits, aux_total
+
+
+# ---------------------------------------------------------------------------
+# dense cache for serve_step / dry-run decode shapes
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg: ModelConfig, batch: int, max_seq: int,
+               dtype=jnp.bfloat16) -> Dict[str, Any]:
+    """ShapeDtypeStruct cache specs (no allocation)."""
+    layers = []
+    for i in range(cfg.num_layers):
+        kind = cfg.layer_kind(i)
+        if kind == "attn":
+            if cfg.attention_kind == "mla":
+                layers.append(attn.mla_cache_shape(cfg, batch, max_seq, i,
+                                                   dtype))
+            else:
+                layers.append(attn.gqa_cache_shape(cfg, batch, max_seq, i,
+                                                   dtype))
+        elif kind == "mamba":
+            layers.append(ssm.mamba_state_shape(cfg, batch, dtype))
+        elif kind == "rwkv":
+            layers.append(ssm.rwkv6_state_shape(cfg, batch, dtype))
+    cache: Dict[str, Any] = {"layers": tuple(layers)}
+    if cfg.encoder is not None:
+        e = cfg.encoder
+        hd = cfg.resolved_head_dim
+        cache["cross"] = tuple(
+            {"k": jax.ShapeDtypeStruct(
+                (batch, e.max_positions, cfg.num_kv_heads, hd), dtype),
+             "v": jax.ShapeDtypeStruct(
+                (batch, e.max_positions, cfg.num_kv_heads, hd), dtype)}
+            for _ in range(cfg.num_layers)
+        )
+    return cache
+
+
+def zeros_cache(cfg: ModelConfig, batch: int, max_seq: int,
+                dtype=jnp.bfloat16):
+    return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype),
+                        init_cache(cfg, batch, max_seq, dtype))
+
+
+# ---------------------------------------------------------------------------
+# decode step (one token per sequence)
+# ---------------------------------------------------------------------------
+
+def decode_step(params, cfg: ModelConfig, tokens_t, cache: Dict[str, Any],
+                position, kv_update: str = "scatter"
+                ) -> Tuple[jnp.ndarray, Dict[str, Any]]:
+    """tokens_t: (B,) int32; position: (B,) write index; returns
+    (logits (B, V), new cache).
+
+    ``kv_update``: "scatter" (per-row dynamic_update_slice) or "masked"
+    (one-hot where; GSPMD-friendly — see attention._cache_write)."""
+    B = tokens_t.shape[0]
+    x = embed(params["embed"], tokens_t)  # (B, d)
+    if cfg.encoder is not None:
+        pos_emb = sinusoidal_positions(cfg.max_position_embeddings,
+                                       cfg.d_model)
+        x = x + pos_emb[position].astype(x.dtype)
+    new_layers = []
+    for i, lp in enumerate(params["layers"]):
+        kind = cfg.layer_kind(i)
+        lc = cache["layers"][i]
+        h = rmsnorm(lp["norm1"], x, cfg.norm_eps)
+        if kind == "attn":
+            if cfg.attention_kind == "mla":
+                y, lc = attn.mla_decode(lp["attn"], cfg, h, lc, position, i,
+                                        kv_update=kv_update)
+            else:
+                y, lc = attn.gqa_decode(lp["attn"], cfg, h, lc, position, i,
+                                        kv_update=kv_update)
+        elif kind == "mamba":
+            y1, st = ssm.mamba_forward(
+                lp["mamba"], cfg, h[:, None, :],
+                {"conv": lc["conv"], "ssm": lc["ssm"]})
+            y, lc = y1[:, 0], {"conv": st["conv"].astype(lc["conv"].dtype),
+                               "ssm": st["ssm"]}
+        elif kind == "rwkv":
+            y1, st = ssm.rwkv6_time_mix(
+                lp["rwkv"], cfg, h[:, None, :],
+                {"wkv": lc["wkv"], "shift": lc["shift"]})
+            y = y1[:, 0]
+            lc = {"wkv": st["wkv"], "shift": st["shift"].astype(lc["shift"].dtype),
+                  "shift_ffn": lc["shift_ffn"]}
+        x = x + y
+        if cfg.encoder is not None:
+            h = rmsnorm(lp["norm_cross"], x, cfg.norm_eps)
+            ck, cv = cache["cross"][i]["k"], cache["cross"][i]["v"]
+            hd = cfg.resolved_head_dim
+            q = (h @ lp["cross"]["w_q"]).reshape(B, cfg.num_heads, hd)
+            lengths = jnp.full((B,), ck.shape[1], jnp.int32)
+            from repro.kernels import ops as kops
+
+            o = kops.decode_attention(q, ck, cv, lengths)
+            x = x + o.reshape(B, -1) @ lp["cross"]["w_o"]
+        h = rmsnorm(lp["norm2"], x, cfg.norm_eps)
+        if kind == "rwkv":
+            y1, sh = ssm.rwkv6_channel_mix(lp["ffn"], h[:, None, :],
+                                           lc["shift_ffn"])
+            y = y1[:, 0]
+            lc = dict(lc, shift_ffn=sh.astype(lc["shift_ffn"].dtype))
+        else:
+            y, _ = _ffn_apply(lp, cfg, h[:, None, :])
+            y = y[:, 0] if y.ndim == 3 else y
+        x = x + y
+        new_layers.append(lc)
+    x = rmsnorm(params["norm_f"], x, cfg.norm_eps)
+    logits = unembed(params["embed"], x, cfg.tie_embeddings)
+    new_cache = dict(cache, layers=tuple(new_layers))
+    return logits, new_cache
+
+
+# ---------------------------------------------------------------------------
+# prefill: full forward + cache population
+# ---------------------------------------------------------------------------
+
+def prefill(params, cfg: ModelConfig, tokens, max_seq: int, *,
+            prefix_embeds=None, enc_frames=None, dtype=jnp.bfloat16
+            ) -> Tuple[jnp.ndarray, Dict[str, Any]]:
+    """Run full forward over the prompt and build a dense decode cache.
+
+    Returns (last-position logits (B, V), cache ready for decode at
+    position = S_total).
+    """
+    B, S = tokens.shape
+    x = embed(params["embed"], tokens)
+    if prefix_embeds is not None and cfg.encoder is None:
+        x = jnp.concatenate([prefix_embeds.astype(x.dtype), x], axis=1)
+    S_tot = x.shape[1]
+    positions = jnp.broadcast_to(jnp.arange(S_tot), (B, S_tot))
+    cache = zeros_cache(cfg, B, max_seq, dtype)
+    enc_out = None
+    if cfg.encoder is not None:
+        frames = enc_frames if enc_frames is not None else prefix_embeds
+        enc_out = encode(params, cfg, frames)
+        x = x + sinusoidal_positions(S_tot, cfg.d_model).astype(x.dtype)[None]
+    new_layers = []
+    cross = []
+    for i, lp in enumerate(params["layers"]):
+        kind = cfg.layer_kind(i)
+        lc = cache["layers"][i]
+        h = rmsnorm(lp["norm1"], x, cfg.norm_eps)
+        if kind == "attn":
+            if cfg.attention_kind == "mla":
+                y, (ckv, k_rope) = attn.mla_forward(lp["attn"], cfg, h,
+                                                    positions, i,
+                                                    return_kv=True)
+                lc = {
+                    "ckv": jax.lax.dynamic_update_slice(
+                        lc["ckv"], ckv.astype(lc["ckv"].dtype), (0, 0, 0)),
+                    "k_rope": jax.lax.dynamic_update_slice(
+                        lc["k_rope"], k_rope.astype(lc["k_rope"].dtype),
+                        (0, 0, 0)),
+                }
+            else:
+                y, (k, v) = attn.gqa_forward(lp["attn"], cfg, h, positions, i,
+                                             return_kv=True)
+                Sc = lc["k"].shape[1]
+                if Sc < S_tot:  # windowed ring buffer: keep last Sc tokens
+                    k, v = k[:, -Sc:], v[:, -Sc:]
+                    # ring layout: token p lives at slot p % Sc
+                    start = (S_tot - Sc) % Sc
+                    k = jnp.roll(k, start, axis=1)
+                    v = jnp.roll(v, start, axis=1)
+                    lc = {"k": k.astype(lc["k"].dtype),
+                          "v": v.astype(lc["v"].dtype)}
+                else:
+                    lc = {
+                        "k": jax.lax.dynamic_update_slice(
+                            lc["k"], k.astype(lc["k"].dtype), (0, 0, 0, 0)),
+                        "v": jax.lax.dynamic_update_slice(
+                            lc["v"], v.astype(lc["v"].dtype), (0, 0, 0, 0)),
+                    }
+        elif kind == "mamba":
+            y, st = ssm.mamba_forward(lp["mamba"], cfg, h)
+            lc = {"conv": st["conv"].astype(lc["conv"].dtype),
+                  "ssm": st["ssm"]}
+        elif kind == "rwkv":
+            zero = {"wkv": jnp.zeros_like(lc["wkv"]),
+                    "shift": jnp.zeros_like(lc["shift"])}
+            y, st = ssm.rwkv6_time_mix(lp["rwkv"], cfg, h, zero)
+            lc = {"wkv": st["wkv"],
+                  "shift": st["shift"].astype(lc["shift"].dtype),
+                  "shift_ffn": lc["shift_ffn"]}
+        x = x + y
+        if cfg.encoder is not None:
+            hc = rmsnorm(lp["norm_cross"], x, cfg.norm_eps)
+            k_c, v_c = attn.cross_attn_kv(lp["cross"], cfg, enc_out)
+            x = x + attn.cross_attn_forward(lp["cross"], cfg, hc, k_c, v_c)
+            cross.append({"k": k_c.astype(dtype), "v": v_c.astype(dtype)})
+        h = rmsnorm(lp["norm2"], x, cfg.norm_eps)
+        if kind == "rwkv":
+            y, sh = ssm.rwkv6_channel_mix(
+                lp["ffn"], h, jnp.zeros((B, cfg.d_model), h.dtype))
+            lc = dict(lc, shift_ffn=sh.astype(lc["shift_ffn"].dtype))
+        else:
+            y, _ = _ffn_apply(lp, cfg, h)
+        x = x + y
+        new_layers.append(lc)
+    x = rmsnorm(params["norm_f"], x, cfg.norm_eps)
+    logits = unembed(params["embed"], x[:, -1], cfg.tie_embeddings)
+    new_cache: Dict[str, Any] = {"layers": tuple(new_layers)}
+    if cfg.encoder is not None:
+        new_cache["cross"] = tuple(cross)
+    return logits, new_cache

@@ -1,0 +1,240 @@
+"""Mixture-of-Experts FFN: top-k router + grouped-GEMM experts.
+
+TPU-native formulation: tokens are sorted by expert id and processed with
+``jax.lax.ragged_dot`` (megablox-style grouped matmul) — fixed shapes, no
+capacity-factor token dropping, no (T, E, C) dispatch one-hot.  Experts are
+sharded on the ``model`` mesh axis (expert parallelism); GSPMD inserts the
+dispatch collectives.
+
+Supports olmoe (64e top-8), jamba (16e top-2, alternating layers) and
+deepseek-v3 (1 shared + 256 routed top-8, aux-loss-free bias routing,
+sigmoid gates).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, MoEConfig
+from repro.models.layers import _act, _dense_init, mlp, mlp_init
+
+
+def moe_init(key, cfg: ModelConfig, dtype=jnp.float32):
+    m = cfg.moe
+    d = cfg.d_model
+    ks = jax.random.split(key, 6)
+    scale = 1.0 / jnp.sqrt(d)
+    p = {
+        "router": _dense_init(ks[0], (d, m.num_experts), scale=0.02, dtype=jnp.float32),
+        # experts stacked on a leading E axis -> shardable / ragged_dot rhs
+        "w_gate": (jax.random.normal(ks[1], (m.num_experts, d, m.expert_d_ff)) * scale).astype(dtype),
+        "w_up": (jax.random.normal(ks[2], (m.num_experts, d, m.expert_d_ff)) * scale).astype(dtype),
+        "w_down": (jax.random.normal(ks[3], (m.num_experts, m.expert_d_ff, d))
+                   * (1.0 / jnp.sqrt(m.expert_d_ff))).astype(dtype),
+    }
+    if m.router_aux_free_bias:
+        p["router_bias"] = jnp.zeros((m.num_experts,), jnp.float32)
+    if m.num_shared_experts:
+        p["shared"] = mlp_init(ks[4], d, m.num_shared_experts * m.shared_d_ff,
+                               kind="gated", dtype=dtype)
+    return p
+
+
+def router_probs(params, m: MoEConfig, x_flat) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Returns (topk_weights (T,k), topk_ids (T,k)) plus aux info via closure.
+
+    deepseek-v3 style: sigmoid affinity + additive bias for selection, weight
+    from unbiased affinity, renormalized over the selected k.  Classic
+    softmax routing otherwise.
+    """
+    logits = x_flat.astype(jnp.float32) @ params["router"]
+    if m.router_aux_free_bias:
+        affinity = jax.nn.sigmoid(logits)
+        sel_scores = affinity + params["router_bias"][None, :]
+        _, ids = jax.lax.top_k(sel_scores, m.top_k)
+        w = jnp.take_along_axis(affinity, ids, axis=-1)
+        w = w / (jnp.sum(w, axis=-1, keepdims=True) + 1e-20)
+    else:
+        probs = jax.nn.softmax(logits, axis=-1)
+        w, ids = jax.lax.top_k(probs, m.top_k)
+        w = w / (jnp.sum(w, axis=-1, keepdims=True) + 1e-20)
+    return w, ids, logits
+
+
+def load_balance_aux_loss(logits, ids, num_experts: int) -> jnp.ndarray:
+    """Switch-style aux loss: E * sum_e f_e * p_e."""
+    probs = jax.nn.softmax(logits, axis=-1)
+    counts = jnp.zeros((num_experts,), jnp.float32).at[ids.reshape(-1)].add(1.0)
+    f = counts / jnp.maximum(counts.sum(), 1.0)
+    p = probs.mean(axis=0)
+    return num_experts * jnp.sum(f * p)
+
+
+def _ep_mesh_axes():
+    """Detect an ambient mesh with a 'model' axis (set via
+    jax.sharding.use_mesh).  Returns (mesh, fsdp_axes) or (None, ())."""
+    try:
+        mesh = jax.sharding.get_abstract_mesh()
+    except Exception:
+        return None, ()
+    if mesh is None or mesh.empty or "model" not in mesh.axis_names:
+        return None, ()
+    fsdp = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    return mesh, fsdp
+
+
+def moe_forward(params, cfg: ModelConfig, x, act: str = "silu"):
+    """x: (B, S, d) -> (out (B, S, d), aux_loss scalar).
+
+    Under an ambient mesh with a ``model`` axis (jax.sharding.use_mesh)
+    and divisible expert count, dispatches to the explicit expert-parallel
+    shard_map path (``moe_forward_ep``) — GSPMD's native handling of a
+    sharded ragged_dot all-reduces the full (T·k, d_ff) partials, which is
+    catastrophic (§Perf); the EP path reduces one (T, d) psum instead.
+    """
+    m = cfg.moe
+    mesh, fsdp = _ep_mesh_axes()
+    if mesh is not None and m.num_experts % mesh.shape["model"] == 0 \
+            and mesh.shape["model"] > 1:
+        return moe_forward_ep(params, cfg, x, act, fsdp)
+    B, S, d = x.shape
+    xf = x.reshape(B * S, d)
+    T = B * S
+    w, ids, logits = router_probs(params, m, xf)
+
+    # sort token-replicas by expert id -> grouped layout for ragged_dot
+    flat_ids = ids.reshape(-1)                       # (T*k,)
+    sort_idx = jnp.argsort(flat_ids)                 # (T*k,)
+    tok_idx = sort_idx // m.top_k                    # original token per replica
+    x_rep = xf[tok_idx]                              # (T*k, d)
+    group_sizes = jnp.bincount(flat_ids, length=m.num_experts)
+
+    gate = jax.lax.ragged_dot(x_rep, params["w_gate"], group_sizes)
+    up = jax.lax.ragged_dot(x_rep, params["w_up"], group_sizes)
+    h = _act(gate, act) * up
+    y_rep = jax.lax.ragged_dot(h, params["w_down"], group_sizes)  # (T*k, d)
+
+    # unsort and combine with routing weights (f32 accumulation)
+    w_sorted = w.reshape(-1)[sort_idx][:, None]
+    out = jnp.zeros((T, d), jnp.float32).at[tok_idx].add(
+        y_rep.astype(jnp.float32) * w_sorted)
+
+    if m.num_shared_experts:
+        out = out + mlp(params["shared"], xf, act)
+    aux = load_balance_aux_loss(logits, ids, m.num_experts)
+    return out.reshape(B, S, d).astype(x.dtype), aux
+
+
+def _moe_local_compute(xf, w_k, ids, w_gate, w_up, w_down, act: str,
+                       num_experts_global: int,
+                       capacity_factor: float = 0.0):
+    """Per-shard expert compute inside shard_map.
+
+    xf: (T_local, d) tokens; ids/w_k: (T_local, k) global expert routing;
+    w_*: (E_local, ...) this shard's experts (+ we append a zero 'trash'
+    expert for foreign tokens).  Returns this shard's (T_local, d) partial
+    output — summing over the model axis yields the full MoE output.
+
+    ``capacity_factor`` > 0 packs rows into per-expert capacity slots
+    (GShard): expert GEMMs shrink from T·k rows to E_local·cap rows
+    (~8-16x less compute when E >> E_local); overflow rows drop.
+    """
+    E_local = w_gate.shape[0]
+    shard = jax.lax.axis_index("model")
+    lo = shard * E_local
+    T, k = ids.shape
+    d = xf.shape[1]
+    flat_ids = ids.reshape(-1)
+    is_local = (flat_ids >= lo) & (flat_ids < lo + E_local)
+    gid = jnp.where(is_local, flat_ids - lo, E_local)   # trash group last
+    sort_idx = jnp.argsort(gid)
+    tok_idx = sort_idx // k
+    zpad = lambda w: jnp.concatenate(
+        [w, jnp.zeros((1,) + w.shape[1:], w.dtype)], axis=0)
+    wts_sorted = (w_k.reshape(-1)[sort_idx]
+                  * is_local[sort_idx].astype(w_k.dtype))
+
+    if capacity_factor > 0:
+        cap = max(int(capacity_factor * T * k / num_experts_global), 1)
+        gid_s = gid[sort_idx]
+        counts = jnp.bincount(gid_s, length=E_local + 1)
+        starts = jnp.concatenate(
+            [jnp.zeros((1,), counts.dtype), jnp.cumsum(counts)])[:-1]
+        rank = jnp.arange(T * k) - starts[gid_s]        # rank within group
+        kept = (gid_s < E_local) & (rank < cap)
+        slot = jnp.where(kept, gid_s * cap + rank, E_local * cap)
+        x_comp = jnp.zeros((E_local * cap + 1, d), xf.dtype).at[slot].set(
+            xf[tok_idx])
+        group_sizes = jnp.concatenate(
+            [jnp.full((E_local,), cap, jnp.int32),
+             jnp.ones((1,), jnp.int32)])
+        gate = jax.lax.ragged_dot(x_comp, zpad(w_gate), group_sizes)
+        up = jax.lax.ragged_dot(x_comp, zpad(w_up), group_sizes)
+        h = _act(gate, act) * up
+        y_comp = jax.lax.ragged_dot(h, zpad(w_down), group_sizes)
+        y_rep = y_comp[slot] * kept[:, None].astype(y_comp.dtype)
+    else:
+        x_rep = xf[tok_idx]
+        group_sizes = jnp.bincount(gid[sort_idx], length=E_local + 1)
+        gate = jax.lax.ragged_dot(x_rep, zpad(w_gate), group_sizes)
+        up = jax.lax.ragged_dot(x_rep, zpad(w_up), group_sizes)
+        h = _act(gate, act) * up
+        y_rep = jax.lax.ragged_dot(h, zpad(w_down), group_sizes)
+    out = jnp.zeros((T, d), jnp.float32).at[tok_idx].add(
+        y_rep.astype(jnp.float32) * wts_sorted[:, None])
+    return jax.lax.psum(out, "model")
+
+
+def moe_forward_ep(params, cfg: ModelConfig, x, act: str, fsdp) -> tuple:
+    """Expert-parallel MoE via shard_map over the ambient mesh.
+
+    Experts live on the ``model`` axis; tokens stay batch-sharded on
+    (pod, data).  The router runs replicated (its params are replicated);
+    each shard runs ragged_dot over its local experts only and contributes
+    a (T, d) partial that one psum combines — this is the collective
+    schedule GSPMD cannot find on its own (§Perf hillclimb #2).
+    """
+    m = cfg.moe
+    B, S, d = x.shape
+    xf = x.reshape(B * S, d)
+    w, ids, logits = router_probs(params, m, xf)
+
+    P = jax.sharding.PartitionSpec
+    tok = fsdp if fsdp else None
+    n_tok_shards = 1
+    if tok is not None:
+        mesh = jax.sharding.get_abstract_mesh()
+        for a in tok:
+            n_tok_shards *= mesh.shape[a]
+    if tok is not None and (B * S) % n_tok_shards != 0:
+        tok = None  # tiny decode batches: replicate tokens instead
+    body = functools.partial(_moe_local_compute, act=act,
+                             num_experts_global=m.num_experts,
+                             capacity_factor=m.ep_capacity_factor)
+    out = jax.shard_map(
+        body,
+        in_specs=(P(tok, None), P(tok, None), P(tok, None),
+                  P("model", None, None), P("model", None, None),
+                  P("model", None, None)),
+        out_specs=P(tok, None),
+        check_vma=False,
+    )(xf, w.astype(xf.dtype), ids, params["w_gate"], params["w_up"],
+      params["w_down"])
+
+    if m.num_shared_experts:
+        out = out + mlp(params["shared"], xf, act)
+    aux = load_balance_aux_loss(logits, ids, m.num_experts)
+    return out.reshape(B, S, d).astype(x.dtype), aux
+
+
+def update_router_bias(params, ids, m: MoEConfig, lr: float = 1e-3):
+    """deepseek-v3 aux-free balancing: nudge bias against overloaded experts.
+
+    Applied outside the gradient path (the bias receives no gradient).
+    """
+    counts = jnp.zeros((m.num_experts,), jnp.float32).at[ids.reshape(-1)].add(1.0)
+    mean = counts.mean()
+    return params["router_bias"] + lr * jnp.sign(mean - counts)

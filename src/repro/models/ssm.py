@@ -1,0 +1,231 @@
+"""State-space layers: Mamba-1 selective scan (jamba) and RWKV-6 time/channel
+mix (Finch, data-dependent decay).
+
+Branch-state contract for the tree sampler: both layers expose a compact
+recurrent state (``*_state_shape``) that is snapshotted/copied when a search
+path branches — there is no KV cache to share (DESIGN.md §4).
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.kernels import ops as kops
+from repro.models.layers import _dense_init, rmsnorm, rmsnorm_init
+
+
+# ---------------------------------------------------------------------------
+# Mamba-1 (jamba)
+# ---------------------------------------------------------------------------
+
+def mamba_init(key, cfg: ModelConfig, dtype=jnp.float32):
+    mc = cfg.mamba
+    d = cfg.d_model
+    d_in = mc.expand * d
+    dtr = mc.resolved_dt_rank(d)
+    ks = jax.random.split(key, 8)
+    A = jnp.broadcast_to(jnp.arange(1, mc.d_state + 1, dtype=jnp.float32),
+                         (d_in, mc.d_state))
+    return {
+        "w_in": _dense_init(ks[0], (d, 2 * d_in), dtype=dtype),
+        "conv_w": (jax.random.normal(ks[1], (mc.d_conv, d_in)) * 0.1).astype(dtype),
+        "conv_b": jnp.zeros((d_in,), dtype),
+        "w_x": _dense_init(ks[2], (d_in, dtr + 2 * mc.d_state), dtype=dtype),
+        "w_dt": _dense_init(ks[3], (dtr, d_in), dtype=dtype),
+        "dt_bias": jnp.full((d_in,), -4.6, dtype),  # softplus^-1(0.01)
+        "A_log": jnp.log(A).astype(dtype),
+        "D": jnp.ones((d_in,), dtype),
+        "w_out": _dense_init(ks[4], (d_in, d), dtype=dtype),
+    }
+
+
+def _mamba_ssm_scan(u, dt, B_, C_, A, D, h0):
+    """Selective scan. u,dt: (B,T,d_in); B_,C_: (B,T,N); A: (d_in,N);
+    h0: (B,d_in,N). Returns (y (B,T,d_in), h_final).
+
+    dA / dBu are formed *inside* the scan body: materializing the
+    (B, T, d_in, N) discretized tensors up front costs T x the state size
+    in HBM traffic and dominated the jamba prefill roofline (§Perf #2,
+    iteration 3)."""
+    def step(h, inp):
+        u_t, dt_t, B_t, C_t = inp                       # (B,d_in)/(B,N)
+        dA_t = jnp.exp(dt_t[..., None] * A[None])       # (B,d_in,N)
+        dBu_t = (dt_t * u_t)[..., None] * B_t[:, None, :]
+        h = dA_t * h + dBu_t
+        y = jnp.einsum("bdn,bn->bd", h, C_t)
+        return h, y
+
+    xs = (jnp.moveaxis(u, 1, 0), jnp.moveaxis(dt, 1, 0),
+          jnp.moveaxis(B_, 1, 0), jnp.moveaxis(C_, 1, 0))
+    h_final, ys = jax.lax.scan(step, h0, xs)
+    y = jnp.moveaxis(ys, 0, 1) + u * D[None, None]
+    return y, h_final
+
+
+def mamba_forward(params, cfg: ModelConfig, x, state=None, mask=None,
+                  last_idx=None):
+    """x: (B,T,d). state: {"conv": (B,d_conv-1,d_in), "ssm": (B,d_in,N)}.
+    Returns (y, new_state).
+
+    ``mask`` (B,T): right-padding mask.  Padded steps freeze the SSM state
+    (dt -> 0 makes dA=I, dBu=0); ``last_idx`` (B,) selects the conv context
+    ending at the last *real* token so new_state matches the unpadded run.
+    """
+    mc = cfg.mamba
+    B, T, d = x.shape
+    d_in = mc.expand * d
+    dtr = mc.resolved_dt_rank(d)
+    xz = x @ params["w_in"]
+    u, z = jnp.split(xz, 2, axis=-1)  # (B,T,d_in) each
+    # depthwise causal conv over time, with carried context
+    if state is None:
+        conv_ctx = jnp.zeros((B, mc.d_conv - 1, d_in), u.dtype)
+        h0 = jnp.zeros((B, d_in, mc.d_state), jnp.float32)
+    else:
+        conv_ctx, h0 = state["conv"].astype(u.dtype), state["ssm"].astype(jnp.float32)
+    u_pad = jnp.concatenate([conv_ctx, u], axis=1)  # (B, T+dc-1, d_in)
+    idx = jnp.arange(T)[:, None] + jnp.arange(mc.d_conv)[None, :]
+    windows = u_pad[:, idx]                          # (B,T,dc,d_in)
+    u_conv = jax.nn.silu(jnp.einsum("btcd,cd->btd", windows, params["conv_w"])
+                         + params["conv_b"])
+    xp = u_conv @ params["w_x"]
+    dt_in, B_, C_ = jnp.split(xp, [dtr, dtr + mc.d_state], axis=-1)
+    dt = jax.nn.softplus(dt_in @ params["w_dt"] + params["dt_bias"])
+    if mask is not None:
+        dt = dt * mask[..., None].astype(dt.dtype)
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))
+    y, h_final = kops.mamba_scan(u_conv.astype(jnp.float32),
+                                 dt.astype(jnp.float32),
+                                 B_.astype(jnp.float32),
+                                 C_.astype(jnp.float32), A,
+                                 params["D"].astype(jnp.float32), h0)
+    y = (y.astype(x.dtype) * jax.nn.silu(z)) @ params["w_out"]
+    if last_idx is not None:
+        # conv context ending at the last real token: u_pad rows
+        # [L, L+dc-2] where L = last_idx+1 (u_pad row t+dc-1 = token t)
+        new_conv = jax.vmap(
+            lambda up, s: jax.lax.dynamic_slice(
+                up, (s, 0), (mc.d_conv - 1, d_in)))(u_pad, last_idx + 1)
+    else:
+        new_conv = u_pad[:, -(mc.d_conv - 1):]
+    new_state = {"conv": new_conv, "ssm": h_final}
+    return y, new_state
+
+
+def mamba_state_shape(cfg: ModelConfig, batch: int, dtype=jnp.bfloat16):
+    mc = cfg.mamba
+    d_in = mc.expand * cfg.d_model
+    return {
+        "conv": jax.ShapeDtypeStruct((batch, mc.d_conv - 1, d_in), dtype),
+        "ssm": jax.ShapeDtypeStruct((batch, d_in, mc.d_state), jnp.float32),
+    }
+
+
+# ---------------------------------------------------------------------------
+# RWKV-6 (Finch)
+# ---------------------------------------------------------------------------
+
+def rwkv6_init(key, cfg: ModelConfig, dtype=jnp.float32):
+    rc = cfg.rwkv
+    d = cfg.d_model
+    H = d // rc.head_dim
+    ks = jax.random.split(key, 16)
+    p = {
+        # token-shift data-dependent mixing (LoRA over 5 targets: r,k,v,w,g)
+        "mix_base": (jax.random.normal(ks[0], (5, d)) * 0.02).astype(dtype),
+        "mix_lora_a": _dense_init(ks[1], (d, rc.token_shift_lora), dtype=dtype),
+        "mix_lora_b": (jax.random.normal(ks[2], (5, rc.token_shift_lora, d)) * 0.02).astype(dtype),
+        "w_r": _dense_init(ks[3], (d, d), dtype=dtype),
+        "w_k": _dense_init(ks[4], (d, d), dtype=dtype),
+        "w_v": _dense_init(ks[5], (d, d), dtype=dtype),
+        "w_g": _dense_init(ks[6], (d, d), dtype=dtype),
+        "w_o": _dense_init(ks[7], (d, d), dtype=dtype),
+        # data-dependent decay: w = exp(-exp(base + lora(x)))
+        "decay_base": jnp.full((d,), -6.0, dtype),
+        "decay_lora_a": _dense_init(ks[8], (d, rc.decay_lora), dtype=dtype),
+        "decay_lora_b": (jax.random.normal(ks[9], (rc.decay_lora, d)) * 0.02).astype(dtype),
+        "bonus_u": (jax.random.normal(ks[10], (H, rc.head_dim)) * 0.02).astype(dtype),
+        "ln_x": rmsnorm_init(d, dtype),
+    }
+    return p
+
+
+def rwkv6_time_mix(params, cfg: ModelConfig, x, state, mask=None,
+                   last_idx=None):
+    """RWKV6 time-mix. x: (B,T,d); state {"wkv": (B,H,D,D) f32,
+    "shift": (B,d)}. Returns (y, new_state).
+
+    ``mask`` (B,T): padded steps freeze the wkv state (w -> 1, k -> 0);
+    ``last_idx`` picks the token-shift state at the last real token.
+    """
+    rc = cfg.rwkv
+    B, T, d = x.shape
+    H, D = d // rc.head_dim, rc.head_dim
+    x_prev = jnp.concatenate([state["shift"][:, None, :].astype(x.dtype),
+                              x[:, :-1]], axis=1)
+    dx = x_prev - x
+    # data-dependent token-shift mix per target (r,k,v,w,g)
+    lora = jnp.tanh(x @ params["mix_lora_a"])  # (B,T,L)
+    mixes = params["mix_base"][:, None, None, :] + jnp.einsum(
+        "btl,sld->sbtd", lora, params["mix_lora_b"])  # (5,B,T,d)
+    xr, xk, xv, xw, xg = (x + dx * mixes[i] for i in range(5))
+    r = (xr @ params["w_r"]).reshape(B, T, H, D)
+    k = (xk @ params["w_k"]).reshape(B, T, H, D)
+    v = (xv @ params["w_v"]).reshape(B, T, H, D)
+    g = jax.nn.silu(xg @ params["w_g"])
+    decay_in = params["decay_base"] + jnp.tanh(
+        xw @ params["decay_lora_a"]) @ params["decay_lora_b"]
+    w = jnp.exp(-jnp.exp(decay_in.astype(jnp.float32))).reshape(B, T, H, D)
+    if mask is not None:
+        m = mask[:, :, None, None].astype(w.dtype)
+        w = w * m + (1.0 - m)   # identity decay on pads
+        k = k * m.astype(k.dtype)  # no kv contribution from pads
+    out, wkv_new = kops.wkv6(r, k, v, w.astype(r.dtype), params["bonus_u"],
+                             state["wkv"])
+    out = rmsnorm(params["ln_x"], out.reshape(B, T, d), cfg.norm_eps)
+    y = (out * g) @ params["w_o"]
+    if last_idx is not None:
+        shift = x[jnp.arange(B), last_idx]
+    else:
+        shift = x[:, -1, :]
+    return y, {"wkv": wkv_new, "shift": shift}
+
+
+def rwkv6_channel_mix_init(key, cfg: ModelConfig, dtype=jnp.float32):
+    d = cfg.d_model
+    ks = jax.random.split(key, 4)
+    return {
+        "mix_k": (jax.random.normal(ks[0], (d,)) * 0.02).astype(dtype),
+        "w_k": _dense_init(ks[1], (d, cfg.d_ff), dtype=dtype),
+        "w_v": _dense_init(ks[2], (cfg.d_ff, d), dtype=dtype),
+        "w_r": _dense_init(ks[3], (d, d), dtype=dtype),
+    }
+
+
+def rwkv6_channel_mix(params, x, shift_state, last_idx=None):
+    """x: (B,T,d); shift_state: (B,d). Returns (y, new_shift)."""
+    x_prev = jnp.concatenate([shift_state[:, None, :].astype(x.dtype),
+                              x[:, :-1]], axis=1)
+    xk = x + (x_prev - x) * params["mix_k"]
+    kk = jnp.square(jax.nn.relu(xk @ params["w_k"]))
+    rr = jax.nn.sigmoid(x @ params["w_r"])
+    if last_idx is not None:
+        shift = x[jnp.arange(x.shape[0]), last_idx]
+    else:
+        shift = x[:, -1, :]
+    return rr * (kk @ params["w_v"]), shift
+
+
+def rwkv6_state_shape(cfg: ModelConfig, batch: int, dtype=jnp.bfloat16):
+    rc = cfg.rwkv
+    d = cfg.d_model
+    H = d // rc.head_dim
+    return {
+        "wkv": jax.ShapeDtypeStruct((batch, H, rc.head_dim, rc.head_dim),
+                                    jnp.float32),
+        "shift": jax.ShapeDtypeStruct((batch, d), dtype),
+        "shift_ffn": jax.ShapeDtypeStruct((batch, d), dtype),
+    }

@@ -1,0 +1,13 @@
+from repro.optim.adamw import (
+    AdamWState,
+    adamw_init,
+    adamw_update,
+    global_norm,
+    clip_by_global_norm,
+    warmup_constant_schedule,
+)
+
+__all__ = [
+    "AdamWState", "adamw_init", "adamw_update", "global_norm",
+    "clip_by_global_norm", "warmup_constant_schedule",
+]

@@ -1,0 +1,87 @@
+"""AdamW from scratch (decoupled weight decay), pytree-native.
+
+Built for sharded training: the (m, v) moments are pytrees with the same
+structure as params, so whatever sharding rule applies to a parameter applies
+to its optimizer state (ZeRO-3-equivalent under pjit — DESIGN.md §6).
+Master-weight discipline: moments and updates in f32 even for bf16 params.
+
+Schedule per the paper (§3.1): linear warmup (10 steps) to a constant 1e-6.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    step: jnp.ndarray      # () int32
+    m: Any                 # pytree like params (f32)
+    v: Any                 # pytree like params (f32)
+
+
+def adamw_init(params) -> AdamWState:
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return AdamWState(
+        step=jnp.zeros((), jnp.int32),
+        m=jax.tree.map(zeros, params),
+        v=jax.tree.map(zeros, params),
+    )
+
+
+def global_norm(tree) -> jnp.ndarray:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                        for g in leaves))
+
+
+def clip_by_global_norm(grads, max_norm: float) -> Tuple[Any, jnp.ndarray]:
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-12))
+    return jax.tree.map(lambda g: g * scale.astype(g.dtype), grads), norm
+
+
+def warmup_constant_schedule(base_lr: float,
+                             warmup_steps: int) -> Callable[[jnp.ndarray],
+                                                            jnp.ndarray]:
+    def lr_at(step):
+        frac = jnp.minimum(
+            (step.astype(jnp.float32) + 1.0) / max(warmup_steps, 1), 1.0)
+        return base_lr * frac
+    return lr_at
+
+
+def adamw_update(params, grads, state: AdamWState, *,
+                 lr, beta1: float = 0.9, beta2: float = 0.95,
+                 eps: float = 1e-8, weight_decay: float = 0.0
+                 ) -> Tuple[Any, AdamWState]:
+    """One AdamW step.  ``lr`` may be a scalar or a schedule value."""
+    step = state.step + 1
+    t = step.astype(jnp.float32)
+    bc1 = 1.0 - beta1 ** t
+    bc2 = 1.0 - beta2 ** t
+
+    def upd(p, g, m, v):
+        gf = g.astype(jnp.float32)
+        m_new = beta1 * m + (1.0 - beta1) * gf
+        v_new = beta2 * v + (1.0 - beta2) * gf * gf
+        m_hat = m_new / bc1
+        v_hat = v_new / bc2
+        delta = m_hat / (jnp.sqrt(v_hat) + eps)
+        if weight_decay:
+            delta = delta + weight_decay * p.astype(jnp.float32)
+        p_new = p.astype(jnp.float32) - lr * delta
+        return p_new.astype(p.dtype), m_new, v_new
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_m = treedef.flatten_up_to(state.m)
+    flat_v = treedef.flatten_up_to(state.v)
+    out = [upd(p, g, m, v) for p, g, m, v in
+           zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = treedef.unflatten([o[0] for o in out])
+    new_m = treedef.unflatten([o[1] for o in out])
+    new_v = treedef.unflatten([o[2] for o in out])
+    return new_p, AdamWState(step=step, m=new_m, v=new_v)

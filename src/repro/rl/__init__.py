@@ -1,0 +1,3 @@
+from repro.rl.trainer import RLTrainer, RolloutBatch, TrainerMode
+
+__all__ = ["RLTrainer", "RolloutBatch", "TrainerMode"]

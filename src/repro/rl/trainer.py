@@ -1,0 +1,411 @@
+"""RL post-training loop — the paper's three main configurations (Table 1):
+
+  grpo        sequential sampling + GRPO advantage (Eq. 2)
+  grpo_tree   TreePO sampling     + GRPO advantage ("GRPO w/ TreePO Sampling")
+  treepo      TreePO sampling     + tree advantage (Eq. 5, + variants)
+
+Pipeline per step (paper §3.1): oversample queries (3×bsz) → rollout →
+verifiable reward → DAPO dynamic-sampling filter (0 < #correct < G) →
+advantage → K epochs of the clipped token-level PG update (Eq. 1) with
+AdamW (lr 1e-6, 10 warmup steps) — all from a base (untrained) model,
+the "RL-zero" setting the paper emphasizes.
+"""
+from __future__ import annotations
+
+import dataclasses
+import enum
+import time
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig, TrainConfig, TreeConfig
+from repro.core import advantage as adv_mod
+from repro.core.engine import TreeEngine
+from repro.core.loss import dapo_pg_loss, entropy_from_logits, \
+    token_logprobs_from_logits
+from repro.core.sampler import sample_sequential, sample_trees
+from repro.core.tree import QueryTree, Status, ancestor_matrix
+from repro.data.reward import reward_fn
+from repro.data.synthetic_math import MathTaskGenerator
+from repro.data.tokenizer import ByteTokenizer
+from repro.models.model import forward, init_params
+from repro.optim import (
+    adamw_init,
+    adamw_update,
+    clip_by_global_norm,
+    warmup_constant_schedule,
+)
+
+
+class TrainerMode(str, enum.Enum):
+    GRPO = "grpo"
+    GRPO_TREE = "grpo_tree"
+    TREEPO = "treepo"
+
+
+@dataclasses.dataclass
+class RolloutBatch:
+    """Fixed-shape device batch for the PG update."""
+
+    tokens: np.ndarray          # (N, L) prompt+response, right-padded
+    response_mask: np.ndarray   # (N, L) 1 on generated tokens
+    logprobs_old: np.ndarray    # (N, L) rollout logprobs (0 elsewhere)
+    advantages: np.ndarray      # (N, L) token-broadcast advantage
+    rewards: np.ndarray         # (N,)
+    num_queries: int = 0
+    mean_response_len: float = 0.0
+    leaf_rate: float = 0.0
+
+
+def _bucket_len(n: int, quantum: int = 64) -> int:
+    return max(quantum, -(-n // quantum) * quantum)
+
+
+class RLTrainer:
+    """Single-replica RL trainer (the distributed variant lives in
+    repro.launch: same update function under pjit)."""
+
+    def __init__(self, cfg: ModelConfig, train_cfg: TrainConfig,
+                 tree_cfg: TreeConfig,
+                 mode: TrainerMode = TrainerMode.TREEPO, *,
+                 seed: int = 0, engine_kwargs: Optional[Dict] = None,
+                 data_seed: int = 0, min_difficulty: int = 1,
+                 max_difficulty: int = 2):
+        self.cfg = cfg
+        self.train_cfg = train_cfg
+        self.tree_cfg = tree_cfg
+        self.mode = TrainerMode(mode)
+        self.tok = ByteTokenizer()
+        if cfg.vocab_size < self.tok.vocab_size:
+            raise ValueError("model vocab too small for the byte tokenizer")
+        key = jax.random.PRNGKey(seed)
+        self.params = init_params(key, cfg)
+        self.opt_state = adamw_init(self.params)
+        self.lr_fn = warmup_constant_schedule(train_cfg.learning_rate,
+                                              train_cfg.warmup_steps)
+        self.gen = MathTaskGenerator(data_seed, min_difficulty,
+                                     max_difficulty)
+        self.engine_kwargs = dict(engine_kwargs or {})
+        self._update_fns: Dict[Tuple[int, int], Any] = {}
+        self.step = 0
+        self.metrics_log: List[Dict[str, float]] = []
+        self._rng = np.random.default_rng(seed)
+        import random as _random
+        self._pyrng = _random.Random(seed)
+
+    # -- engine ----------------------------------------------------------------
+
+    def _make_engine(self) -> TreeEngine:
+        """Fresh engine view over the *current* params (on-policy rollout)."""
+        return TreeEngine(self.params, self.cfg, self.tree_cfg,
+                          seed=int(self._rng.integers(2 ** 31)),
+                          **self.engine_kwargs)
+
+    # -- rollout ---------------------------------------------------------------
+
+    def _sample_queries(self, n: int):
+        samples = self.gen.batch(n)
+        prompts = [self.tok.encode(s.query, bos=True) for s in samples]
+        return samples, prompts
+
+    def rollout(self, num_queries: int, progress: float = 0.0
+                ) -> Tuple[List[QueryTree], TreeEngine]:
+        samples, prompts = self._sample_queries(num_queries)
+        engine = self._make_engine()
+        targets = [s.answer for s in samples]
+        if self.mode == TrainerMode.GRPO:
+            trees, _ = sample_sequential(engine, prompts, targets,
+                                         rng=self._pyrng,
+                                         progress=progress)
+        else:
+            trees, _ = sample_trees(engine, prompts, targets,
+                                    rng=self._pyrng, progress=progress)
+        return trees, engine
+
+    # -- reward + advantage ------------------------------------------------------
+
+    def _tree_rewards(self, tree: QueryTree) -> np.ndarray:
+        rs = []
+        for p in tree.finished:
+            if p.status == Status.FAILED:
+                rs.append(0.0)
+            else:
+                rs.append(reward_fn(self.tok.decode(p.tokens), tree.target,
+                                    shaping=self.train_cfg.reward_shaping))
+        return np.asarray(rs, np.float32)
+
+    def _tree_advantages(self, tree: QueryTree,
+                         rewards: np.ndarray) -> np.ndarray:
+        variant = (self.train_cfg.advantage_kind
+                   if self.mode == TrainerMode.TREEPO else "grpo")
+        if variant == "grpo":
+            return np.asarray(adv_mod.grpo_advantage(jnp.asarray(rewards)))
+        anc = ancestor_matrix(tree.finished, self.tree_cfg.max_depth)
+        return np.asarray(adv_mod.treepo_advantage(
+            jnp.asarray(rewards), jnp.asarray(anc), variant=variant))
+
+    def build_batch(self, trees: List[QueryTree]) -> RolloutBatch:
+        """Reward, dynamic-sampling filter, advantage, fixed-shape pack."""
+        kept: List[Tuple[QueryTree, np.ndarray, np.ndarray]] = []
+        for tree in trees:
+            if not tree.finished:
+                continue
+            rewards = self._tree_rewards(tree)
+            if self.train_cfg.dynamic_sampling and rewards.std() <= 1e-6:
+                continue  # DAPO: drop all-correct / all-wrong groups
+            advs = self._tree_advantages(tree, rewards)
+            kept.append((tree, rewards, advs))
+        if not kept:
+            return RolloutBatch(np.zeros((0, 1), np.int32),
+                                np.zeros((0, 1), np.float32),
+                                np.zeros((0, 1), np.float32),
+                                np.zeros((0, 1), np.float32),
+                                np.zeros((0,), np.float32))
+        rows = []
+        for tree, rewards, advs in kept:
+            for p, r, a in zip(tree.finished, rewards, advs):
+                rows.append((tree.prompt_tokens, p.tokens, p.logprobs,
+                             float(r), float(a)))
+        L = _bucket_len(max(len(pr) + len(t) for pr, t, *_ in rows))
+        N = len(rows)
+        tokens = np.full((N, L), ByteTokenizer.PAD, np.int32)
+        rmask = np.zeros((N, L), np.float32)
+        lp_old = np.zeros((N, L), np.float32)
+        advsb = np.zeros((N, L), np.float32)
+        rew = np.zeros((N,), np.float32)
+        resp_lens = []
+        n_leaves = 0
+        for i, (prompt, resp, lps, r, a) in enumerate(rows):
+            n_p, n_r = len(prompt), len(resp)
+            tokens[i, : n_p] = prompt
+            tokens[i, n_p: n_p + n_r] = resp
+            rmask[i, n_p: n_p + n_r] = 1.0
+            lp_old[i, n_p: n_p + n_r] = lps
+            advsb[i, n_p: n_p + n_r] = a
+            rew[i] = r
+            resp_lens.append(n_r)
+        if self.train_cfg.global_norm and \
+                self.mode == TrainerMode.TREEPO and \
+                self.train_cfg.advantage_kind != "grpo":
+            advsb = np.asarray(adv_mod.global_normalize(
+                jnp.asarray(advsb), jnp.asarray(rmask)))
+        for tree, _, _ in kept:
+            n_leaves += tree.num_leaves
+        return RolloutBatch(
+            tokens=tokens, response_mask=rmask, logprobs_old=lp_old,
+            advantages=advsb, rewards=rew, num_queries=len(kept),
+            mean_response_len=float(np.mean(resp_lens)),
+            leaf_rate=n_leaves / max(sum(len(t.finished)
+                                         for t, _, _ in kept), 1))
+
+    # -- update -----------------------------------------------------------------
+
+    def _get_update_fn(self, N: int, L: int):
+        key = (N, L)
+        if key not in self._update_fns:
+            cfg, tc = self.cfg, self.train_cfg
+
+            def loss_fn(params, tokens, rmask, lp_old, advs):
+                logits, aux = forward(params, cfg, tokens)
+                lp_new = token_logprobs_from_logits(
+                    logits[:, :-1], tokens[:, 1:])
+                # align: response token at t is predicted from t-1
+                mask = rmask[:, 1:]
+                loss, metrics = dapo_pg_loss(
+                    lp_new, lp_old[:, 1:], advs[:, 1:], mask,
+                    clip_eps_low=tc.clip_eps_low,
+                    clip_eps_high=tc.clip_eps_high)
+                ent = entropy_from_logits(logits[:, :-1], mask)
+                if cfg.moe is not None:
+                    loss = loss + cfg.moe.aux_loss_coef * aux
+                metrics = dict(metrics, entropy=ent, moe_aux=aux)
+                return loss, metrics
+
+            def update(params, opt_state, tokens, rmask, lp_old, advs,
+                       step):
+                (loss, metrics), grads = jax.value_and_grad(
+                    loss_fn, has_aux=True)(params, tokens, rmask, lp_old,
+                                           advs)
+                grads, gnorm = clip_by_global_norm(grads,
+                                                   tc.max_grad_norm)
+                lr = self.lr_fn(step)
+                new_params, new_opt = adamw_update(
+                    params, grads, opt_state, lr=lr, beta1=tc.beta1,
+                    beta2=tc.beta2, eps=tc.eps,
+                    weight_decay=tc.weight_decay)
+                metrics = dict(metrics, loss=loss, grad_norm=gnorm, lr=lr)
+                return new_params, new_opt, metrics
+
+            self._update_fns[key] = jax.jit(update)
+        return self._update_fns[key]
+
+    def update(self, batch: RolloutBatch) -> Dict[str, float]:
+        if batch.tokens.shape[0] == 0:
+            return {"skipped": 1.0}
+        N, L = batch.tokens.shape
+        fn = self._get_update_fn(N, L)
+        metrics: Dict[str, float] = {}
+        for _ in range(self.train_cfg.ppo_epochs):
+            self.params, self.opt_state, m = fn(
+                self.params, self.opt_state,
+                jnp.asarray(batch.tokens),
+                jnp.asarray(batch.response_mask),
+                jnp.asarray(batch.logprobs_old),
+                jnp.asarray(batch.advantages),
+                jnp.asarray(self.step, jnp.int32))
+            metrics = {k: float(v) for k, v in m.items()}
+        return metrics
+
+    # -- outer loop ---------------------------------------------------------------
+
+    def train_step(self, num_queries: Optional[int] = None,
+                   progress: float = 0.0) -> Dict[str, float]:
+        """One full RL iteration: oversampled rollout → filter → update.
+
+        ``num_queries``: queries per *attempt* (default: batch_size); the
+        paper oversamples 3× and resamples up to 2 extra rounds if dynamic
+        sampling starves the batch.
+        """
+        t0 = time.time()
+        nq = num_queries or self.train_cfg.batch_size
+        all_trees: List[QueryTree] = []
+        sample_tokens = 0
+        rounds = 0
+        target_queries = nq
+        while rounds <= self.train_cfg.max_resample_rounds:
+            want = (target_queries - self._count_kept(all_trees))
+            if want <= 0:
+                break
+            n = want * (self.train_cfg.oversample_factor
+                        if rounds == 0 else 1)
+            trees, engine = self.rollout(n, progress)
+            all_trees.extend(trees)
+            sample_tokens += engine.stats.model_tokens
+            rounds += 1
+            if not self.train_cfg.dynamic_sampling:
+                break
+        batch = self.build_batch(all_trees)
+        metrics = self.update(batch)
+        self.step += 1
+        rewards = batch.rewards
+        metrics.update(
+            step=self.step,
+            reward_mean=float(rewards.mean()) if rewards.size else 0.0,
+            num_trajectories=float(rewards.size),
+            num_queries_kept=float(batch.num_queries),
+            response_len=batch.mean_response_len,
+            leaf_rate=batch.leaf_rate,
+            sample_model_tokens=float(sample_tokens),
+            wall_time=time.time() - t0,
+        )
+        self.metrics_log.append(metrics)
+        return metrics
+
+    def _count_kept(self, trees: List[QueryTree]) -> int:
+        n = 0
+        for tree in trees:
+            if not tree.finished:
+                continue
+            rewards = self._tree_rewards(tree)
+            if (not self.train_cfg.dynamic_sampling
+                    or rewards.std() > 1e-6):
+                n += 1
+        return n
+
+    # -- behavior-cloning warmup ----------------------------------------------------
+    #
+    # The paper trains from the *pretrained* Qwen2.5-7B base model, which
+    # already emits \boxed{} answers under few-shot prompting.  Our toy model
+    # starts from random weights, so a short supervised warmup on synthetic
+    # CoT traces stands in for "base model with a prior" (recorded as a
+    # deviation in DESIGN.md §8).  RL proper then starts from this
+    # checkpoint — still no *RL* signal is used here.
+
+    def bc_warmup(self, steps: int = 100, batch_size: int = 16,
+                  lr: float = 3e-3) -> Dict[str, float]:
+        cfg = self.cfg
+
+        def ce_loss(params, tokens, mask):
+            logits, aux = forward(params, cfg, tokens)
+            lp = token_logprobs_from_logits(logits[:, :-1], tokens[:, 1:])
+            m = mask[:, 1:]
+            loss = -(lp * m).sum() / jnp.maximum(m.sum(), 1.0)
+            if cfg.moe is not None:
+                loss = loss + cfg.moe.aux_loss_coef * aux
+            return loss
+
+        @jax.jit
+        def bc_step(params, opt_state, tokens, mask):
+            loss, grads = jax.value_and_grad(ce_loss)(params, tokens, mask)
+            grads, _ = clip_by_global_norm(grads, 1.0)
+            new_params, new_opt = adamw_update(params, grads, opt_state,
+                                               lr=lr)
+            return new_params, new_opt, loss
+
+        L = None
+        last = 0.0
+        for it in range(steps):
+            samples = self.gen.batch(batch_size)
+            rows = []
+            for s in samples:
+                ids = (self.tok.encode(s.query, bos=True),
+                       self.tok.encode(" " + s.cot, eos=True))
+                rows.append(ids)
+            maxlen = max(len(a) + len(b) for a, b in rows)
+            if L is None or maxlen > L:
+                L = _bucket_len(maxlen)
+            toks = np.full((batch_size, L), ByteTokenizer.PAD, np.int32)
+            mask = np.zeros((batch_size, L), np.float32)
+            for i, (q, c) in enumerate(rows):
+                toks[i, : len(q)] = q
+                toks[i, len(q): len(q) + len(c)] = c
+                mask[i, len(q): len(q) + len(c)] = 1.0
+            self.params, self.opt_state, loss = bc_step(
+                self.params, self.opt_state, jnp.asarray(toks),
+                jnp.asarray(mask))
+            last = float(loss)
+        # reset optimizer state for the RL phase (fresh moments)
+        self.opt_state = adamw_init(self.params)
+        return {"bc_loss": last, "bc_steps": float(steps)}
+
+    # -- evaluation ----------------------------------------------------------------
+
+    def evaluate(self, num_queries: int = 16, k: int = 4,
+                 seed: int = 1234) -> Dict[str, float]:
+        """maj@k accuracy on held-out synthetic tasks (paper's val metric)."""
+        gen = MathTaskGenerator(seed, self.gen.min_difficulty,
+                                self.gen.max_difficulty)
+        samples = gen.batch(num_queries)
+        prompts = [self.tok.encode(s.query, bos=True) for s in samples]
+        eval_tree_cfg = dataclasses.replace(
+            self.tree_cfg, max_width=k,
+            init_divergence_low=k, init_divergence_high=k,
+            branch_factor=1, fallback=False)
+        engine = TreeEngine(self.params, self.cfg, eval_tree_cfg,
+                            seed=seed, **self.engine_kwargs)
+        trees, _ = sample_trees(engine, prompts,
+                                [s.answer for s in samples],
+                                eval_tree_cfg, rng=__import__(
+                                    "random").Random(seed))
+        from collections import Counter
+        from repro.data.reward import extract_boxed, verify_answer
+        correct = 0
+        any_correct = 0
+        for tree, s in zip(trees, samples):
+            answers = []
+            got_one = False
+            for p in tree.finished:
+                a = extract_boxed(self.tok.decode(p.tokens))
+                if a is not None:
+                    answers.append(a)
+                    if verify_answer(a, s.answer):
+                        got_one = True
+            any_correct += int(got_one)
+            if answers:
+                maj = Counter(answers).most_common(1)[0][0]
+                correct += int(verify_answer(maj, s.answer))
+        return {"maj_acc": correct / num_queries,
+                "pass_any": any_correct / num_queries}

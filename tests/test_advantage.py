@@ -1,0 +1,150 @@
+"""Unit tests for the TreePO advantage estimators (paper Eq. 2/5/6/7)."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from numpy.testing import assert_allclose
+
+from repro.core.advantage import (
+    batch_treepo_advantage,
+    global_normalize,
+    grpo_advantage,
+    query_keep_mask,
+    subgroup_sizes,
+    treepo_advantage,
+    _subgroup_means,
+)
+
+
+def _paper_tree():
+    """The Figure-3 example: 8 leaves under root q; subgroups by ancestor.
+
+    anc columns: depth0 (root), depth1 (c1/c2), depth2 (c21/c22 ...).
+    """
+    anc = np.array([
+        [0, 1, 3],   # under c1 / c11
+        [0, 1, 3],
+        [0, 1, 4],
+        [0, 1, 4],
+        [0, 2, 5],   # under c2 / c21
+        [0, 2, 5],
+        [0, 2, 6],   # under c2 / c22  (the worked example)
+        [0, 2, 6],
+    ])
+    rewards = np.array([1, 0, 0, 0, 1, 1, 0, 1], np.float32)
+    return jnp.asarray(rewards), jnp.asarray(anc)
+
+
+def test_subgroup_means_exact():
+    rewards, anc = _paper_tree()
+    means = np.asarray(_subgroup_means(rewards, anc))
+    # depth 0: global mean 0.5 for everyone
+    assert_allclose(means[:, 0], 0.5)
+    # depth 1: first four under c1 -> 0.25; last four under c2 -> 0.75
+    assert_allclose(means[:4, 1], 0.25)
+    assert_allclose(means[4:, 1], 0.75)
+    # depth 2 pairs
+    assert_allclose(means[:2, 2], 0.5)
+    assert_allclose(means[2:4, 2], 0.0)
+    assert_allclose(means[4:6, 2], 1.0)
+    assert_allclose(means[6:, 2], 0.5)
+
+
+def test_subgroup_sizes():
+    _, anc = _paper_tree()
+    sizes = np.asarray(subgroup_sizes(anc))
+    assert_allclose(sizes[:, 0], 8)
+    assert_allclose(sizes[:, 1], 4)
+    assert_allclose(sizes[:, 2], 2)
+
+
+def test_grpo_advantage_matches_eq2():
+    rewards, _ = _paper_tree()
+    adv = np.asarray(grpo_advantage(rewards))
+    want = (np.asarray(rewards) - 0.5) / (np.asarray(rewards).std() + 1e-6)
+    assert_allclose(adv, want, rtol=1e-5)
+
+
+def test_treepo_advantage_eq5_hand_computed():
+    """Leaf 6 (R=0, under c2/c22): Â_j = 0-0.5, 0-0.75, 0-0.5."""
+    rewards, anc = _paper_tree()
+    adv = np.asarray(treepo_advantage(rewards, anc, variant="treepo"))
+    a_j = np.array([-0.5, -0.75, -0.5])
+    want6 = a_j.mean() / (a_j.std() + 1e-6)
+    assert_allclose(adv[6], want6, rtol=1e-4)
+
+
+def test_size_weighted_differs_and_matches_eq6():
+    rewards, anc = _paper_tree()
+    a5 = np.asarray(treepo_advantage(rewards, anc, variant="treepo"))
+    a6 = np.asarray(treepo_advantage(rewards, anc,
+                                     variant="treepo_size_weighted"))
+    assert not np.allclose(a5, a6)
+    # leaf 6 weighted: (8*(-.5)+4*(-.75)+2*(-.5))/14 / std
+    a_j = np.array([-0.5, -0.75, -0.5])
+    w = np.array([8, 4, 2], np.float32)
+    want6 = (w * a_j).sum() / w.sum() / (a_j.std() + 1e-6)
+    assert_allclose(a6[6], want6, rtol=1e-4)
+
+
+def test_subgroup_reject_zeroes_degenerate():
+    """Eq. 7: a subgroup with zero reward-std contributes nothing."""
+    rewards, anc = _paper_tree()
+    adv = np.asarray(treepo_advantage(rewards, anc,
+                                      variant="treepo_subgroup_reject"))
+    # leaves 4,5 sit in subgroup c21 with rewards (1,1): std=0 at depth 2,
+    # so only depths 0,1 count for them
+    a_j = np.array([1 - 0.5, 1 - 0.75])
+    want4 = a_j.mean() / (np.array([0.5, 0.25, 0.0]).std() + 1e-6)
+    assert_allclose(adv[4], want4, rtol=1e-4)
+
+
+def test_no_root_drops_depth0():
+    rewards, anc = _paper_tree()
+    adv = np.asarray(treepo_advantage(rewards, anc,
+                                      variant="treepo_no_root"))
+    a_j = np.array([-0.75, -0.5])  # leaf 6 without the root term
+    want6 = a_j.mean() / (a_j.std() + 1e-6)
+    assert_allclose(adv[6], want6, rtol=1e-4)
+
+
+def test_shift_invariance():
+    """Subgroup baselines center the signal: adding a constant to every
+    reward must not change any treepo advantage."""
+    rewards, anc = _paper_tree()
+    a1 = np.asarray(treepo_advantage(rewards, anc))
+    a2 = np.asarray(treepo_advantage(rewards + 3.7, anc))
+    assert_allclose(a1, a2, rtol=1e-4, atol=1e-5)
+
+
+def test_degenerate_group_is_finite():
+    """All-equal rewards (filtered upstream by dynamic sampling) must not
+    produce NaNs if they slip through."""
+    anc = jnp.asarray(np.zeros((4, 3), np.int64))
+    adv = np.asarray(treepo_advantage(jnp.ones(4), anc))
+    assert np.isfinite(adv).all()
+    assert_allclose(adv, 0.0, atol=1e-3)
+
+
+def test_query_keep_mask():
+    r = jnp.asarray([[1., 1., 1.], [0., 1., 0.], [0., 0., 0.]])
+    keep = np.asarray(query_keep_mask(r))
+    assert list(keep) == [False, True, False]
+
+
+def test_global_normalize_unit_variance():
+    adv = jnp.asarray(np.random.RandomState(0).randn(6, 10).astype("f"))
+    mask = jnp.ones_like(adv)
+    out = np.asarray(global_normalize(adv, mask))
+    # normalized by std -> unit second moment around the (kept) mean
+    centered = out - out.mean()
+    assert abs(centered.std() - 1.0) < 0.05
+
+
+def test_batch_wrapper_shapes():
+    rewards, anc = _paper_tree()
+    r = jnp.stack([rewards, rewards])
+    a = jnp.stack([anc, anc])
+    out = batch_treepo_advantage(r, a, variant="treepo")
+    assert out.shape == (2, 8)
+    out_g = batch_treepo_advantage(r, a, variant="grpo")
+    assert out_g.shape == (2, 8)

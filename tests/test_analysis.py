@@ -1,0 +1,63 @@
+"""HLO collective-bytes parser + roofline-term units."""
+import pytest
+
+from repro.launch.analysis import (
+    HBM_BW,
+    LINK_BW,
+    PEAK_FLOPS,
+    Roofline,
+    collective_bytes,
+)
+
+HLO_SAMPLE = """
+ENTRY %main {
+  %ag = bf16[16,128,4096]{2,1,0} all-gather(%p0), replica_groups={...}
+  %ar = f32[1024]{0} all-reduce(%x), to_apply=%add
+  %rs = bf16[8,512]{1,0} reduce-scatter(%y), dimensions={0}
+  %a2a = bf16[32,64]{1,0} all-to-all(%z), dimensions={0}
+  %cp = f32[16]{0} collective-permute(%w), source_target_pairs={{0,1}}
+  %tup = (f32[128]{0}, f32[256]{0}) all-reduce(%a, %b), to_apply=%add
+  %not_a_collective = f32[999]{0} add(%u, %v)
+}
+"""
+
+
+def test_collective_bytes_parses_all_kinds():
+    out = collective_bytes(HLO_SAMPLE)
+    assert out["all-gather"] == 16 * 128 * 4096 * 2
+    assert out["all-reduce"] == 1024 * 4 + (128 + 256) * 4
+    assert out["reduce-scatter"] == 8 * 512 * 2
+    assert out["all-to-all"] == 32 * 64 * 2
+    assert out["collective-permute"] == 16 * 4
+    assert sum(out.values()) > 0
+
+
+def test_collective_bytes_ignores_non_collectives():
+    out = collective_bytes("%x = f32[10]{0} add(%a, %b)")
+    assert sum(out.values()) == 0
+
+
+def test_roofline_terms_per_device_semantics():
+    ro = Roofline(flops=PEAK_FLOPS, hbm_bytes=HBM_BW,
+                  coll_bytes={"all-reduce": int(2 * LINK_BW)}, chips=256,
+                  model_flops=PEAK_FLOPS * 128)
+    assert ro.t_compute == pytest.approx(1.0)
+    assert ro.t_memory == pytest.approx(1.0)
+    assert ro.t_collective == pytest.approx(2.0)
+    assert ro.bottleneck == "collective"
+    assert ro.useful_flops_frac == pytest.approx(0.5)
+    d = ro.as_dict()
+    assert d["bottleneck"] == "collective"
+
+
+def test_model_flops_estimate_modes():
+    from repro.configs import get_config
+    from repro.launch.analysis import model_flops_estimate
+    cfg = get_config("yi-6b")
+    train = model_flops_estimate(cfg, "train_4k")
+    prefill = model_flops_estimate(cfg, "prefill_32k")
+    decode = model_flops_estimate(cfg, "decode_32k")
+    assert train > prefill > decode > 0
+    # MoE uses active params
+    moe = get_config("olmoe-1b-7b")
+    assert moe.num_active_params() < moe.num_params()

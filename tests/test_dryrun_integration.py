@@ -1,0 +1,35 @@
+"""Dry-run integration: the 512-device placeholder platform is process-
+global state, so this runs in a subprocess (whisper-tiny = the cheapest
+full config).  Marked slow-ish but bounded (~1 min)."""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+ROOT = os.path.join(os.path.dirname(__file__), "..")
+
+
+@pytest.mark.timeout(540)
+def test_dryrun_whisper_decode_single(tmp_path):
+    out = tmp_path / "rec.jsonl"
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(ROOT, "src")
+    env.pop("XLA_FLAGS", None)
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun",
+         "--arch", "whisper-tiny", "--shape", "decode_32k",
+         "--mesh", "single", "--out", str(out)],
+        capture_output=True, text=True, env=env, cwd=ROOT, timeout=520)
+    assert proc.returncode == 0, proc.stdout[-2000:] + proc.stderr[-2000:]
+    recs = [json.loads(l) for l in out.read_text().splitlines()]
+    assert len(recs) == 1
+    r = recs[0]
+    assert r["status"] == "ok"
+    assert r["chips"] == 256
+    ro = r["roofline"]
+    assert ro["flops"] > 0 and ro["hbm_bytes"] > 0
+    assert ro["bottleneck"] in ("compute", "memory", "collective")
+    assert r["memory"] is None or r["memory"].get(
+        "argument_size_in_bytes", 0) >= 0

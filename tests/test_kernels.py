@@ -1,0 +1,156 @@
+"""Per-kernel correctness: Pallas (interpret=True) vs the pure-jnp oracle,
+swept over shapes and dtypes."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from numpy.testing import assert_allclose
+
+from repro.kernels import ref
+from repro.kernels.flash_attention import flash_attention_pallas
+from repro.kernels.paged_attention import paged_attention_pallas
+from repro.kernels.rmsnorm import rmsnorm_pallas
+from repro.kernels.wkv6 import wkv6_pallas
+
+
+def _tol(dtype):
+    return dict(rtol=2e-2, atol=2e-2) if dtype == jnp.bfloat16 \
+        else dict(rtol=2e-5, atol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# rmsnorm
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("shape", [(4, 32), (2, 7, 96), (1, 129, 64),
+                                   (3, 5, 2, 48)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_rmsnorm(shape, dtype):
+    key = jax.random.PRNGKey(0)
+    x = jax.random.normal(key, shape).astype(dtype)
+    sc = jax.random.normal(jax.random.PRNGKey(1), (shape[-1],))
+    got = rmsnorm_pallas(x, sc, interpret=True, block_rows=32)
+    want = ref.rmsnorm_ref(x, sc)
+    assert got.dtype == want.dtype
+    assert_allclose(np.asarray(got, np.float32),
+                    np.asarray(want, np.float32), **_tol(dtype))
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("sq,skv,hq,hkv", [
+    (16, 16, 4, 4),      # MHA, aligned
+    (37, 37, 4, 2),      # GQA 2:1, ragged
+    (8, 40, 4, 1),       # MQA, chunked-prefill style (q_offset)
+    (64, 64, 8, 8),
+])
+@pytest.mark.parametrize("causal,window", [(True, 0), (True, 8), (False, 0)])
+def test_flash_attention(sq, skv, hq, hkv, causal, window):
+    B, D = 2, 32
+    ks = jax.random.split(jax.random.PRNGKey(2), 3)
+    q = jax.random.normal(ks[0], (B, sq, hq, D))
+    k = jax.random.normal(ks[1], (B, skv, hkv, D))
+    v = jax.random.normal(ks[2], (B, skv, hkv, D))
+    q_off = skv - sq
+    got = flash_attention_pallas(q, k, v, causal=causal, window=window,
+                                 q_offset=q_off, blk_q=16, blk_k=16,
+                                 interpret=True)
+    want = ref.attention_ref(q, k, v, causal=causal, window=window,
+                             q_offset=q_off)
+    assert_allclose(np.asarray(got), np.asarray(want), rtol=3e-5, atol=3e-5)
+
+
+@pytest.mark.parametrize("dtype", [jnp.bfloat16])
+def test_flash_attention_bf16(dtype):
+    B, S, H, D = 1, 33, 2, 64
+    ks = jax.random.split(jax.random.PRNGKey(3), 3)
+    q = jax.random.normal(ks[0], (B, S, H, D)).astype(dtype)
+    k = jax.random.normal(ks[1], (B, S, H, D)).astype(dtype)
+    v = jax.random.normal(ks[2], (B, S, H, D)).astype(dtype)
+    got = flash_attention_pallas(q, k, v, blk_q=16, blk_k=16, interpret=True)
+    want = ref.attention_ref(q, k, v)
+    assert got.dtype == dtype
+    assert_allclose(np.asarray(got, np.float32),
+                    np.asarray(want, np.float32), **_tol(dtype))
+
+
+# ---------------------------------------------------------------------------
+# paged attention
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("hq,hkv,window", [(4, 2, 0), (8, 8, 0), (4, 1, 12),
+                                           (4, 2, 5)])
+def test_paged_attention(hq, hkv, window):
+    B, D, P, page, MP = 3, 32, 24, 8, 5
+    ks = jax.random.split(jax.random.PRNGKey(4), 3)
+    q = jax.random.normal(ks[0], (B, hq, D))
+    kp = jax.random.normal(ks[1], (P, page, hkv, D))
+    vp = jax.random.normal(ks[2], (P, page, hkv, D))
+    tables = jnp.array([[3, 5, 1, -1, -1],
+                        [0, 2, 7, 9, -1],
+                        [11, 12, 13, 14, 15]], jnp.int32)
+    lengths = jnp.array([19, 26, 40], jnp.int32)
+    got = paged_attention_pallas(q, kp, vp, tables, lengths, page_size=page,
+                                 window=window, interpret=True)
+    want = ref.paged_attention_ref(q, kp, vp, tables, lengths,
+                                   page_size=page, window=window)
+    assert_allclose(np.asarray(got), np.asarray(want), rtol=3e-5, atol=3e-5)
+
+
+def test_paged_vs_dense_decode():
+    """Paged attention == dense decode attention on the same KV."""
+    B, S, Hq, Hkv, D, page = 2, 24, 4, 2, 16, 8
+    ks = jax.random.split(jax.random.PRNGKey(5), 3)
+    q = jax.random.normal(ks[0], (B, Hq, D))
+    k = jax.random.normal(ks[1], (B, S, Hkv, D))
+    v = jax.random.normal(ks[2], (B, S, Hkv, D))
+    lengths = jnp.array([17, 24], jnp.int32)
+    # build pools from the dense cache
+    kp = k.reshape(B * S // page, page, Hkv, D)
+    vp = v.reshape(B * S // page, page, Hkv, D)
+    tables = jnp.array([[0, 1, 2], [3, 4, 5]], jnp.int32)
+    got = paged_attention_pallas(q, kp, vp, tables, lengths, page_size=page,
+                                 interpret=True)
+    want = ref.decode_attention_ref(q, k, v, lengths)
+    assert_allclose(np.asarray(got), np.asarray(want), rtol=3e-5, atol=3e-5)
+
+
+# ---------------------------------------------------------------------------
+# wkv6
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("B,T,H,D", [(1, 5, 1, 8), (2, 16, 3, 16),
+                                     (1, 33, 2, 64)])
+def test_wkv6(B, T, H, D):
+    ks = jax.random.split(jax.random.PRNGKey(6), 6)
+    r, k, v = (jax.random.normal(ks[i], (B, T, H, D)) for i in range(3))
+    w = jax.nn.sigmoid(jax.random.normal(ks[3], (B, T, H, D)) + 2.0)
+    u = jax.random.normal(ks[4], (H, D))
+    s0 = jax.random.normal(ks[5], (B, H, D, D))
+    got_o, got_s = wkv6_pallas(r, k, v, w, u, s0, interpret=True)
+    want_o, want_s = ref.wkv6_ref(r, k, v, w, u, s0)
+    assert_allclose(np.asarray(got_o), np.asarray(want_o),
+                    rtol=5e-4, atol=5e-4)
+    assert_allclose(np.asarray(got_s), np.asarray(want_s),
+                    rtol=5e-4, atol=5e-4)
+
+
+def test_wkv6_state_chaining():
+    """Running two halves with carried state == one full run."""
+    B, T, H, D = 1, 12, 2, 8
+    ks = jax.random.split(jax.random.PRNGKey(7), 5)
+    r, k, v = (jax.random.normal(ks[i], (B, T, H, D)) for i in range(3))
+    w = jax.nn.sigmoid(jax.random.normal(ks[3], (B, T, H, D)))
+    u = jax.random.normal(ks[4], (H, D))
+    s0 = jnp.zeros((B, H, D, D))
+    o_full, s_full = ref.wkv6_ref(r, k, v, w, u, s0)
+    h = T // 2
+    o1, s1 = wkv6_pallas(r[:, :h], k[:, :h], v[:, :h], w[:, :h], u, s0,
+                         interpret=True)
+    o2, s2 = wkv6_pallas(r[:, h:], k[:, h:], v[:, h:], w[:, h:], u, s1,
+                         interpret=True)
+    assert_allclose(np.asarray(jnp.concatenate([o1, o2], 1)),
+                    np.asarray(o_full), rtol=5e-4, atol=5e-4)
+    assert_allclose(np.asarray(s2), np.asarray(s_full), rtol=5e-4, atol=5e-4)

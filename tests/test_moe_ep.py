@@ -1,0 +1,123 @@
+"""Expert-parallel shard_map MoE: exactness vs the plain path, capacity
+semantics, and the mamba Pallas scan kernel (added in §Perf iterations)."""
+import dataclasses
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+ROOT = os.path.join(os.path.dirname(__file__), "..")
+
+# These tests need >1 device for the model axis; run in a subprocess with
+# a forced device count (device count is process-global).
+_SUBPROC_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import dataclasses
+import jax, jax.numpy as jnp, numpy as np
+from repro.configs import get_config
+from repro.models.model import init_params, forward
+
+mesh = jax.make_mesh((2, 4), ("data", "model"),
+                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+for arch in ["olmoe-1b-7b", "deepseek-v3-671b"]:
+    cfg = get_config(arch, smoke=True)
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 16), 0,
+                              cfg.vocab_size)
+    l_plain, _ = forward(params, cfg, toks)
+    with jax.set_mesh(mesh):
+        l_ep, _ = jax.jit(lambda p, t: forward(p, cfg, t))(params, toks)
+    np.testing.assert_allclose(np.asarray(l_plain), np.asarray(l_ep),
+                               rtol=3e-4, atol=3e-4)
+    # ample-capacity GShard packing is also exact
+    cfg_cap = dataclasses.replace(
+        cfg, moe=dataclasses.replace(cfg.moe, ep_capacity_factor=8.0))
+    with jax.set_mesh(mesh):
+        l_cap, _ = jax.jit(lambda p, t: forward(p, cfg_cap, t))(params,
+                                                                toks)
+    np.testing.assert_allclose(np.asarray(l_plain), np.asarray(l_cap),
+                               rtol=3e-4, atol=3e-4)
+    print(arch, "EP ok")
+print("ALL_OK")
+"""
+
+
+@pytest.mark.timeout(540)
+def test_ep_moe_matches_plain_subprocess():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(ROOT, "src")
+    env.pop("XLA_FLAGS", None)
+    proc = subprocess.run([sys.executable, "-c", _SUBPROC_SCRIPT],
+                          capture_output=True, text=True, env=env,
+                          cwd=ROOT, timeout=520)
+    assert proc.returncode == 0, proc.stdout[-1500:] + proc.stderr[-1500:]
+    assert "ALL_OK" in proc.stdout
+
+
+def test_mamba_scan_pallas_matches_ref():
+    from repro.kernels.mamba_scan import mamba_scan_pallas
+    from repro.kernels.ref import mamba_scan_ref
+    B, T, d_in, N = 2, 9, 16, 4
+    ks = jax.random.split(jax.random.PRNGKey(2), 6)
+    u = jax.random.normal(ks[0], (B, T, d_in))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B, T, d_in)))
+    Bm = jax.random.normal(ks[2], (B, T, N))
+    Cm = jax.random.normal(ks[3], (B, T, N))
+    A = -jnp.exp(jax.random.normal(ks[4], (d_in, N)))
+    D = jnp.ones(d_in)
+    h0 = jax.random.normal(ks[5], (B, d_in, N))
+    y1, h1 = mamba_scan_pallas(u, dt, Bm, Cm, A, D, h0, blk_d=8,
+                               interpret=True)
+    y2, h2 = mamba_scan_ref(u, dt, Bm, Cm, A, D, h0)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2),
+                               rtol=2e-5, atol=2e-5)
+    np.testing.assert_allclose(np.asarray(h1), np.asarray(h2),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_mamba_scan_state_chaining():
+    from repro.kernels.ref import mamba_scan_ref
+    B, T, d_in, N = 1, 8, 4, 2
+    ks = jax.random.split(jax.random.PRNGKey(3), 5)
+    u = jax.random.normal(ks[0], (B, T, d_in))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B, T, d_in)))
+    Bm = jax.random.normal(ks[2], (B, T, N))
+    Cm = jax.random.normal(ks[3], (B, T, N))
+    A = -jnp.exp(jax.random.normal(ks[4], (d_in, N)))
+    D = jnp.zeros(d_in)
+    h0 = jnp.zeros((B, d_in, N))
+    y_full, h_full = mamba_scan_ref(u, dt, Bm, Cm, A, D, h0)
+    h = T // 2
+    y1, s1 = mamba_scan_ref(u[:, :h], dt[:, :h], Bm[:, :h], Cm[:, :h],
+                            A, D, h0)
+    y2, s2 = mamba_scan_ref(u[:, h:], dt[:, h:], Bm[:, h:], Cm[:, h:],
+                            A, D, s1)
+    np.testing.assert_allclose(np.asarray(jnp.concatenate([y1, y2], 1)),
+                               np.asarray(y_full), rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(s2), np.asarray(h_full),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_masked_kv_update_matches_scatter():
+    from repro.configs import get_config
+    from repro.models.model import decode_step, init_params, prefill
+    cfg = get_config("yi-6b", smoke=True)
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    B, Sp, N = 2, 6, 3
+    toks = jax.random.randint(jax.random.PRNGKey(1), (B, Sp + N), 0,
+                              cfg.vocab_size)
+    _, c1 = prefill(params, cfg, toks[:, :Sp], Sp + N, dtype=jnp.float32)
+    _, c2 = prefill(params, cfg, toks[:, :Sp], Sp + N, dtype=jnp.float32)
+    for t in range(N - 1):
+        pos = jnp.full((B,), Sp + t, jnp.int32)
+        l1, c1 = decode_step(params, cfg, toks[:, Sp + t], c1, pos,
+                             kv_update="scatter")
+        l2, c2 = decode_step(params, cfg, toks[:, Sp + t], c2, pos,
+                             kv_update="masked")
+        np.testing.assert_allclose(np.asarray(l1), np.asarray(l2),
+                                   rtol=1e-5, atol=1e-5)

@@ -1,0 +1,118 @@
+"""Branching / fallback / heuristic policy units (paper §2.2, §4.4)."""
+import random
+
+import pytest
+
+from repro.configs.base import TreeConfig
+from repro.core.branching import (
+    assign_branches,
+    depth_budget,
+    heuristic_tau,
+    init_divergence,
+    softmax_weights,
+)
+from repro.core.fallback import pick_fallback
+from repro.core.tree import Path, QueryTree, Status
+
+
+def _tc(**kw):
+    base = dict(max_depth=4, segment_len=8, max_width=8, branch_factor=2,
+                init_divergence_low=2, init_divergence_high=2)
+    base.update(kw)
+    return TreeConfig(**base)
+
+
+def test_depth_budget_binary_growth():
+    tc = _tc()
+    assert depth_budget(tc, 0, 2, 0) == 2
+    assert depth_budget(tc, 1, 2, 0) == 4
+    assert depth_budget(tc, 2, 2, 0) == 8
+    assert depth_budget(tc, 3, 2, 0) == 8      # capped at w
+    assert depth_budget(tc, 3, 2, 5) == 3      # width transfer to finished
+    assert depth_budget(tc, 3, 2, 8) == 0
+
+
+def test_init_divergence_fixed_vs_random():
+    rng = random.Random(0)
+    tc = _tc(init_divergence_low=3, init_divergence_high=3)
+    assert init_divergence(tc, rng) == 3
+    tc = _tc(init_divergence_low=2, init_divergence_high=8)
+    draws = {init_divergence(tc, rng) for _ in range(100)}
+    assert draws <= set(range(2, 9)) and len(draws) > 3
+
+
+def test_assign_branches_uniform_budget_transfer():
+    tc = _tc(branch_heuristic="uniform")
+    rng = random.Random(0)
+    forks = assign_branches(tc, [-1.0, -2.0, -3.0], 7, rng)
+    assert sum(forks) == 7 and all(f >= 1 for f in forks)
+
+
+def test_assign_branches_prune_when_budget_short():
+    tc = _tc()
+    forks = assign_branches(tc, [-1.0] * 5, 3, random.Random(0))
+    assert sum(forks) == 3 and forks.count(0) == 2
+
+
+def test_low_prob_encourage_prefers_uncertain():
+    tc = _tc(branch_heuristic="low_prob", heuristic_temp=0.5)
+    forks = assign_branches(tc, [-0.1, -5.0], 10, random.Random(0))
+    assert forks[1] > forks[0]          # low prob path gets more budget
+
+
+def test_high_prob_encourage_prefers_confident():
+    tc = _tc(branch_heuristic="high_prob", heuristic_temp=0.5)
+    forks = assign_branches(tc, [-0.1, -5.0], 10, random.Random(0))
+    assert forks[0] > forks[1]
+
+
+def test_scheduled_tau_anneals():
+    tc = _tc(branch_heuristic="scheduled_low_prob")
+    assert heuristic_tau(tc, 0.0) == pytest.approx(5.0)
+    assert heuristic_tau(tc, 1.0) == pytest.approx(1.0)
+    assert heuristic_tau(tc, 0.5) == pytest.approx(3.0)
+
+
+def test_softmax_weights_sum_to_one():
+    w = softmax_weights([-1.0, -2.0, -3.0], tau=2.0, sign=-1.0)
+    assert sum(w) == pytest.approx(1.0)
+    assert w[2] > w[0]
+
+
+def _leaf(depth, bounds, reason="boxed"):
+    p = Path(query_idx=0, depth=depth, node_ids=list(range(depth + 1)),
+             tokens=list(range(bounds[-1])), logprobs=[0.0] * bounds[-1],
+             seg_bounds=list(bounds))
+    p.status = Status.LEAF
+    p.finish_reason = reason
+    return p
+
+
+def test_fallback_candidates_filter():
+    tree = QueryTree(query_idx=0, prompt_tokens=[1], target="x")
+    tree.finished = [
+        _leaf(3, [0, 8, 16, 24], "boxed"),
+        _leaf(3, [0, 8, 16, 24], "length"),      # not a candidate
+        _leaf(1, [0, 8], "eos"),                 # too shallow
+    ]
+    cands = tree.fallback_candidates()
+    assert len(cands) == 1 and cands[0].finish_reason == "boxed"
+
+
+def test_pick_fallback_depth_range():
+    tree = QueryTree(query_idx=0, prompt_tokens=[1], target="x")
+    tree.finished = [_leaf(4, [0, 8, 16, 24, 32], "eos")]
+    rng = random.Random(0)
+    seen = set()
+    for _ in range(50):
+        src, j = pick_fallback(tree, rng)
+        assert 1 <= j <= 3
+        seen.add(j)
+    assert len(seen) >= 2  # random over boundaries
+
+
+def test_pick_fallback_none_when_no_candidates():
+    tree = QueryTree(query_idx=0, prompt_tokens=[1], target="x")
+    tree.finished = [_leaf(3, [0, 8, 16, 24], "repetition")]
+    tree.finished[0].status = Status.FAILED
+    assert pick_fallback(tree, random.Random(0)) is None

@@ -1,0 +1,119 @@
+"""Sharding-rule tests (host-scale mesh; the 512-device mesh is dryrun's)."""
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.configs import ASSIGNED_ARCHS, get_config
+from repro.distributed.sharding import (
+    batch_pspec,
+    cache_pspecs,
+    fsdp_axes,
+    param_pspecs,
+)
+from repro.models.model import init_cache, init_params
+
+
+def _mesh_1dev(axes=("data", "model")):
+    devs = np.asarray(jax.devices()[:1]).reshape((1,) * len(axes))
+    return Mesh(devs, axes)
+
+
+@pytest.mark.parametrize("arch", ASSIGNED_ARCHS)
+def test_param_pspecs_cover_tree(arch):
+    """Specs exist for every leaf and never exceed the leaf's rank."""
+    cfg = get_config(arch)
+    mesh = _mesh_1dev()
+    pshape = jax.eval_shape(
+        functools.partial(init_params, cfg=cfg, dtype=jnp.bfloat16),
+        jax.ShapeDtypeStruct((2,), jnp.uint32))
+    specs = param_pspecs(cfg, pshape, mesh)
+    flat_p = jax.tree.leaves(pshape)
+    flat_s = jax.tree.leaves(specs, is_leaf=lambda x: isinstance(x, P))
+    assert len(flat_p) == len(flat_s)
+    for leaf, spec in zip(flat_p, flat_s):
+        assert len(spec) <= len(leaf.shape)
+
+
+def test_divisibility_filter():
+    """whisper's 51865 vocab is indivisible by 16 -> must be replicated."""
+    class FakeAxis(dict):
+        pass
+    devs = np.asarray(jax.devices()[:1]).reshape(1, 1)
+    mesh = Mesh(devs, ("data", "model"))
+    # emulate a 16-way model axis via a mesh-shape monkeypatch
+    import repro.distributed.sharding as sh
+    spec = sh._filter_spec(("model", None), (51865, 384), mesh)
+    # 1-way axis -> dropped regardless
+    assert spec == P(None, None)
+
+
+def test_filter_spec_drops_uneven():
+    import repro.distributed.sharding as sh
+
+    class M:
+        axis_names = ("data", "model")
+        shape = {"data": 16, "model": 16}
+    spec = sh._filter_spec(("model", ("data",)), (51865, 384), M)
+    assert spec[0] is None          # 51865 % 16 != 0 -> dropped
+    assert spec[1] is not None      # 384 % 16 == 0 -> kept
+    spec2 = sh._filter_spec((("data",), "model"), (64, 384), M)
+    assert spec2 == P(("data",), "model")
+
+
+def test_batch_pspec():
+    import repro.distributed.sharding as sh
+
+    class M:
+        axis_names = ("pod", "data", "model")
+        shape = {"pod": 2, "data": 16, "model": 16}
+    assert sh.batch_pspec(M, 256) == P(("pod", "data"))
+    assert sh.batch_pspec(M, 16) == P("data")
+    assert sh.batch_pspec(M, 1) == P(None)
+
+
+def test_cache_pspecs_seq_on_model():
+    import repro.distributed.sharding as sh
+
+    class M:
+        axis_names = ("data", "model")
+        shape = {"data": 16, "model": 16}
+    cfg = get_config("yi-6b")
+    cache = init_cache(cfg, 128, 32768, jnp.bfloat16)
+    specs = sh.cache_pspecs(cfg, cache, M)
+    k_spec = specs["layers"][0]["k"]
+    assert k_spec[0] == "data" and k_spec[1] == "model"
+
+
+def test_cache_pspecs_recurrent_state():
+    import repro.distributed.sharding as sh
+
+    class M:
+        axis_names = ("data", "model")
+        shape = {"data": 16, "model": 16}
+    cfg = get_config("rwkv6-7b")
+    cache = init_cache(cfg, 128, 32768, jnp.bfloat16)
+    specs = sh.cache_pspecs(cfg, cache, M)
+    wkv_spec = specs["layers"][0]["wkv"]
+    assert wkv_spec[0] == "data" and wkv_spec[1] == "model"  # heads
+
+
+def test_jit_with_specs_on_one_device():
+    """End-to-end: sharded jit runs on the single local device."""
+    cfg = get_config("yi-6b", smoke=True)
+    mesh = _mesh_1dev()
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    pshape = jax.eval_shape(lambda: params)
+    specs = param_pspecs(cfg, pshape, mesh)
+    from repro.models.model import forward
+
+    with mesh:
+        from repro.distributed.sharding import to_named_sharding
+        out = jax.jit(
+            lambda p, t: forward(p, cfg, t)[0],
+            in_shardings=(to_named_sharding(mesh, specs), None),
+        )(params, jnp.zeros((2, 8), jnp.int32))
+    assert out.shape == (2, 8, cfg.vocab_size)

@@ -1,0 +1,111 @@
+"""RL trainer integration: all three paper modes run a full step; loss and
+advantages are wired correctly; BC warmup reduces CE loss."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.configs.base import TrainConfig, TreeConfig
+from repro.core.loss import dapo_pg_loss, entropy_from_logits
+from repro.rl.trainer import RLTrainer, TrainerMode
+
+ENGINE_KW = dict(num_pages=512, page_size=16, max_slots=32, max_queries=16,
+                 max_prompt_len=256)
+
+
+def _trainer(mode, advantage="treepo", seed=0):
+    cfg = get_config("qwen2.5-7b", smoke=True)
+    tc = TreeConfig(max_depth=4, segment_len=16, max_width=4,
+                    branch_factor=2, init_divergence_low=2,
+                    init_divergence_high=2, temperature=0.9)
+    trc = TrainConfig(batch_size=2, group_size=4, oversample_factor=2,
+                      max_resample_rounds=0, learning_rate=1e-3,
+                      advantage_kind=advantage, reward_shaping=0.1)
+    return RLTrainer(cfg, trc, tc, mode, seed=seed,
+                     engine_kwargs=ENGINE_KW, min_difficulty=1,
+                     max_difficulty=1)
+
+
+def test_loss_clip_higher_asymmetry():
+    """DAPO clip-higher: positive-advantage ratios clip at 1+eps_high."""
+    lp_old = jnp.zeros((1, 4))
+    adv = jnp.ones((1, 4))
+    mask = jnp.ones((1, 4))
+    lp_hi = jnp.full((1, 4), 0.5)  # ratio e^0.5 ~ 1.65 > 1.28
+    loss_hi, m = dapo_pg_loss(lp_hi, lp_old, adv, mask,
+                              clip_eps_low=0.2, clip_eps_high=0.28)
+    assert float(loss_hi) == pytest.approx(-1.28, abs=1e-5)
+    # negative advantage, ratio below 1-eps_low: min() keeps the clipped
+    # (more pessimistic, more negative) branch: 0.8 * (-1)
+    lp_lo = jnp.full((1, 4), -0.5)
+    loss_lo, _ = dapo_pg_loss(lp_lo, lp_old, -adv, mask)
+    assert float(loss_lo) == pytest.approx(0.8, abs=1e-5)
+
+
+def test_entropy_from_logits_uniform():
+    logits = jnp.zeros((1, 3, 7))
+    mask = jnp.ones((1, 3))
+    ent = float(entropy_from_logits(logits, mask))
+    assert ent == pytest.approx(np.log(7), abs=1e-5)
+
+
+def test_bc_warmup_reduces_loss():
+    tr = _trainer(TrainerMode.TREEPO)
+    first = None
+
+    # capture initial CE by running one step with lr tiny? simpler: run two
+    # warmups and compare reported losses
+    m1 = tr.bc_warmup(steps=5, batch_size=4, lr=1e-3)
+    m2 = tr.bc_warmup(steps=30, batch_size=4, lr=3e-3)
+    assert m2["bc_loss"] < m1["bc_loss"]
+
+
+@pytest.mark.parametrize("mode", [TrainerMode.GRPO, TrainerMode.GRPO_TREE,
+                                  TrainerMode.TREEPO])
+def test_train_step_all_modes(mode):
+    tr = _trainer(mode)
+    tr.bc_warmup(steps=25, batch_size=4, lr=3e-3)
+    m = tr.train_step(num_queries=1)
+    assert m["step"] == 1
+    assert m["sample_model_tokens"] > 0
+    # either a real update happened or dynamic sampling starved the batch
+    assert ("loss" in m) or ("skipped" in m)
+    if "loss" in m:
+        assert np.isfinite(m["loss"])
+
+
+def test_advantage_variants_run():
+    for variant in ["treepo", "treepo_size_weighted",
+                    "treepo_subgroup_reject", "treepo_no_root", "grpo"]:
+        tr = _trainer(TrainerMode.TREEPO, advantage=variant, seed=1)
+        tr.bc_warmup(steps=20, batch_size=4, lr=3e-3)
+        m = tr.train_step(num_queries=1)
+        assert ("loss" in m) or ("skipped" in m)
+
+
+def test_build_batch_shapes_and_masks():
+    tr = _trainer(TrainerMode.TREEPO)
+    tr.bc_warmup(steps=20, batch_size=4, lr=3e-3)
+    trees, eng = tr.rollout(2)
+    batch = tr.build_batch(trees)
+    if batch.tokens.shape[0] == 0:
+        pytest.skip("dynamic sampling dropped everything (all-equal rewards)")
+    N, L = batch.tokens.shape
+    assert batch.response_mask.shape == (N, L)
+    assert batch.logprobs_old.shape == (N, L)
+    # logprobs only on response tokens
+    assert (np.abs(batch.logprobs_old) * (1 - batch.response_mask)).sum() \
+        == 0
+    # advantages constant within each trajectory's response (before norm)
+    for i in range(N):
+        on = batch.advantages[i][batch.response_mask[i] > 0]
+        if on.size:
+            assert np.allclose(on, on[0])
+
+
+def test_evaluate_returns_metrics():
+    tr = _trainer(TrainerMode.TREEPO)
+    ev = tr.evaluate(num_queries=2, k=2)
+    assert set(ev) == {"maj_acc", "pass_any"}
+    assert 0 <= ev["maj_acc"] <= 1

@@ -1,0 +1,158 @@
+"""Tree-engine correctness: paged decode == dense teacher-forced forward,
+fork/COW/refcount lifecycle, fallback forks, EOS truncation."""
+import random
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.configs.base import TreeConfig
+from repro.core.engine import TreeEngine, sample_token_host
+from repro.core.loss import token_logprobs_from_logits
+from repro.core.sampler import sample_sequential, sample_trees
+from repro.core.tree import Status
+from repro.models.model import forward, init_params
+
+TC = TreeConfig(max_depth=3, segment_len=8, max_width=3, branch_factor=2,
+                init_divergence_low=2, init_divergence_high=2,
+                temperature=1.0)
+
+
+def _engine(arch, tc=TC, seed=0, **kw):
+    cfg = get_config(arch, smoke=True)
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    kwargs = dict(num_pages=256, page_size=8, max_slots=16, max_queries=4,
+                  max_prompt_len=32, seed=seed)
+    kwargs.update(kw)
+    return cfg, params, TreeEngine(params, cfg, tc, **kwargs)
+
+
+@pytest.mark.parametrize("arch", ["yi-6b", "gemma3-12b", "olmoe-1b-7b",
+                                  "deepseek-v3-671b", "jamba-v0.1-52b",
+                                  "rwkv6-7b"])
+def test_engine_matches_dense_forward(arch):
+    """Every trajectory's recorded logprobs == teacher-forced dense model."""
+    cfg, params, eng = _engine(arch)
+    prompts = [[1, 2, 3, 4, 5, 6, 7]]
+    trees, _ = sample_trees(eng, prompts, ["x"], rng=random.Random(1))
+    assert trees[0].num_trajectories >= TC.max_width
+    for path in trees[0].finished[:2]:
+        full = prompts[0] + path.tokens
+        toks = jnp.asarray([full])
+        logits, _ = forward(params, cfg, toks)
+        lp = token_logprobs_from_logits(logits[:, :-1], toks[:, 1:])[0]
+        ref = np.asarray(lp[len(prompts[0]) - 1:])
+        got = np.asarray(path.logprobs)
+        np.testing.assert_allclose(ref[: len(got)], got, atol=2e-3)
+
+
+def test_fork_shares_pages_and_cow():
+    cfg, params, eng = _engine("yi-6b")
+    [root] = eng.prefill_queries([[1, 2, 3, 4, 5]])  # 5 tokens, page=8
+    pages_before = eng.kv.pool.pages_in_use
+    child = eng.fork_path(root)
+    # partial page -> COW: exactly one extra page
+    assert eng.kv.pool.pages_in_use == pages_before + 1
+    assert child.table[0] != root.table[0]
+    # page-aligned fork: no COW
+    eng.decode_segments([root])  # position 5 -> 13... still partial
+    root2 = eng.prefill_queries([[1, 2, 3, 4, 5, 6, 7, 8]])[0]  # aligned
+    pages_before = eng.kv.pool.pages_in_use
+    child2 = eng.fork_path(root2)
+    assert eng.kv.pool.pages_in_use == pages_before
+    assert child2.table == root2.table
+
+
+def test_release_returns_pages():
+    cfg, params, eng = _engine("yi-6b")
+    base = eng.kv.pool.pages_in_use
+    trees, _ = sample_trees(eng, [[1, 2, 3]], ["x"], rng=random.Random(0))
+    assert eng.kv.pool.pages_in_use == base  # all pages returned
+
+
+def test_refcount_never_negative_and_slots_freed():
+    cfg, params, eng = _engine("rwkv6-7b")
+    slots_free = len(eng.kv.slots.free)
+    trees, _ = sample_trees(eng, [[1, 2, 3], [4, 5]], ["x", "y"],
+                            rng=random.Random(0))
+    assert (eng.kv.pool.refcount >= 0).all()
+    assert len(eng.kv.slots.free) == slots_free
+
+
+def test_divergence_after_fork():
+    """Forked children resample their pending token: siblings usually
+    diverge at the first post-fork token."""
+    cfg, params, eng = _engine("yi-6b", seed=3)
+    [root] = eng.prefill_queries([[9, 8, 7]])
+    children = [eng.fork_path(root) for _ in range(6)]
+    firsts = {c.pending_token for c in children} | {root.pending_token}
+    assert len(firsts) > 1  # with V=512 and T=1.0 collisions are unlikely
+
+
+def test_sequential_baseline_no_branching():
+    cfg, params, eng = _engine("yi-6b", tc=TC)
+    trees, rep = sample_sequential(eng, [[1, 2, 3]], ["x"],
+                                   rng=random.Random(0))
+    assert trees[0].num_trajectories == TC.max_width
+    # all node chains diverge at depth 1 (root children, no deeper shares)
+    chains = [tuple(p.node_ids) for p in trees[0].finished]
+    d1 = [c[1] for c in chains]
+    assert len(set(d1)) == len(d1)
+
+
+def test_eos_truncation():
+    from repro.core.early_stop import truncate_at_eos
+    toks = [1, 2, 258, 4, 5]
+    lps = [0.1, 0.2, 0.3, 0.4, 0.5]
+    t2, l2 = truncate_at_eos(toks, lps, eos_id=258)
+    assert t2 == [1, 2, 258] and l2 == [0.1, 0.2, 0.3]
+
+
+def test_repetition_early_stop():
+    from repro.core.early_stop import has_repetition
+    assert has_repetition([1, 2, 3] * 5, max_ngram=4, count=4)
+    assert has_repetition([7] * 10, max_ngram=4, count=4)
+    assert not has_repetition(list(range(50)), max_ngram=8, count=3)
+
+
+def test_host_sampler_matches_device_distribution():
+    """sample_token_host draws from the same (temperature) distribution."""
+    logits = np.array([2.0, 1.0, 0.0, -1.0], np.float64)
+    rng = np.random.default_rng(0)
+    draws = [sample_token_host(rng, logits, 1.0, 1.0)[0]
+             for _ in range(2000)]
+    freq = np.bincount(draws, minlength=4) / 2000
+    want = np.exp(logits) / np.exp(logits).sum()
+    np.testing.assert_allclose(freq, want, atol=0.05)
+    # logprob reported matches log softmax
+    _, lp = sample_token_host(np.random.default_rng(1), logits, 1.0, 1.0)
+    assert lp <= 0
+
+
+def test_stats_accounting():
+    cfg, params, eng = _engine("yi-6b")
+    trees, _ = sample_trees(eng, [[1, 2, 3, 4]], ["x"],
+                            rng=random.Random(0))
+    s = eng.stats
+    assert s.prefill_tokens == 4
+    assert s.decode_tokens == s.segments * TC.segment_len
+    assert s.model_tokens == s.prefill_tokens + s.decode_tokens \
+        + s.replay_tokens
+    assert s.peak_pages > 0
+
+
+def test_subgroup_nesting_invariant():
+    """Eq. 4: node chains form nested subgroups — two paths sharing a node
+    at depth j share every ancestor above j."""
+    cfg, params, eng = _engine("yi-6b", tc=TreeConfig(
+        max_depth=4, segment_len=8, max_width=6, branch_factor=2,
+        init_divergence_low=2, init_divergence_high=2, temperature=1.0))
+    trees, _ = sample_trees(eng, [[5, 6, 7]], ["x"], rng=random.Random(2))
+    chains = [p.node_ids for p in trees[0].finished]
+    for a in chains:
+        for b in chains:
+            for j in range(min(len(a), len(b))):
+                if a[j] == b[j]:
+                    assert a[: j] == b[: j]
