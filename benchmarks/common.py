@@ -74,10 +74,23 @@ class RolloutCost:
     trajectories: int
     trajectory_tokens: int     # tokens in returned trajectories
     shared_prefix_tokens: int  # trajectory tokens served from shared KV
+    host_bytes: int = 0        # device->host transfer in the decode loop
+    segments: int = 0          # path-segments decoded
+    forks: int = 0
+    fork_dispatches: int = 0   # jitted fork-copy / fork-sample dispatches
+    cow_pages: int = 0
 
     @property
     def token_ps(self) -> float:
         return self.model_tokens / max(self.wall_s, 1e-9)
+
+    @property
+    def decode_token_ps(self) -> float:
+        return self.decode_tokens / max(self.wall_s, 1e-9)
+
+    @property
+    def host_bytes_per_segment(self) -> float:
+        return self.host_bytes / max(self.segments, 1)
 
     @property
     def traj_ps(self) -> float:
@@ -114,7 +127,11 @@ def measure_rollout(params, cfg, tree_cfg: TreeConfig,
         prefill_tokens=eng.stats.prefill_tokens,
         decode_tokens=eng.stats.decode_tokens,
         trajectories=n_traj, trajectory_tokens=total_served,
-        shared_prefix_tokens=shared)
+        shared_prefix_tokens=shared,
+        host_bytes=eng.stats.host_bytes, segments=eng.stats.segments,
+        forks=eng.stats.forks,
+        fork_dispatches=eng.stats.fork_dispatches,
+        cow_pages=eng.stats.cow_pages)
     return trees, cost
 
 

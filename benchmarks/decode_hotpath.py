@@ -1,0 +1,91 @@
+"""Decode hot-path benchmark: device-residency of the segment inner loop.
+
+Measures, for tree vs sequential sampling, the two quantities the
+device-resident refactor targets:
+
+* decode tokens/sec (wall-clock on this container — relative, not TPU;
+  each row builds a fresh engine, so wall time includes jit tracing of
+  that mode's shape buckets — the exact byte/dispatch counters below are
+  the load-bearing numbers, tok/s is a coarse sanity signal),
+* host-transferred bytes per decoded path-segment (``EngineStats`` counts
+  the decode/fork loop's device->host copies; opt-in ``last_logits``
+  debug fetches are outside the accounting — nothing here calls them).
+
+The old engine copied the full (Rb, V) f32 boundary-logits matrix to the
+host every segment and resampled forks one numpy draw at a time; the
+steady state is now O(R*l) tokens + O(R) scalars, with fork divergence
+sampled on device.  ``legacy_logits_bytes_per_segment`` (= V * 4) is what
+the removed copy alone cost per path-segment, for comparison.
+
+Emits ``results/BENCH_decode.json`` to seed the perf trajectory.
+"""
+from __future__ import annotations
+
+import json
+import os
+
+from benchmarks.common import (
+    fmt_row,
+    make_model,
+    make_prompts,
+    measure_rollout,
+)
+from repro.configs.base import TreeConfig
+
+OUT_PATH = os.path.join(os.path.dirname(__file__), "..", "results",
+                        "BENCH_decode.json")
+
+
+def _tree_cfg() -> TreeConfig:
+    return TreeConfig(max_depth=4, segment_len=16, max_width=4,
+                      branch_factor=2, init_divergence_low=2,
+                      init_divergence_high=2, temperature=0.9)
+
+
+def run(quick: bool = True, out_path: str = OUT_PATH) -> dict:
+    archs = ["qwen2.5-7b"] if quick else [
+        "qwen2.5-7b", "deepseek-v3-671b", "jamba-v0.1-52b"]
+    n_queries = 4 if quick else 8
+    rows = []
+    print("\n== Decode hot path: tree vs sequential ==")
+    hdr = ["arch", "mode", "decode_tok", "tok/s", "B/seg", "forks",
+           "dispatches", "cow"]
+    print(fmt_row(hdr, [18, 10, 10, 10, 10, 7, 10, 5]))
+    for arch in archs:
+        cfg, params = make_model(arch)
+        vocab = cfg.vocab_size
+        for mode in ("tree", "sequential"):
+            prompts, targets = make_prompts(n_queries, seed=1)
+            _, cost = measure_rollout(
+                params, cfg, _tree_cfg(), prompts, targets,
+                sequential=(mode == "sequential"), seed=1)
+            row = {
+                "arch": arch,
+                "mode": mode,
+                "decode_tokens": cost.decode_tokens,
+                "wall_s": round(cost.wall_s, 3),
+                "decode_token_ps": round(cost.decode_token_ps, 1),
+                "segments": cost.segments,
+                "host_bytes": cost.host_bytes,
+                "host_bytes_per_segment": round(
+                    cost.host_bytes_per_segment, 1),
+                "legacy_logits_bytes_per_segment": vocab * 4,
+                "forks": cost.forks,
+                "fork_dispatches": cost.fork_dispatches,
+                "cow_pages": cost.cow_pages,
+                "trajectories": cost.trajectories,
+            }
+            rows.append(row)
+            print(fmt_row([arch, mode, cost.decode_tokens,
+                           round(cost.decode_token_ps, 1),
+                           round(cost.host_bytes_per_segment, 1),
+                           cost.forks, cost.fork_dispatches,
+                           cost.cow_pages],
+                          [18, 10, 10, 10, 10, 7, 10, 5]))
+    result = {"benchmark": "decode_hotpath", "quick": quick,
+              "wall_includes_jit_trace": True, "rows": rows}
+    os.makedirs(os.path.dirname(os.path.abspath(out_path)), exist_ok=True)
+    with open(out_path, "w") as f:
+        json.dump(result, f, indent=2)
+    print(f"wrote {os.path.relpath(out_path)}")
+    return result

@@ -14,6 +14,7 @@ import time
 import traceback
 
 from benchmarks import (
+    decode_hotpath,
     fig4_depth_segment,
     fig5_rollout_scaling,
     fig6_advantage_ablation,
@@ -26,6 +27,7 @@ from benchmarks import (
 )
 
 BENCHES = [
+    ("decode_hotpath", decode_hotpath),
     ("table2_efficiency", table2_efficiency),
     ("fig4_depth_segment", fig4_depth_segment),
     ("fig5_rollout_scaling", fig5_rollout_scaling),

@@ -15,7 +15,19 @@ import jax
 import jax.numpy as jnp
 import msgpack
 import numpy as np
-import zstandard
+
+try:  # optional dep: gate so importing repro.checkpoint never hard-fails
+    import zstandard
+except ImportError:  # pragma: no cover - environment-dependent
+    zstandard = None
+
+
+def _require_zstd():
+    if zstandard is None:
+        raise ImportError(
+            "checkpoint save/load needs the 'zstandard' package "
+            "(not installed in this environment)")
+    return zstandard
 
 
 _ARR_KEY = "__nd__"
@@ -53,7 +65,7 @@ def save_checkpoint(ckpt_dir: str, step: int, tree: Any) -> str:
     os.makedirs(ckpt_dir, exist_ok=True)
     tree = jax.device_get(tree)
     payload = msgpack.packb(_pack(tree), use_bin_type=True)
-    compressed = zstandard.ZstdCompressor(level=3).compress(payload)
+    compressed = _require_zstd().ZstdCompressor(level=3).compress(payload)
     path = os.path.join(ckpt_dir, f"step_{step:08d}.ckpt")
     tmp = path + ".tmp"
     with open(tmp, "wb") as f:
@@ -78,5 +90,5 @@ def load_checkpoint(ckpt_dir: str, step: Optional[int] = None) -> Any:
     path = os.path.join(ckpt_dir, f"step_{step:08d}.ckpt")
     with open(path, "rb") as f:
         compressed = f.read()
-    payload = zstandard.ZstdDecompressor().decompress(compressed)
+    payload = _require_zstd().ZstdDecompressor().decompress(compressed)
     return _unpack(msgpack.unpackb(payload, raw=False))

@@ -12,9 +12,25 @@ KV data of shared prefixes is stored once (the paper's KV amortization).
 Recurrent state (Mamba conv/ssm, RWKV wkv/shift) is slot-indexed and copied
 on fork — it is a running reduction, not a prefix.
 
+The per-segment inner loop is device-resident end to end:
+
+* **Attention decode** runs through the paged Pallas kernels
+  (GQA: ``kops.paged_attention``; MLA: ``kops.mla_paged_attention`` over
+  absorbed latent pages) — block-table indirection is resolved in scalar
+  prefetch, never as a dense HBM gather.
+* **Fork divergence is sampled on device**: full-vocab boundary logits stay
+  in a device buffer keyed by (buffer, row) on each path, and a branching
+  round draws all of its divergence tokens in one jitted ``fork_sample``
+  dispatch.  Steady-state host transfer per decode round is the (R, l)
+  segment token/logprob matrices plus (R,) pending scalars — never (R, V)
+  logits.  ``EnginePath.last_logits`` remains as an opt-in debug fetch.
+* **Fork application is batched**: a round's COW page copies and recurrent
+  slot copies go through ``PagedKVState.apply_forks`` as one jitted
+  multi-layer dispatch.
+
 Device functions are cached per static shape bucket:
   prefill  (Q, Sp)      — flash-attention forward, paged KV write-out,
-                          returns last-position logits.
+                          returns last-position logits (kept on device).
   decode   (R, l)       — lax.scan over l tokens; paged attention per attn
                           layer; on-device temperature/top-p sampling.
 """
@@ -31,7 +47,7 @@ import numpy as np
 
 from repro.configs.base import ModelConfig, TreeConfig
 from repro.kernels import ops as kops
-from repro.kv.cache import PagedKVState
+from repro.kv.cache import PagedKVState, bucket_pow2
 from repro.models import attention as attn
 from repro.models import moe as moe_mod
 from repro.models import ssm
@@ -58,8 +74,24 @@ class EnginePath:
     position: int                     # tokens whose KV is materialized
     pending_token: int                # sampled, not yet fed
     pending_logprob: float
-    last_logits: Optional[np.ndarray]  # (V,) f32 — fork divergence source
+    logits_buf: Optional[jnp.ndarray] = None  # (Rb, V) device boundary
+    logits_row: int = 0                       # logits, shared per round
     released: bool = False
+
+    @property
+    def last_logits(self) -> Optional[np.ndarray]:
+        """Opt-in DEBUG fetch of this path's (V,) boundary logits.
+
+        The decode/fork hot path never calls this — divergence tokens are
+        sampled on device from ``logits_buf`` — but tests and external
+        tooling can still pull the full distribution to the host.  This
+        transfer is outside the engine's ``EngineStats.host_bytes``
+        accounting (a path has no engine reference to report to).
+        """
+        if self.logits_buf is None:
+            return None
+        return np.asarray(self.logits_buf[self.logits_row],
+                          dtype=np.float32)
 
 
 @dataclasses.dataclass
@@ -78,6 +110,11 @@ class EngineStats:
     cow_pages: int = 0
     replay_tokens: int = 0            # fallback re-prefill cost
     peak_pages: int = 0
+    host_bytes: int = 0               # device->host transfer in the
+                                      # decode/fork loop (tokens, logprobs,
+                                      # pending scalars); debug
+                                      # last_logits fetches are NOT counted
+    fork_dispatches: int = 0          # jitted fork-sample/apply calls
 
     @property
     def model_tokens(self) -> int:
@@ -112,10 +149,26 @@ def sample_tokens(key, logits, temperature: float, top_p: float
     return tok.astype(jnp.int32), lp
 
 
+@functools.partial(jax.jit, static_argnames=("temperature", "top_p"))
+def fork_sample(logits_rows: jnp.ndarray, rows: jnp.ndarray, key, *,
+                temperature: float, top_p: float
+                ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Batched on-device fork divergence sampling.
+
+    Gathers the requested boundary-logit rows from a round's (Rb, V) device
+    buffer and draws one token (+ its logprob) per fork in a single
+    dispatch — replacing the old one-numpy-sample-per-fork host loop.
+    logits_rows: (Rb, V) f32; rows: (F,) int32 row indices (padded rows are
+    sampled and discarded by the caller).
+    """
+    return sample_tokens(key, logits_rows[rows], temperature, top_p)
+
+
 def sample_token_host(rng: np.random.Generator, logits: np.ndarray,
                       temperature: float, top_p: float
                       ) -> Tuple[int, float]:
-    """Host-side mirror of ``sample_tokens`` for fork divergence."""
+    """Host-side mirror of ``sample_tokens`` — kept as a distribution
+    oracle for tests/debugging; the engine itself samples on device."""
     lg = logits.astype(np.float64) / max(temperature, 1e-6)
     lg = lg - lg.max()
     if top_p < 1.0:
@@ -136,8 +189,8 @@ def sample_token_host(rng: np.random.Generator, logits: np.ndarray,
     return tok, float(logp_all[tok])
 
 
-def _bucket(n: int, minimum: int = 1) -> int:
-    return max(minimum, 1 << (max(n, 1) - 1).bit_length())
+# the single jit-shape bucketing policy, shared with kv.cache's pad buckets
+_bucket = bucket_pow2
 
 
 # ---------------------------------------------------------------------------
@@ -185,7 +238,6 @@ class TreeEngine:
                          and cfg.frontend.kind == "vision" else 0)
         self._decode_fns: Dict[Tuple[int, int], Any] = {}
         self._prefill_fns: Dict[Tuple[int, int], Any] = {}
-        self._rng = np.random.default_rng(seed)
         self._key = jax.random.PRNGKey(seed)
         self.stats = EngineStats()
 
@@ -213,20 +265,57 @@ class TreeEngine:
             path.table.append(self.kv.pool.alloc())
         self._track_pages()
 
-    def _cow_page(self, path: EnginePath, page_idx: int) -> None:
-        """Give ``path`` a private copy of table[page_idx]."""
-        src = path.table[page_idx]
-        if self.kv.pool.refcount[src] == 1:
-            return  # already private
-        dst = self.kv.pool.alloc()
-        for i, pools in self.kv.kv_pools.items():
-            self.kv.kv_pools[i] = {
-                k: v.at[dst].set(v[src]) for k, v in pools.items()
-            }
-        self.kv.pool.release(src)
-        path.table[page_idx] = dst
-        self.stats.cow_pages += 1
+    def _cow_pages(self, path: EnginePath, page_idxs
+                   ) -> Tuple[List[int], List[int]]:
+        """Host bookkeeping for COW of ``path.table[idx]`` for each idx:
+        allocate private pages and retarget the table, returning the
+        (src, dst) copy pairs for a later batched ``kv.apply_forks``.
+        Sources stay refcounted by their other owners, so deferring the
+        device copy to the end of the round is safe."""
+        src_pages: List[int] = []
+        dst_pages: List[int] = []
+        for page_idx in page_idxs:
+            src = path.table[page_idx]
+            if self.kv.pool.refcount[src] == 1:
+                continue  # already private
+            dst = self.kv.pool.alloc()
+            self.kv.pool.release(src)
+            path.table[page_idx] = dst
+            src_pages.append(src)
+            dst_pages.append(dst)
+            self.stats.cow_pages += 1
         self._track_pages()
+        return src_pages, dst_pages
+
+    # -- on-device fork sampling ------------------------------------------------
+
+    def sample_pending_batch(self, paths: Sequence[EnginePath]) -> None:
+        """Resample every path's pending token from its device-side
+        boundary logits — one ``fork_sample`` dispatch per distinct logits
+        buffer (a branching round shares a single buffer, so normally one).
+        Only (F,) tokens + logprobs cross to the host."""
+        groups: Dict[int, Tuple[jnp.ndarray, List[EnginePath]]] = {}
+        for p in paths:
+            assert p.logits_buf is not None, \
+                "path has no boundary logits to sample from"
+            groups.setdefault(id(p.logits_buf),
+                              (p.logits_buf, []))[1].append(p)
+        tc = self.tree_cfg
+        for buf, ps in groups.values():
+            F = len(ps)
+            Fb = _bucket(F)
+            rows = jnp.asarray([p.logits_row for p in ps] + [0] * (Fb - F),
+                               jnp.int32)
+            tok, lp = fork_sample(buf, rows, self._next_key(),
+                                  temperature=tc.temperature,
+                                  top_p=tc.top_p)
+            tok = np.asarray(tok)
+            lp = np.asarray(lp)
+            self.stats.host_bytes += tok.nbytes + lp.nbytes
+            self.stats.fork_dispatches += 1
+            for j, p in enumerate(ps):
+                p.pending_token = int(tok[j])
+                p.pending_logprob = float(lp[j])
 
     def release_path(self, path: EnginePath) -> None:
         if path.released:
@@ -236,6 +325,9 @@ class TreeEngine:
         if path.slot >= 0:
             self.kv.slots.release(path.slot)
             path.slot = -1
+        # drop the boundary-logits reference: a released path must not pin
+        # its round's (Rb, V) device buffer for the rollout's lifetime
+        path.logits_buf = None
         path.released = True
 
     def release_qslot(self, qslot: int) -> None:
@@ -274,8 +366,7 @@ class TreeEngine:
             if i < Q:
                 pth = EnginePath(table=[], slot=-1, qslot=-1,
                                  position=int(lengths[i]),
-                                 pending_token=0, pending_logprob=0.0,
-                                 last_logits=None)
+                                 pending_token=0, pending_logprob=0.0)
                 self._ensure_capacity(pth, int(lengths[i]))
                 if self.has_rec:
                     pth.slot = self.kv.slots.alloc()
@@ -312,42 +403,60 @@ class TreeEngine:
         self.kv.kv_pools = pools
         self.kv.rec_state = rec
         self.cross_pool = cross
-        logits_np = np.asarray(logits)
+        logits = logits.astype(jnp.float32)   # stays on device
         for i, pth in enumerate(paths):
-            pth.last_logits = logits_np[i]
-            tok, lp = sample_token_host(self._rng, pth.last_logits,
-                                        self.tree_cfg.temperature,
-                                        self.tree_cfg.top_p)
-            pth.pending_token, pth.pending_logprob = tok, lp
+            pth.logits_buf = logits
+            pth.logits_row = i
+        self.sample_pending_batch(paths)
         self.stats.prefill_tokens += sum(len(p) + n_pre for p in prompts)
         return paths
 
     # -- fork ----------------------------------------------------------------------
 
+    def fork_paths(self, parents: Sequence[EnginePath], *,
+                   resample: bool = True) -> List[EnginePath]:
+        """Batched branch of a whole round: for every parent (repeat a
+        parent to fork it several times) share every full page, COW the
+        partial tail page, and copy recurrent state — all fork copies land
+        in ONE jitted ``kv.apply_forks`` dispatch — then draw every child's
+        divergence token in one on-device ``fork_sample`` dispatch."""
+        children: List[EnginePath] = []
+        page_src: List[int] = []
+        page_dst: List[int] = []
+        slot_src: List[int] = []
+        slot_dst: List[int] = []
+        for parent in parents:
+            child = EnginePath(
+                table=self.kv.fork_table(parent.table),
+                slot=-1, qslot=parent.qslot, position=parent.position,
+                pending_token=parent.pending_token,
+                pending_logprob=parent.pending_logprob,
+                logits_buf=parent.logits_buf,
+                logits_row=parent.logits_row)
+            if parent.position % self.page_size != 0:
+                ps, pd = self._cow_pages(
+                    child, [parent.position // self.page_size])
+                page_src += ps
+                page_dst += pd
+            if parent.slot >= 0:
+                child.slot = self.kv.slots.alloc()
+                slot_src.append(parent.slot)
+                slot_dst.append(child.slot)
+            children.append(child)
+        if page_src or slot_src:
+            self.kv.apply_forks(page_src, page_dst, slot_src, slot_dst)
+            self.stats.fork_dispatches += 1
+        self.stats.forks += len(children)
+        self._track_pages()
+        if resample:
+            self.sample_pending_batch(
+                [c for c in children if c.logits_buf is not None])
+        return children
+
     def fork_path(self, parent: EnginePath, *, resample: bool = True
                   ) -> EnginePath:
-        """Branch at the current segment boundary: share every full page,
-        COW the partial tail page (if any), copy recurrent state, and sample
-        a fresh pending token so the child diverges immediately."""
-        child = EnginePath(
-            table=self.kv.fork_table(parent.table),
-            slot=-1, qslot=parent.qslot, position=parent.position,
-            pending_token=parent.pending_token,
-            pending_logprob=parent.pending_logprob,
-            last_logits=parent.last_logits)
-        if parent.position % self.page_size != 0:
-            self._cow_page(child, parent.position // self.page_size)
-        if parent.slot >= 0:
-            child.slot = self.kv.slots.alloc()
-            self.kv.copy_slots([parent.slot], [child.slot])
-        if resample and parent.last_logits is not None:
-            tok, lp = sample_token_host(self._rng, parent.last_logits,
-                                        self.tree_cfg.temperature,
-                                        self.tree_cfg.top_p)
-            child.pending_token, child.pending_logprob = tok, lp
-        self.stats.forks += 1
-        self._track_pages()
-        return child
+        """Single-parent convenience wrapper over :meth:`fork_paths`."""
+        return self.fork_paths([parent], resample=resample)[0]
 
     def fork_from_prefix(self, src: EnginePath, prefix_position: int,
                          replay_tokens: Optional[List[int]] = None
@@ -365,25 +474,38 @@ class TreeEngine:
         child = EnginePath(
             table=self.kv.fork_table(src.table[:n_pages]),
             slot=-1, qslot=src.qslot, position=prefix_position,
-            pending_token=0, pending_logprob=0.0, last_logits=None)
+            pending_token=0, pending_logprob=0.0)
         if self.has_rec:
             assert replay_tokens is not None and \
-                len(replay_tokens) >= prefix_position - self.n_prefix
+                len(replay_tokens) >= prefix_position - self.n_prefix, \
+                "fork_from_prefix on a recurrent arch needs the full " \
+                "prompt+prefix token sequence in replay_tokens"
             child.slot = self.kv.slots.alloc()
-            # replay rewrites every prefix page -> COW them all
-            for idx in range(len(child.table)):
-                self._cow_page(child, idx)
+            # replay rewrites every position it will ever read, so COW here
+            # is bookkeeping only: retarget the table to fresh pages and
+            # skip the device copy of bytes the prefill immediately clobbers
+            self._cow_pages(child, range(len(child.table)))
             self._replay_prefix(child, replay_tokens[: prefix_position
                                                      - self.n_prefix])
         else:
-            if prefix_position % self.page_size != 0:
-                self._cow_page(child, prefix_position // self.page_size)
+            assert replay_tokens is not None and \
+                len(replay_tokens) >= prefix_position - self.n_prefix, \
+                "fork_from_prefix on an attention arch needs replay_tokens" \
+                " to re-feed the boundary token (got None / too short)"
+            # COW the page holding the boundary token (position-1): _refeed
+            # rewrites its KV, and prefill/decode reduction orders differ at
+            # the ULP level — writing into a still-shared page would perturb
+            # the source path's siblings.  Covers both the misaligned tail
+            # and the page-aligned case (where the boundary token is the
+            # last row of the final shared page).
+            ps, pd = self._cow_pages(
+                child, [(prefix_position - 1) // self.page_size])
+            if ps:
+                self.kv.apply_forks(ps, pd)
+                self.stats.fork_dispatches += 1
             self._refeed(child, replay_tokens[prefix_position
                                               - self.n_prefix - 1])
-        tok, lp = sample_token_host(self._rng, child.last_logits,
-                                    self.tree_cfg.temperature,
-                                    self.tree_cfg.top_p)
-        child.pending_token, child.pending_logprob = tok, lp
+        self.sample_pending_batch([child])
         self.stats.forks += 1
         return child
 
@@ -406,7 +528,8 @@ class TreeEngine:
             jnp.asarray(tables), jnp.asarray(slots), jnp.asarray(qslots),
             None, None)
         self.kv.kv_pools, self.kv.rec_state = pools, rec
-        child.last_logits = np.asarray(logits)[0]
+        child.logits_buf = logits.astype(jnp.float32)   # stays on device
+        child.logits_row = 0
         self.stats.replay_tokens += len(tokens)
 
     def _refeed(self, child: EnginePath, last_token: int) -> None:
@@ -457,18 +580,23 @@ class TreeEngine:
             jnp.asarray(qslots), self._next_key())
         self.kv.kv_pools = pools
         self.kv.rec_state = rec
+        # steady-state host transfer: O(R*l) tokens/logprobs + O(R) pending
+        # scalars.  The (Rb, V) boundary logits stay on device — forks
+        # sample from them via fork_sample.
         toks = np.asarray(toks)           # (Rb, l)
         lps = np.asarray(lps)
         pend_tok = np.asarray(pend_tok)
         pend_lp = np.asarray(pend_lp)
-        last_logits = np.asarray(last_logits)
+        self.stats.host_bytes += (toks.nbytes + lps.nbytes
+                                  + pend_tok.nbytes + pend_lp.nbytes)
 
         results = []
         for i, p in enumerate(paths):
             p.position += l
             p.pending_token = int(pend_tok[i])
             p.pending_logprob = float(pend_lp[i])
-            p.last_logits = last_logits[i]
+            p.logits_buf = last_logits
+            p.logits_row = i
             seg_t = [int(t) for t in toks[i]]
             seg_l = [float(v) for v in lps[i]]
             results.append(SegmentResult(
@@ -622,31 +750,24 @@ class TreeEngine:
 
         def mla_paged_attn(lp_attn, q_nope, q_rope, pools_i, tables,
                            lengths):
-            """Absorbed MLA decode over the gathered latent pages."""
+            """Absorbed MLA decode via the paged Pallas kernel: absorb W_uk
+            into the query, attend over the latent pages named by the block
+            table (scalar-prefetch indirection — no dense (R, MP*page, r)
+            gather), then up-project the latent aggregate with W_uv."""
             m = cfg.mla
             H = cfg.num_heads
-            tbl = jnp.maximum(tables, 0)
-            ckv = pools_i["ckv"][tbl]                     # (R,MP,page,r)
-            kr = pools_i["k_rope"][tbl]
-            Rr, MP, PG, r = ckv.shape
-            ckv = ckv.reshape(Rr, MP * PG, r).astype(jnp.float32)
-            kr = kr.reshape(Rr, MP * PG, -1).astype(jnp.float32)
             w_uk = lp_attn["w_uk"].reshape(m.kv_lora_rank, H,
                                            m.qk_nope_head_dim)
             q_lat = jnp.einsum("bhd,rhd->bhr", q_nope.astype(jnp.float32),
                                w_uk.astype(jnp.float32))
-            scale = 1.0 / (m.qk_head_dim ** 0.5)
-            logits = (jnp.einsum("bhr,bsr->bhs", q_lat, ckv)
-                      + jnp.einsum("bhd,bsd->bhs",
-                                   q_rope.astype(jnp.float32), kr)) * scale
-            valid = jnp.arange(MP * PG)[None, :] < lengths[:, None]
-            logits = jnp.where(valid[:, None, :], logits, -1e30)
-            p = jax.nn.softmax(logits, axis=-1)
-            o_lat = jnp.einsum("bhs,bsr->bhr", p, ckv)
+            o_lat = kops.mla_paged_attention(
+                q_lat, q_rope.astype(jnp.float32), pools_i["ckv"],
+                pools_i["k_rope"], tables, lengths, page_size=page,
+                scale=1.0 / (m.qk_head_dim ** 0.5))
             w_uv = lp_attn["w_uv"].reshape(m.kv_lora_rank, H, m.v_head_dim)
             o = jnp.einsum("bhr,rhd->bhd", o_lat,
                            w_uv.astype(jnp.float32))
-            return o.reshape(Rr, -1)
+            return o.reshape(o.shape[0], -1)
 
         def decode_fn(params, pools, rec, cross, tok0, lp0, pos0, tables,
                       slots, qslots, key):

@@ -46,6 +46,11 @@ def _finish_path(tree: QueryTree, path: Path, status: Status,
     path.status = status
     path.finish_reason = reason
     tree.finished.append(path)
+    if path.ep is not None:
+        # finished paths never sample again (fallback forks read only their
+        # KV pages), so drop the boundary-logits reference now rather than
+        # pinning the round's (Rb, V) device buffer until end of rollout
+        path.ep.logits_buf = None
     if status == Status.FAILED and path.ep is not None:
         # failed paths are never fallback sources: free their pages now
         engine.release_path(path.ep)
@@ -89,16 +94,25 @@ def _branch_tree(tree: QueryTree, tree_cfg: TreeConfig, engine: TreeEngine,
     forks = br.assign_branches(
         tree_cfg, [p.seg_logprob for p in tree.active], budget, rng,
         progress)
-    new_active: List[Path] = []
+    # collect the round's forks, then branch them in ONE engine call:
+    # one jitted page/slot-copy dispatch + one on-device fork_sample.
+    survivors: List[Tuple[Path, int]] = []
+    parents = []
     for path, k in zip(tree.active, forks):
         if k <= 0:
             # width budget exhausted: prune (counts as failed, no reward)
             _finish_path(tree, path, Status.FAILED, "budget", engine)
             continue
+        survivors.append((path, k))
+        parents.extend([path.ep] * (k - 1))
+    children = engine.fork_paths(parents)
+    new_active: List[Path] = []
+    ci = 0
+    for path, k in survivors:
         new_active.append(path)
         for _ in range(k - 1):
-            child_ep = engine.fork_path(path.ep)
-            new_active.append(path.clone_for_branch(child_ep))
+            new_active.append(path.clone_for_branch(children[ci]))
+            ci += 1
     tree.active = new_active
 
 
@@ -157,8 +171,7 @@ def sample_trees(engine: TreeEngine, prompts: List[List[int]],
     for tree, root_ep in zip(trees, roots):
         n_init = min(br.init_divergence(tree_cfg, rng), tree_cfg.max_width)
         tree.init_div = n_init
-        eps = [root_ep] + [engine.fork_path(root_ep)
-                           for _ in range(n_init - 1)]
+        eps = [root_ep] + engine.fork_paths([root_ep] * (n_init - 1))
         tree.active = [
             Path(query_idx=tree.query_idx, depth=0,
                  node_ids=[tree.root_id], tokens=[], logprobs=[], ep=ep)

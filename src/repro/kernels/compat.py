@@ -1,0 +1,12 @@
+"""Version compatibility for the Pallas TPU API surface.
+
+``pltpu.TPUCompilerParams`` was renamed to ``pltpu.CompilerParams`` in
+newer JAX releases; kernels import :data:`CompilerParams` from here so a
+single repo works against either side of the rename.
+"""
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as pltpu
+
+CompilerParams = getattr(pltpu, "CompilerParams", None) \
+    or pltpu.TPUCompilerParams

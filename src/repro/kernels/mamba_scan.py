@@ -19,6 +19,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.compat import CompilerParams
+
 
 def _mamba_kernel(u_ref, dt_ref, b_ref, c_ref, a_ref, d_ref, h0_ref,
                   y_ref, hT_ref, state_ref, *, T: int):
@@ -74,7 +76,7 @@ def mamba_scan_pallas(u, dt, B_, C_, A, D, h0, *, blk_d: int = 512,
             jax.ShapeDtypeStruct((B, d_in, N), h0.dtype),
         ],
         scratch_shapes=[pltpu.VMEM((blk_d, N), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "parallel"),
         ),
         interpret=interpret,

@@ -52,7 +52,9 @@ def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
     ``window``: sliding-window size (0 = full). ``q_offset``: absolute
     position of q[0] relative to k[0] (for chunked prefill).
     """
-    if _use_pallas():
+    # the Pallas kernel tiles one head dim for q/k/v; MLA prefill attends
+    # with qk_head_dim != v_head_dim, which only the reference supports.
+    if _use_pallas() and q.shape[-1] == v.shape[-1]:
         from repro.kernels.flash_attention import flash_attention_pallas
 
         return flash_attention_pallas(q, k, v, causal=causal, window=window,
@@ -104,6 +106,33 @@ def paged_attention(q, k_pool, v_pool, block_tables, lengths, *,
     return paged_attention_ref(q, k_pool, v_pool, block_tables, lengths,
                                page_size=page_size, scale=scale,
                                window=window)
+
+
+# ---------------------------------------------------------------------------
+# MLA (absorbed-latent) paged decode attention
+# ---------------------------------------------------------------------------
+
+def mla_paged_attention(q_lat, q_rope, ckv_pool, kr_pool, block_tables,
+                        lengths, *, page_size: int, scale: float):
+    """Absorbed DeepSeek-MLA tree-decode over a shared latent page pool.
+
+    q_lat: (B, H, r) query pre-multiplied by W_uk; q_rope: (B, H, rd);
+    ckv_pool: (num_pages, page, r); kr_pool: (num_pages, page, rd);
+    block_tables: (B, max_pages) int32 page ids (-1 pad); lengths: (B,).
+    Returns the latent aggregate (B, H, r) — W_uv/W_o applied by the caller.
+    """
+    if _use_pallas():
+        from repro.kernels.paged_attention import mla_paged_attention_pallas
+
+        return mla_paged_attention_pallas(q_lat, q_rope, ckv_pool, kr_pool,
+                                          block_tables, lengths,
+                                          page_size=page_size, scale=scale,
+                                          interpret=_interpret())
+    from repro.kernels.ref import mla_paged_attention_ref
+
+    return mla_paged_attention_ref(q_lat, q_rope, ckv_pool, kr_pool,
+                                   block_tables, lengths,
+                                   page_size=page_size, scale=scale)
 
 
 # ---------------------------------------------------------------------------

@@ -14,6 +14,16 @@ Grid: ``(B, max_pages)`` with pages innermost; online softmax over pages in
 f32 VMEM scratch (one (Hq, D) accumulator per path).  Invalid table entries
 (-1) are clamped to page 0 and masked, so early-terminating paths of the
 tree cost nothing extra.
+
+Two kernels share the pattern:
+
+* :func:`paged_attention_pallas` — GQA/MHA decode over per-head K/V pages.
+* :func:`mla_paged_attention_pallas` — DeepSeek MLA *absorbed* decode: the
+  query is pre-multiplied by W_uk into the latent space, scores are
+  ``q_lat·ckv + q_rope·k_rope`` over latent pages, and the output is the
+  latent aggregate (up-projected by W_uv outside the kernel).  Only the
+  (page, r) latent tiles named by the block table are ever DMA'd — the
+  dense ``(B, MP·page, r)`` gather of the jnp fallback never materializes.
 """
 from __future__ import annotations
 
@@ -23,6 +33,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.compat import CompilerParams
 
 _NEG_INF = -1e30
 
@@ -118,8 +130,109 @@ def paged_attention_pallas(q, k_pool, v_pool, block_tables, lengths, *,
                           page_size=page_size, group=group, window=window),
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "arbitrary"),
         ),
         interpret=interpret,
     )(safe_tables, lengths, q, k_pool, v_pool)
+
+
+# ---------------------------------------------------------------------------
+# MLA (absorbed-latent) paged decode
+# ---------------------------------------------------------------------------
+
+def _mla_paged_kernel(tables_ref, lengths_ref, q_lat_ref, q_rope_ref,
+                      ckv_ref, kr_ref, o_ref, acc_ref, m_ref, l_ref, *,
+                      scale: float, page_size: int):
+    b = pl.program_id(0)
+    i = pl.program_id(1)
+    np_ = pl.num_programs(1)
+
+    @pl.when(i == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, _NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    ql = q_lat_ref[0].astype(jnp.float32)               # (H, r)
+    qr = q_rope_ref[0].astype(jnp.float32)              # (H, rd)
+    ckv = ckv_ref[...].astype(jnp.float32)              # (page, r)
+    kr = kr_ref[...].astype(jnp.float32)                # (page, rd)
+
+    H, _ = ql.shape
+    page = ckv.shape[0]
+    # absorbed scores: q_lat.ckv^T + q_rope.k_rope^T -> (H, page)
+    s = (jax.lax.dot_general(ql, ckv, (((1,), (1,)), ((), ())),
+                             preferred_element_type=jnp.float32)
+         + jax.lax.dot_general(qr, kr, (((1,), (1,)), ((), ())),
+                               preferred_element_type=jnp.float32)) * scale
+
+    # pages are consecutive per path, so `lengths` alone masks the tail of
+    # the last valid page and every -1 (clamped-to-0) padding page.
+    pos = i * page_size + jax.lax.broadcasted_iota(jnp.int32, (H, page), 1)
+    s = jnp.where(pos < lengths_ref[b], s, _NEG_INF)
+
+    m_prev = m_ref[...]                                 # (H, 1)
+    m_cur = jnp.maximum(m_prev, s.max(axis=1, keepdims=True))
+    alpha = jnp.exp(m_prev - m_cur)
+    p = jnp.exp(s - m_cur)                              # (H, page)
+    l_ref[...] = l_ref[...] * alpha + p.sum(axis=1, keepdims=True)
+    # (H, page) x (page, r) -> (H, r) latent aggregate
+    pv = jax.lax.dot_general(p, ckv, (((1,), (0,)), ((), ())),
+                             preferred_element_type=jnp.float32)
+    acc_ref[...] = acc_ref[...] * alpha + pv
+    m_ref[...] = m_cur
+
+    @pl.when(i == np_ - 1)
+    def _flush():
+        denom = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0] = (acc_ref[...] / denom).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("page_size", "scale", "interpret"))
+def mla_paged_attention_pallas(q_lat, q_rope, ckv_pool, kr_pool,
+                               block_tables, lengths, *, page_size: int,
+                               scale: float, interpret: bool = False):
+    """Absorbed MLA tree-decode over latent pages.
+
+    q_lat: (B, H, r) query pre-multiplied by W_uk (latent space);
+    q_rope: (B, H, rd) decoupled-rope query; ckv_pool: (P, page, r);
+    kr_pool: (P, page, rd); block_tables: (B, max_pages) int32 (-1 pad);
+    lengths: (B,).  Returns the latent output (B, H, r) — the caller
+    up-projects with W_uv and mixes with W_o.
+    """
+    B, H, r = q_lat.shape
+    P, page, rd = kr_pool.shape
+    assert page == page_size and ckv_pool.shape[:2] == (P, page)
+    max_pages = block_tables.shape[1]
+    safe_tables = jnp.maximum(block_tables, 0).astype(jnp.int32)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(B, max_pages),
+        in_specs=[
+            pl.BlockSpec((1, H, r), lambda b, i, tbl, ln: (b, 0, 0)),
+            pl.BlockSpec((1, H, rd), lambda b, i, tbl, ln: (b, 0, 0)),
+            pl.BlockSpec((None, page, r),
+                         lambda b, i, tbl, ln: (tbl[b, i], 0, 0)),
+            pl.BlockSpec((None, page, rd),
+                         lambda b, i, tbl, ln: (tbl[b, i], 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, H, r), lambda b, i, tbl, ln: (b, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((H, r), jnp.float32),
+            pltpu.VMEM((H, 1), jnp.float32),
+            pltpu.VMEM((H, 1), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        functools.partial(_mla_paged_kernel, scale=float(scale),
+                          page_size=page_size),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, H, r), q_lat.dtype),
+        compiler_params=CompilerParams(
+            dimension_semantics=("parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(safe_tables, lengths, q_lat, q_rope, ckv_pool, kr_pool)

@@ -107,6 +107,35 @@ def paged_attention_ref(q, k_pool, v_pool, block_tables, lengths, *,
     return out.astype(q.dtype)
 
 
+def mla_paged_attention_ref(q_lat, q_rope, ckv_pool, kr_pool, block_tables,
+                            lengths, *, page_size: int, scale: float):
+    """Absorbed-MLA tree-decode oracle: dense page gather, then masked
+    latent attention.
+
+    q_lat: (B, H, r) latent query (already multiplied by W_uk);
+    q_rope: (B, H, rd); ckv_pool: (P, page, r); kr_pool: (P, page, rd);
+    block_tables: (B, max_pages) int32 (-1 = unused); lengths: (B,).
+    Returns (B, H, r) latent output.
+    """
+    B, H, r = q_lat.shape
+    tables = jnp.maximum(block_tables, 0)            # (B, MP)
+    ckv = ckv_pool[tables]                           # (B, MP, page, r)
+    kr = kr_pool[tables]
+    _, MP, PG, _ = ckv.shape
+    ckv = ckv.reshape(B, MP * PG, r).astype(jnp.float32)
+    kr = kr.reshape(B, MP * PG, -1).astype(jnp.float32)
+    logits = (jnp.einsum("bhr,bsr->bhs", q_lat.astype(jnp.float32), ckv)
+              + jnp.einsum("bhd,bsd->bhs", q_rope.astype(jnp.float32), kr)
+              ) * scale
+    pos = jnp.arange(MP * PG)[None, :]
+    valid = (pos < lengths[:, None]) \
+        & (block_tables[:, pos[0] // page_size] >= 0)
+    logits = jnp.where(valid[:, None, :], logits, -1e30)
+    p = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhs,bsr->bhr", p, ckv)
+    return out.astype(q_lat.dtype)
+
+
 def mamba_scan_ref(u, dt, B_, C_, A, D, h0):
     """Selective-scan oracle. u,dt: (B,T,d_in); B_,C_: (B,T,N);
     A: (d_in,N); D: (d_in,); h0: (B,d_in,N)."""

@@ -5,14 +5,14 @@ attention layer, shape ``(num_pages, page_size, n_kv, head_dim)``) plus
 recurrent-state slot arrays for SSM/hybrid layers.  The host side is a page
 allocator with **refcounts**: forking a search path at a segment boundary
 copies the child's *block table* (a Python list of page ids) and bumps the
-refcount of every shared page — KV data is never copied (the paper's prefix
-amortization).  Branches only ever happen at page-aligned segment
-boundaries (DESIGN.md deviation #1 — the paper's own §4.2 shows misaligned
-fallback is harmful), so copy-on-write is never needed.
+refcount of every shared page — KV data of full pages is never copied (the
+paper's prefix amortization).  A branch at a non-page-aligned boundary
+copies-on-write at most the one partial tail page.
 
 Recurrent state (Mamba conv/ssm, RWKV wkv/shift) *is* copied on fork — it is
-a running reduction, not a prefix (DESIGN.md §4) — via slot-to-slot device
-copies batched per fork generation.
+a running reduction, not a prefix (DESIGN.md §4).  Both kinds of fork copy
+(COW page rows, slot rows) are collected per branching round and applied by
+:meth:`PagedKVState.apply_forks` in a single jitted multi-layer dispatch.
 """
 from __future__ import annotations
 
@@ -30,6 +30,12 @@ class OutOfPages(RuntimeError):
     pass
 
 
+def bucket_pow2(n: int, minimum: int = 1) -> int:
+    """Round up to the next power of two — THE jit-shape bucketing policy
+    (engine batch/seq buckets and apply_forks pad buckets share it)."""
+    return max(minimum, 1 << (max(n, 1) - 1).bit_length())
+
+
 @dataclasses.dataclass
 class PagePool:
     """Host-side page allocator with refcounts."""
@@ -39,6 +45,7 @@ class PagePool:
     def __post_init__(self):
         self.refcount = np.zeros(self.num_pages, dtype=np.int32)
         self.free: List[int] = list(range(self.num_pages - 1, -1, -1))
+        self._in_use = 0          # incremental |{p: refcount[p] > 0}|
 
     def alloc(self) -> int:
         if not self.free:
@@ -46,6 +53,7 @@ class PagePool:
         pid = self.free.pop()
         assert self.refcount[pid] == 0
         self.refcount[pid] = 1
+        self._in_use += 1
         return pid
 
     def retain(self, pid: int) -> None:
@@ -57,10 +65,13 @@ class PagePool:
         self.refcount[pid] -= 1
         if self.refcount[pid] == 0:
             self.free.append(pid)
+            self._in_use -= 1
 
     @property
     def pages_in_use(self) -> int:
-        return int((self.refcount > 0).sum())
+        # maintained incrementally: alloc/release are on the per-token hot
+        # path and an O(num_pages) refcount scan here dominated them.
+        return self._in_use
 
 
 class SlotAllocator:
@@ -140,6 +151,8 @@ class PagedKVState:
                 }
         # whisper cross-attention KV: per request, shared by every branch
         self.cross_kv: Optional[tuple] = None
+        # jitted fork-copy dispatches, cached per (page-, slot-count) bucket
+        self._fork_fns: Dict[tuple, object] = {}
 
     # -- host bookkeeping ---------------------------------------------------
 
@@ -153,16 +166,85 @@ class PagedKVState:
         for pid in table:
             self.pool.release(pid)
 
-    def copy_slots(self, src_slots: List[int], dst_slots: List[int]) -> None:
-        """Batched device copy of recurrent state rows (fork of SSM state)."""
-        if not src_slots or not self.rec_state:
+    # -- batched fork application -------------------------------------------
+
+    @staticmethod
+    def _pad_pairs(src: List[int], dst: List[int]) -> tuple:
+        """Pad (src, dst) to a power-of-two bucket so jit caches a few
+        shapes, not one per round.  Padding repeats the first real pair:
+        duplicate scatter updates to one index are order-unspecified in
+        JAX, but duplicates of the *same* (src, dst) write identical bytes,
+        so the result stays deterministic whatever rows the caller uses."""
+        n = len(src)
+        if n == 0:
+            return (jnp.zeros((0,), jnp.int32), jnp.zeros((0,), jnp.int32),
+                    0)
+        nb = bucket_pow2(n)
+        pad = nb - n
+        return (jnp.asarray(list(src) + [src[0]] * pad, jnp.int32),
+                jnp.asarray(list(dst) + [dst[0]] * pad, jnp.int32), nb)
+
+    def _get_fork_fn(self, n_pages: int, n_slots: int):
+        """Jitted multi-layer copy, shaped by which state kinds fork this
+        round.  The function only takes (and returns) the pytrees it
+        mutates — an untouched pool routed through jit would come back as
+        a fresh output buffer, i.e. a full pool copy per round."""
+        key = (n_pages, n_slots)
+        if key not in self._fork_fns:
+            def copy_rows(tree, src, dst):
+                return {i: {k: v.at[dst].set(v[src]) for k, v in st.items()}
+                        for i, st in tree.items()}
+
+            if n_pages and n_slots:
+                def fork_fn(pools, rec, psrc, pdst, ssrc, sdst):
+                    return (copy_rows(pools, psrc, pdst),
+                            copy_rows(rec, ssrc, sdst))
+                donate = (0, 1)
+            elif n_pages:
+                def fork_fn(pools, psrc, pdst):
+                    return copy_rows(pools, psrc, pdst)
+                donate = (0,)
+            else:
+                def fork_fn(rec, ssrc, sdst):
+                    return copy_rows(rec, ssrc, sdst)
+                donate = (0,)
+            # donate the pools/rec buffers (the caller rebinds them to the
+            # result) so XLA scatters the few forked rows in place instead
+            # of copying whole (num_pages, ...) arrays each round; CPU has
+            # no donation support and would warn per dispatch.
+            if jax.default_backend() == "cpu":
+                donate = ()
+            self._fork_fns[key] = jax.jit(fork_fn, donate_argnums=donate)
+        return self._fork_fns[key]
+
+    def apply_forks(self, page_src: List[int], page_dst: List[int],
+                    slot_src: List[int] = (), slot_dst: List[int] = ()
+                    ) -> None:
+        """Apply a whole branching round's fork copies in ONE jitted
+        dispatch: COW page rows in every attention layer's pool and
+        recurrent-state rows in every SSM/RWKV layer's slot arrays.
+
+        The sources must still hold their pre-fork contents when this runs
+        (the engine allocates fresh dst pages/slots, so a round's copies
+        never alias), which is what lets dozens of per-fork-per-layer
+        ``v.at[dst].set(v[src])`` dispatches collapse into one call.
+        """
+        if not self.rec_state:
+            slot_src, slot_dst = [], []
+        if not self.kv_pools:
+            page_src, page_dst = [], []
+        if not page_src and not slot_src:
             return
-        src = jnp.asarray(src_slots, jnp.int32)
-        dst = jnp.asarray(dst_slots, jnp.int32)
-        for i, st in self.rec_state.items():
-            self.rec_state[i] = {
-                k: v.at[dst].set(v[src]) for k, v in st.items()
-            }
+        psrc, pdst, npg = self._pad_pairs(list(page_src), list(page_dst))
+        ssrc, sdst, nsl = self._pad_pairs(list(slot_src), list(slot_dst))
+        fn = self._get_fork_fn(npg, nsl)
+        if npg and nsl:
+            self.kv_pools, self.rec_state = fn(self.kv_pools, self.rec_state,
+                                               psrc, pdst, ssrc, sdst)
+        elif npg:
+            self.kv_pools = fn(self.kv_pools, psrc, pdst)
+        else:
+            self.rec_state = fn(self.rec_state, ssrc, sdst)
 
     # -- stats ---------------------------------------------------------------
 

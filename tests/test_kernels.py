@@ -8,9 +8,17 @@ from numpy.testing import assert_allclose
 
 from repro.kernels import ref
 from repro.kernels.flash_attention import flash_attention_pallas
-from repro.kernels.paged_attention import paged_attention_pallas
+from repro.kernels.paged_attention import (
+    mla_paged_attention_pallas,
+    paged_attention_pallas,
+)
 from repro.kernels.rmsnorm import rmsnorm_pallas
 from repro.kernels.wkv6 import wkv6_pallas
+
+# every test here executes real Pallas kernel bodies through the CPU
+# interpreter — select with `-m pallas_interpret`, skip with
+# `-m "not pallas_interpret"`; they run (and pass) under plain tier-1.
+pytestmark = pytest.mark.pallas_interpret
 
 
 def _tol(dtype):
@@ -114,6 +122,76 @@ def test_paged_vs_dense_decode():
     got = paged_attention_pallas(q, kp, vp, tables, lengths, page_size=page,
                                  interpret=True)
     want = ref.decode_attention_ref(q, k, v, lengths)
+    assert_allclose(np.asarray(got), np.asarray(want), rtol=3e-5, atol=3e-5)
+
+
+# ---------------------------------------------------------------------------
+# MLA (absorbed-latent) paged attention
+# ---------------------------------------------------------------------------
+
+def _mla_inputs(key, B, H, r, rd, P, page, MP):
+    ks = jax.random.split(key, 4)
+    return (jax.random.normal(ks[0], (B, H, r)),
+            jax.random.normal(ks[1], (B, H, rd)),
+            jax.random.normal(ks[2], (P, page, r)),
+            jax.random.normal(ks[3], (P, page, rd)))
+
+
+@pytest.mark.parametrize("H,r,rd", [(4, 16, 8), (2, 32, 16), (8, 64, 32),
+                                    (1, 16, 8)])
+def test_mla_paged_attention(H, r, rd):
+    """Parity vs the jnp oracle across head counts, ragged lengths, and
+    padded (-1) block-table entries."""
+    B, P, page, MP = 3, 24, 8, 5
+    ql, qr, ckv, kr = _mla_inputs(jax.random.PRNGKey(8), B, H, r, rd,
+                                  P, page, MP)
+    tables = jnp.array([[3, 5, 1, -1, -1],
+                        [0, 2, 7, 9, -1],
+                        [11, 12, 13, 14, 15]], jnp.int32)
+    lengths = jnp.array([19, 26, 40], jnp.int32)
+    scale = 1.0 / ((r + rd) ** 0.5)
+    got = mla_paged_attention_pallas(ql, qr, ckv, kr, tables, lengths,
+                                     page_size=page, scale=scale,
+                                     interpret=True)
+    want = ref.mla_paged_attention_ref(ql, qr, ckv, kr, tables, lengths,
+                                       page_size=page, scale=scale)
+    assert_allclose(np.asarray(got), np.asarray(want), rtol=3e-5, atol=3e-5)
+
+
+@pytest.mark.parametrize("lengths", [[1, 8, 9], [7, 16, 31], [32, 32, 32]])
+def test_mla_paged_attention_lengths(lengths):
+    """Sweep page-boundary lengths: single token, exact page multiples,
+    one-past-page."""
+    B, H, r, rd, P, page = 3, 4, 16, 8, 16, 8
+    ql, qr, ckv, kr = _mla_inputs(jax.random.PRNGKey(9), B, H, r, rd,
+                                  P, page, 4)
+    tables = jnp.array([[0, 1, 2, 3], [4, 5, 6, 7], [8, 9, 10, 11]],
+                       jnp.int32)
+    ln = jnp.asarray(lengths, jnp.int32)
+    got = mla_paged_attention_pallas(ql, qr, ckv, kr, tables, ln,
+                                     page_size=page, scale=0.25,
+                                     interpret=True)
+    want = ref.mla_paged_attention_ref(ql, qr, ckv, kr, tables, ln,
+                                       page_size=page, scale=0.25)
+    assert_allclose(np.asarray(got), np.asarray(want), rtol=3e-5, atol=3e-5)
+
+
+def test_mla_paged_dispatch_interpret(monkeypatch):
+    """REPRO_PALLAS_INTERPRET=1 routes kops.mla_paged_attention through the
+    interpreted Pallas kernel; parity with the reference path."""
+    from repro.kernels import ops as kops
+
+    B, H, r, rd, P, page = 2, 4, 16, 8, 8, 8
+    ql, qr, ckv, kr = _mla_inputs(jax.random.PRNGKey(10), B, H, r, rd,
+                                  P, page, 3)
+    tables = jnp.array([[0, 1, -1], [2, 3, 4]], jnp.int32)
+    lengths = jnp.array([11, 22], jnp.int32)
+    kw = dict(page_size=page, scale=0.2)
+    monkeypatch.setenv("REPRO_PALLAS_INTERPRET", "1")
+    got = kops.mla_paged_attention(ql, qr, ckv, kr, tables, lengths, **kw)
+    monkeypatch.setenv("REPRO_PALLAS_INTERPRET", "0")
+    monkeypatch.setenv("REPRO_FORCE_REF", "1")
+    want = kops.mla_paged_attention(ql, qr, ckv, kr, tables, lengths, **kw)
     assert_allclose(np.asarray(got), np.asarray(want), rtol=3e-5, atol=3e-5)
 
 

@@ -49,6 +49,10 @@ print("ALL_OK")
 
 @pytest.mark.timeout(540)
 def test_ep_moe_matches_plain_subprocess():
+    if not hasattr(jax.sharding, "AxisType"):
+        pytest.skip("needs the sharding-in-types mesh API "
+                    "(jax.sharding.AxisType / jax.set_mesh); "
+                    "not in this jax version")
     env = dict(os.environ)
     env["PYTHONPATH"] = os.path.join(ROOT, "src")
     env.pop("XLA_FLAGS", None)

@@ -1,6 +1,10 @@
 """Property-based tests (hypothesis) on the system's invariants."""
 import jax.numpy as jnp
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis",
+                    reason="hypothesis not installed in this environment")
 from hypothesis import given, settings, strategies as st
 
 from repro.core.advantage import treepo_advantage

@@ -72,6 +72,8 @@ def test_warmup_schedule():
 
 
 def test_checkpoint_roundtrip_mixed_dtypes():
+    pytest.importorskip("zstandard",
+                        reason="checkpoint compression needs zstandard")
     tree = {
         "p": {"w": jnp.arange(6, dtype=jnp.bfloat16).reshape(2, 3)},
         "opt": (jnp.zeros((), jnp.int32), [jnp.ones(2)]),
@@ -90,6 +92,8 @@ def test_checkpoint_roundtrip_mixed_dtypes():
 
 
 def test_checkpoint_atomic_no_partial(tmp_path):
+    pytest.importorskip("zstandard",
+                        reason="checkpoint compression needs zstandard")
     save_checkpoint(str(tmp_path), 1, {"x": jnp.ones(3)})
     files = os.listdir(tmp_path)
     assert files == ["step_00000001.ckpt"]

@@ -91,6 +91,54 @@ def test_divergence_after_fork():
     assert len(firsts) > 1  # with V=512 and T=1.0 collisions are unlikely
 
 
+def test_fork_paths_batched_on_device_sampling():
+    """A whole branching generation forks in one engine call: children
+    diverge (on-device fork_sample) with finite, <=0 logprobs, and the
+    round costs O(1) jitted dispatches, not one per fork per layer."""
+    cfg, params, eng = _engine("yi-6b", seed=3)
+    [root] = eng.prefill_queries([[9, 8, 7]])
+    d0 = eng.stats.fork_dispatches
+    children = eng.fork_paths([root] * 6)
+    assert len(children) == 6
+    # one COW/slot-copy dispatch at most + one fork_sample dispatch
+    assert eng.stats.fork_dispatches - d0 <= 2
+    firsts = {c.pending_token for c in children} | {root.pending_token}
+    assert len(firsts) > 1  # V=512, T=1.0: collisions of all 7 ~impossible
+    for c in children:
+        assert np.isfinite(c.pending_logprob) and c.pending_logprob <= 0.0
+        assert c.logits_buf is root.logits_buf  # boundary logits shared
+
+
+def test_fork_paths_recurrent_single_dispatch():
+    """Recurrent archs batch their slot copies into the same round
+    dispatch; children still diverge and carry valid state slots."""
+    cfg, params, eng = _engine("rwkv6-7b", seed=5)
+    [root] = eng.prefill_queries([[1, 2, 3, 4]])
+    d0 = eng.stats.fork_dispatches
+    children = eng.fork_paths([root] * 4)
+    assert eng.stats.fork_dispatches - d0 <= 2
+    assert all(c.slot >= 0 and c.slot != root.slot for c in children)
+    assert len({c.slot for c in children}) == 4
+    res = eng.decode_segments([root] + children)
+    assert all(np.isfinite(r.seg_logprob) for r in res)
+
+
+def test_decode_host_transfer_is_vocab_free():
+    """Steady-state decode transfer is O(R*l) tokens + O(R) scalars — the
+    (Rb, V) boundary logits never cross to the host."""
+    cfg, params, eng = _engine("yi-6b")
+    [root] = eng.prefill_queries([[1, 2, 3]])
+    before = eng.stats.host_bytes
+    eng.decode_segments([root])
+    per_round = eng.stats.host_bytes - before
+    # Rb=1, l=8: tokens + logprobs (Rb*l*4 each) + pending tok/lp (Rb*4 each)
+    assert per_round == 1 * 8 * 4 * 2 + 1 * 4 * 2
+    assert per_round < cfg.vocab_size * 4  # old path moved >= V*4 per round
+    # the full distribution is still reachable as an explicit debug fetch
+    lg = root.last_logits
+    assert lg.shape == (cfg.vocab_size,) and np.isfinite(lg).all()
+
+
 def test_sequential_baseline_no_branching():
     cfg, params, eng = _engine("yi-6b", tc=TC)
     trees, rep = sample_sequential(eng, [[1, 2, 3]], ["x"],
