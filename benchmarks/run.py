@@ -15,6 +15,7 @@ import traceback
 
 from benchmarks import (
     decode_hotpath,
+    train_hotpath,
     fig4_depth_segment,
     fig5_rollout_scaling,
     fig6_advantage_ablation,
@@ -28,6 +29,7 @@ from benchmarks import (
 
 BENCHES = [
     ("decode_hotpath", decode_hotpath),
+    ("train_hotpath", train_hotpath),
     ("table2_efficiency", table2_efficiency),
     ("fig4_depth_segment", fig4_depth_segment),
     ("fig5_rollout_scaling", fig5_rollout_scaling),

@@ -1,0 +1,139 @@
+"""Training hot-path benchmark: device-residency of the update half.
+
+The twin of ``decode_hotpath``: for each trainer mode (grpo /
+grpo_tree / treepo) it rolls out once, then drives the SAME trees
+through both training paths:
+
+* **legacy** — per-tree unjitted advantage calls, dense (N, L) host
+  pack (mask + token-broadcast advantages + host-side global norm),
+  one jitted dispatch per ppo epoch;
+* **new** — one jitted ``batch_treepo_advantage`` dispatch over the
+  padded (Q, G, J) tensors recorded during sampling, compact pack
+  ((N, L) tokens/logprobs + (N,) lengths/advantages; mask, broadcast
+  and global norm derived on device), one jitted K-epoch ``lax.scan``
+  update per (N, L) bucket with donated params/opt-state.
+
+Reported per mode: host-pack bytes per step, build (reward → advantage
+→ pack) wall time, and steady-state (post-compile) update wall time.
+Wall-clock on this container is relative, not TPU; the byte counts are
+exact.  Emits ``results/BENCH_train.json``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import fmt_row, warmed_trainer
+from repro.configs.base import TrainConfig, TreeConfig
+from repro.rl.trainer import TrainerMode
+
+OUT_PATH = os.path.join(os.path.dirname(__file__), "..", "results",
+                        "BENCH_train.json")
+
+MODES = [TrainerMode.GRPO, TrainerMode.GRPO_TREE, TrainerMode.TREEPO]
+
+
+def _cfgs(ppo_epochs: int):
+    tree_cfg = TreeConfig(max_depth=4, segment_len=16, max_width=4,
+                          branch_factor=2, init_divergence_low=2,
+                          init_divergence_high=2, temperature=0.9)
+    train_cfg = TrainConfig(batch_size=2, group_size=4,
+                            oversample_factor=2, max_resample_rounds=0,
+                            learning_rate=5e-4, reward_shaping=0.1,
+                            ppo_epochs=ppo_epochs)
+    return tree_cfg, train_cfg
+
+
+def _snapshot(tr):
+    return jax.tree.map(np.array, (tr.params, tr.opt_state))
+
+
+def _restore(tr, snap):
+    tr.params, tr.opt_state = jax.tree.map(jnp.asarray, snap)
+
+
+def _time_best(fn, reps: int = 3) -> float:
+    best = float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        fn()
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def run(quick: bool = True, out_path: str = OUT_PATH) -> dict:
+    n_queries = 2 if quick else 4
+    ppo_epochs = 2
+    bc_steps = 30 if quick else 60
+    reps = 3 if quick else 5
+    rows = []
+    print("\n== Train hot path: batched advantage + scanned K-epoch "
+          "update vs legacy host loop ==")
+    hdr = ["mode", "N", "L", "pack_B", "legacy_B", "build_s",
+           "lg_build_s", "upd_s", "lg_upd_s"]
+    widths = [10, 5, 5, 9, 9, 9, 10, 9, 9]
+    print(fmt_row(hdr, widths))
+    for mode in MODES:
+        tree_cfg, train_cfg = _cfgs(ppo_epochs)
+        tr = warmed_trainer(mode, tree_cfg=tree_cfg, train_cfg=train_cfg,
+                            bc_steps=bc_steps, seed=3)
+        trees, _ = tr.rollout(n_queries)
+        if not any(t.finished for t in trees):
+            continue
+        # warm both build paths (jit trace of the advantage dispatch)
+        batch = tr.build_batch(trees)
+        legacy = tr.build_batch_legacy(trees)
+        if batch.tokens.shape[0] == 0:
+            # dynamic sampling starved the batch; disable the filter so
+            # the update path is still exercised
+            tr.train_cfg = dataclasses.replace(
+                tr.train_cfg, dynamic_sampling=False)
+            batch = tr.build_batch(trees)
+            legacy = tr.build_batch_legacy(trees)
+        build_s = _time_best(lambda: tr.build_batch(trees), reps)
+        legacy_build_s = _time_best(
+            lambda: tr.build_batch_legacy(trees), reps)
+
+        snap = _snapshot(tr)
+        tr.update(batch)            # compile the scanned K-epoch update
+        _restore(tr, snap)
+        upd_s = _time_best(lambda: tr.update(batch), reps)
+        _restore(tr, snap)
+        tr.update_legacy(legacy)    # compile the per-epoch legacy update
+        _restore(tr, snap)
+        legacy_upd_s = _time_best(lambda: tr.update_legacy(legacy), reps)
+
+        N, L = batch.tokens.shape
+        row = {
+            "mode": mode.value,
+            "ppo_epochs": ppo_epochs,
+            "batch_rows": int(N),
+            "bucket_len": int(L),
+            "trajectories": int(sum(t.num_trajectories for t in trees)),
+            "host_pack_bytes": int(batch.host_pack_bytes),
+            "legacy_host_pack_bytes": int(legacy.host_pack_bytes),
+            "build_s": round(build_s, 4),
+            "legacy_build_s": round(legacy_build_s, 4),
+            "update_s": round(upd_s, 4),
+            "legacy_update_s": round(legacy_upd_s, 4),
+            "update_dispatches_per_step": 1,
+            "legacy_update_dispatches_per_step": ppo_epochs,
+        }
+        rows.append(row)
+        print(fmt_row([mode.value, N, L, batch.host_pack_bytes,
+                       legacy.host_pack_bytes, round(build_s, 4),
+                       round(legacy_build_s, 4), round(upd_s, 4),
+                       round(legacy_upd_s, 4)], widths))
+    result = {"benchmark": "train_hotpath", "quick": quick,
+              "wall_is_container_relative": True, "rows": rows}
+    os.makedirs(os.path.dirname(os.path.abspath(out_path)), exist_ok=True)
+    with open(out_path, "w") as f:
+        json.dump(result, f, indent=2)
+    print(f"wrote {os.path.relpath(out_path)}")
+    return result

@@ -26,4 +26,10 @@ from repro.core.sampler import (
     sample_trees,
     sequential_tree_cfg,
 )
-from repro.core.tree import Path, QueryTree, Status, ancestor_matrix
+from repro.core.tree import (
+    Path,
+    QueryTree,
+    Status,
+    ancestor_matrix,
+    batch_group_tensors,
+)

@@ -20,18 +20,39 @@ All return a per-trajectory advantage (G,); token-level  = broadcast over
 the trajectory's tokens (Eq. 1 applies it at every t).
 REINFORCE++-style *global* normalization across the whole batch of queries
 is applied separately (``global_normalize``).
+
+Batched dispatch: :func:`batch_treepo_advantage` is ONE jitted call over
+the whole (Q, G) batch.  Ragged groups are handled by a validity ``mask``
+plus sentinel ancestor ids on padded slots (each padded trajectory is a
+singleton subgroup with a unique negative id — see
+``repro.core.tree.batch_group_tensors`` — so it cannot contaminate any
+real subgroup's mean/std); masked entries are zeroed on output and
+excluded from the global normalization.
 """
 from __future__ import annotations
+
+import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
 
-def grpo_advantage(rewards: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
-    """Eq. 2: (R - mean) / std within the group.  rewards: (G,)."""
-    mean = rewards.mean()
-    std = rewards.std()
-    return (rewards - mean) / (std + eps)
+def grpo_advantage(rewards: jnp.ndarray, eps: float = 1e-6,
+                   mask: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """Eq. 2: (R - mean) / std within the group.  rewards: (G,).
+
+    ``mask`` (G,) restricts the group statistics to valid entries (ragged
+    batched groups); masked entries return 0.
+    """
+    if mask is None:
+        mean = rewards.mean()
+        std = rewards.std()
+        return (rewards - mean) / (std + eps)
+    n = jnp.maximum(mask.sum(), 1.0)
+    mean = (rewards * mask).sum() / n
+    var = (((rewards - mean) ** 2) * mask).sum() / n
+    return (rewards - mean) / (jnp.sqrt(var) + eps) * mask
 
 
 def _subgroup_means(rewards: jnp.ndarray, anc: jnp.ndarray) -> jnp.ndarray:
@@ -90,6 +111,7 @@ def treepo_advantage(
     means = _subgroup_means(rewards, anc)        # (G, J)
     adv_j = rewards[:, None] - means             # (G, J) = Â_{i,·,j}
 
+    std_weights = None
     if variant == "treepo_no_root":
         adv_j = adv_j[:, 1:]
         weights = jnp.ones_like(adv_j)
@@ -98,6 +120,10 @@ def treepo_advantage(
     elif variant == "treepo_subgroup_reject":
         stds = _subgroup_stds(rewards, anc)      # Eq. 7: drop degenerate G_j
         weights = (stds > eps).astype(jnp.float32)
+        # Eq. 7 rejects a degenerate subgroup from the whole estimator:
+        # the std in the denominator runs over the KEPT per-depth terms
+        # only, matching the paper's ablation definition
+        std_weights = weights
     elif variant == "treepo":
         weights = jnp.ones_like(adv_j)           # Eq. 5: plain averaging
     else:
@@ -107,7 +133,12 @@ def treepo_advantage(
     agg = (weights * adv_j).sum(axis=1) / wsum
     # normalize by std over the per-depth advantages of this trajectory
     # (the paper's std({Â_{i,t,j}}^{J-1}) denominator term)
-    per_traj_std = adv_j.std(axis=1)
+    if std_weights is None:
+        std_weights = jnp.ones_like(adv_j)
+    n = jnp.maximum(std_weights.sum(axis=1), 1.0)
+    m = (std_weights * adv_j).sum(axis=1) / n
+    var = (std_weights * (adv_j - m[:, None]) ** 2).sum(axis=1) / n
+    per_traj_std = jnp.sqrt(var)
     return agg / (per_traj_std + eps)
 
 
@@ -134,17 +165,37 @@ def query_keep_mask(rewards: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
     return rewards.std(axis=1) > eps
 
 
-def batch_treepo_advantage(rewards: jnp.ndarray, anc: jnp.ndarray,
-                           *, variant: str = "treepo",
-                           use_global_norm: bool = True,
-                           eps: float = 1e-6) -> jnp.ndarray:
-    """Vectorized over queries: rewards (Q, G), anc (Q, G, J) -> (Q, G)."""
+@functools.partial(jax.jit, static_argnames=("variant", "use_global_norm"))
+def _batch_advantage_jit(rewards: jnp.ndarray, anc: jnp.ndarray,
+                         mask: jnp.ndarray, variant: str,
+                         use_global_norm: bool, eps: float) -> jnp.ndarray:
     if variant == "grpo":
-        adv = jax.vmap(lambda r: grpo_advantage(r, eps))(rewards)
+        adv = jax.vmap(
+            lambda r, m: grpo_advantage(r, eps=eps, mask=m))(rewards, mask)
     else:
         adv = jax.vmap(
             lambda r, a: treepo_advantage(r, a, variant=variant, eps=eps)
         )(rewards, anc)
+        adv = adv * mask
     if use_global_norm and variant != "grpo":
-        adv = global_normalize(adv, jnp.ones_like(adv), eps)
+        adv = global_normalize(adv, mask, eps)
     return adv
+
+
+def batch_treepo_advantage(rewards: jnp.ndarray, anc: jnp.ndarray,
+                           mask: Optional[jnp.ndarray] = None,
+                           *, variant: str = "treepo",
+                           use_global_norm: bool = True,
+                           eps: float = 1e-6) -> jnp.ndarray:
+    """One jitted dispatch over the whole batch of queries.
+
+    rewards (Q, G), anc (Q, G, J), mask (Q, G) validity -> (Q, G).
+    mask=None means every slot is a real trajectory.  Padded slots must
+    carry unique sentinel ancestor ids (``batch_group_tensors``) so the
+    dense equality kernels see them as singleton subgroups.
+    """
+    if mask is None:
+        mask = jnp.ones(rewards.shape, jnp.float32)
+    return _batch_advantage_jit(jnp.asarray(rewards), jnp.asarray(anc),
+                                jnp.asarray(mask, jnp.float32), variant,
+                                use_global_norm, eps)

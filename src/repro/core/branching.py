@@ -20,7 +20,7 @@ from __future__ import annotations
 
 import math
 import random
-from typing import List, Sequence
+from typing import Dict, List, Sequence
 
 from repro.configs.base import TreeConfig
 
@@ -41,6 +41,42 @@ def depth_budget(tree_cfg: TreeConfig, depth: int, init_div: int,
     raw = init_div * (tree_cfg.branch_factor ** depth)
     cap = max(tree_cfg.max_width - num_finished, 0)
     return max(min(raw, cap), 0)
+
+
+def mixed_depth_budgets(tree_cfg: TreeConfig, depths: Sequence[int],
+                        init_div: int, num_finished: int) -> Dict[int, int]:
+    """Per-depth total budgets for a mixed-depth active set.
+
+    After DFS fallback the active list can hold paths at several depths
+    (each fallback child restarts at its fork depth j), so one
+    ``depth_budget(active[0].depth)`` call cannot be applied to all of
+    them.  Each unique depth gets its own ``init_div * N^d`` allowance,
+    and the shared width cap (``max_width - finished``) is split in two
+    phases: first one continuation per path (deepest group first — a
+    fresh fallback child is never starved by another depth's fan-out),
+    then extra forks up to each group's remaining allowance, again
+    deepest first (DFS bias: prefer long-reasoning paths).
+    Returns {depth: total budget for that depth's group}.
+
+    With a single depth present this reduces exactly to
+    ``{d: depth_budget(tree_cfg, d, init_div, num_finished)}``.
+    """
+    from collections import Counter
+
+    counts = Counter(depths)
+    cap = max(tree_cfg.max_width - num_finished, 0)
+    raws = {d: init_div * (tree_cfg.branch_factor ** d) for d in counts}
+    order = sorted(counts, reverse=True)
+    budgets: Dict[int, int] = {}
+    for d in order:                        # phase 1: keep paths alive
+        take = max(min(counts[d], raws[d], cap), 0)
+        budgets[d] = take
+        cap -= take
+    for d in order:                        # phase 2: distribute fan-out
+        extra = max(min(raws[d] - budgets[d], cap), 0)
+        budgets[d] += extra
+        cap -= extra
+    return budgets
 
 
 def softmax_weights(seg_logprobs: Sequence[float], tau: float,

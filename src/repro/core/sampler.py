@@ -15,12 +15,18 @@ through segment-synchronous rounds:
 Sequential (non-tree) sampling — the paper's baseline — is the same
 machinery with ``branch_factor=1`` and ``init_divergence == w``: ``w``
 independent rollouts that share only the prompt KV.
+
+Training-side hooks: an optional ``score_fn`` scores each trajectory the
+moment it finishes (memoized on ``Path.reward`` — one reward evaluation
+per trajectory, ever), and every finished path records its padded
+ancestor row incrementally on the tree, so the trainer packs the batched
+(Q, G, J) advantage inputs without per-tree reconstruction.
 """
 from __future__ import annotations
 
 import dataclasses
 import random
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 from repro.configs.base import TreeConfig
 from repro.core import branching as br
@@ -28,7 +34,9 @@ from repro.core.early_stop import segment_stop_reason, truncate_at_eos
 from repro.core.engine import TreeEngine
 from repro.core.fallback import pick_fallback
 from repro.core.tree import Path, QueryTree, Status, new_node_id
-from repro.data.tokenizer import ByteTokenizer
+
+# scores a finished LEAF trajectory (FAILED paths are pinned to 0.0)
+ScoreFn = Callable[[QueryTree, Path], float]
 
 
 @dataclasses.dataclass
@@ -42,10 +50,15 @@ class SamplerReport:
 
 
 def _finish_path(tree: QueryTree, path: Path, status: Status,
-                 reason: str, engine: TreeEngine) -> None:
+                 reason: str, engine: TreeEngine,
+                 score_fn: Optional[ScoreFn] = None) -> None:
     path.status = status
     path.finish_reason = reason
-    tree.finished.append(path)
+    if status == Status.FAILED:
+        path.reward = 0.0             # failed trajectories earn nothing
+    elif score_fn is not None:
+        path.reward = float(score_fn(tree, path))
+    tree.add_finished(path)
     if path.ep is not None:
         # finished paths never sample again (fallback forks read only their
         # KV pages), so drop the boundary-logits reference now rather than
@@ -58,7 +71,8 @@ def _finish_path(tree: QueryTree, path: Path, status: Status,
 
 def _process_segment(tree: QueryTree, path: Path, seg_tokens: List[int],
                      seg_logprobs: List[float], seg_logprob: float,
-                     tree_cfg: TreeConfig, engine: TreeEngine) -> None:
+                     tree_cfg: TreeConfig, engine: TreeEngine,
+                     score_fn: Optional[ScoreFn] = None) -> None:
     seg_tokens, seg_logprobs = truncate_at_eos(seg_tokens, seg_logprobs)
     path.tokens.extend(seg_tokens)
     path.logprobs.extend(seg_logprobs)
@@ -66,6 +80,7 @@ def _process_segment(tree: QueryTree, path: Path, seg_tokens: List[int],
     path.node_ids.append(new_node_id())
     path.seg_bounds.append(len(path.tokens))
     path.seg_logprob = seg_logprob
+    path.seg_logprobs.append(seg_logprob)
     tree.total_segments += 1
 
     reason = segment_stop_reason(
@@ -73,38 +88,48 @@ def _process_segment(tree: QueryTree, path: Path, seg_tokens: List[int],
         max_ngram=tree_cfg.repetition_ngram,
         count=tree_cfg.repetition_count)
     if reason in ("eos", "boxed"):
-        _finish_path(tree, path, Status.LEAF, reason, engine)
+        _finish_path(tree, path, Status.LEAF, reason, engine, score_fn)
     elif reason == "repetition":
-        _finish_path(tree, path, Status.FAILED, reason, engine)
+        _finish_path(tree, path, Status.FAILED, reason, engine, score_fn)
     elif path.depth >= tree_cfg.max_depth:
-        _finish_path(tree, path, Status.LEAF, "length", engine)
+        _finish_path(tree, path, Status.LEAF, "length", engine, score_fn)
     else:
         tree.active.append(path)
 
 
 def _branch_tree(tree: QueryTree, tree_cfg: TreeConfig, engine: TreeEngine,
-                 rng: random.Random, progress: float) -> None:
+                 rng: random.Random, progress: float,
+                 score_fn: Optional[ScoreFn] = None) -> None:
     """Apply the depth budget to this tree's active paths (paper §2.2:
-    budget transfer evens dead paths' allowance over the survivors)."""
+    budget transfer evens dead paths' allowance over the survivors).
+
+    After a DFS fallback round the active list can be *mixed-depth*
+    (fallback children restart at their fork depth), so the budget is
+    computed per depth group — one global ``active[0].depth`` budget
+    would over- or under-allocate every other depth.
+    """
     if not tree.active:
         return
-    depth = tree.active[0].depth
-    budget = br.depth_budget(tree_cfg, depth, tree.init_div,
-                             tree.num_trajectories)
-    forks = br.assign_branches(
-        tree_cfg, [p.seg_logprob for p in tree.active], budget, rng,
-        progress)
+    budgets = br.mixed_depth_budgets(
+        tree_cfg, [p.depth for p in tree.active], tree.init_div,
+        tree.num_trajectories)
     # collect the round's forks, then branch them in ONE engine call:
     # one jitted page/slot-copy dispatch + one on-device fork_sample.
     survivors: List[Tuple[Path, int]] = []
     parents = []
-    for path, k in zip(tree.active, forks):
-        if k <= 0:
-            # width budget exhausted: prune (counts as failed, no reward)
-            _finish_path(tree, path, Status.FAILED, "budget", engine)
-            continue
-        survivors.append((path, k))
-        parents.extend([path.ep] * (k - 1))
+    for depth in sorted(budgets, reverse=True):
+        group = [p for p in tree.active if p.depth == depth]
+        forks = br.assign_branches(
+            tree_cfg, [p.seg_logprob for p in group], budgets[depth], rng,
+            progress)
+        for path, k in zip(group, forks):
+            if k <= 0:
+                # width budget exhausted: prune (counts as failed, no reward)
+                _finish_path(tree, path, Status.FAILED, "budget", engine,
+                             score_fn)
+                continue
+            survivors.append((path, k))
+            parents.extend([path.ep] * (k - 1))
     children = engine.fork_paths(parents)
     new_active: List[Path] = []
     ci = 0
@@ -133,6 +158,9 @@ def _fallback_tree(tree: QueryTree, tree_cfg: TreeConfig,
         prefix_position = n_prefix + len(tree.prompt_tokens) + prefix_count
         replay = list(tree.prompt_tokens) + src.tokens[:prefix_count]
         child_ep = engine.fork_from_prefix(src.ep, prefix_position, replay)
+        # the child's last segment is the *prefix* segment j, so the next
+        # branching round's uncertainty heuristic must see that segment's
+        # mean logprob — not the source leaf's final-segment value
         child = Path(
             query_idx=tree.query_idx,
             depth=j,
@@ -141,7 +169,10 @@ def _fallback_tree(tree: QueryTree, tree_cfg: TreeConfig,
             logprobs=src.logprobs[:prefix_count],
             ep=child_ep,
             seg_bounds=src.seg_bounds[: j + 1],
-            seg_logprob=src.seg_logprob,
+            seg_logprob=(src.seg_logprobs[j - 1]
+                         if len(src.seg_logprobs) >= j >= 1
+                         else src.seg_logprob),
+            seg_logprobs=src.seg_logprobs[:j],
         )
         tree.active.append(child)
         report.num_fallbacks += 1
@@ -154,6 +185,7 @@ def sample_trees(engine: TreeEngine, prompts: List[List[int]],
                  progress: float = 0.0,
                  prefix_embeds=None, enc_frames=None,
                  guard_factor: int = 4,
+                 score_fn: Optional[ScoreFn] = None,
                  ) -> Tuple[List[QueryTree], SamplerReport]:
     """Run Algorithm 1 for a batch of queries.  Returns the query trees
     (finished paths = trajectories) and a sampling report."""
@@ -162,7 +194,8 @@ def sample_trees(engine: TreeEngine, prompts: List[List[int]],
     report = SamplerReport(num_queries=len(prompts))
     guard = tree_cfg.max_width * tree_cfg.max_depth * guard_factor
 
-    trees = [QueryTree(query_idx=i, prompt_tokens=list(p), target=t)
+    trees = [QueryTree(query_idx=i, prompt_tokens=list(p), target=t,
+                       max_depth=tree_cfg.max_depth)
              for i, (p, t) in enumerate(zip(prompts, targets))]
 
     # 1-2. prefill + init divergence --------------------------------------
@@ -190,9 +223,9 @@ def sample_trees(engine: TreeEngine, prompts: List[List[int]],
         report.decode_rounds += 1
         for (tree, path), res in zip(batch, results):
             _process_segment(tree, path, res.tokens, res.logprobs,
-                             res.seg_logprob, tree_cfg, engine)
+                             res.seg_logprob, tree_cfg, engine, score_fn)
         for tree in trees:
-            _branch_tree(tree, tree_cfg, engine, rng, progress)
+            _branch_tree(tree, tree_cfg, engine, rng, progress, score_fn)
             _fallback_tree(tree, tree_cfg, engine, rng, guard,
                            engine.n_prefix, report)
 

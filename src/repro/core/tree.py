@@ -4,12 +4,18 @@ A *node* is one generated segment; a *path* is the chain root→node.  The
 tree for query q tracks every path's status, its per-depth node-id chain
 (which feeds the tree-based advantage, ``repro.core.advantage``), and its
 device-side identity (``EnginePath``: block table / recurrent slot).
+
+The training hot path consumes trees as padded tensors: every finished
+path records its (J,)-padded ancestor row *at finish time*
+(:meth:`QueryTree.add_finished`), so batch assembly
+(:func:`batch_group_tensors`) is a stack of precomputed rows — no
+per-tree ``ancestor_matrix`` reconstruction in the trainer loop.
 """
 from __future__ import annotations
 
 import dataclasses
 import enum
-from typing import Any, List, Optional
+from typing import Any, List, Optional, Tuple
 
 
 class Status(enum.Enum):
@@ -42,6 +48,14 @@ class Path:
     # segment boundaries in `tokens` (starts with 0; token-aligned fallback)
     seg_bounds: List[int] = dataclasses.field(
         default_factory=lambda: [0])
+    # mean logprob of segment k = seg_logprobs[k-1] (tokens
+    # seg_bounds[k-1]:seg_bounds[k]) — the branching heuristic's signal,
+    # kept per segment so fallback forks inherit the *prefix* segment's
+    # value, not the source leaf's final one
+    seg_logprobs: List[float] = dataclasses.field(default_factory=list)
+    # terminal reward, memoized so each trajectory is scored exactly once
+    # (None = not scored yet; FAILED paths are pinned to 0.0 at finish)
+    reward: Optional[float] = None
 
     def clone_for_branch(self, ep: Optional[Any] = None) -> "Path":
         """Fork at the current segment boundary."""
@@ -55,6 +69,7 @@ class Path:
             status=Status.ACTIVE,
             seg_logprob=self.seg_logprob,
             seg_bounds=list(self.seg_bounds),
+            seg_logprobs=list(self.seg_logprobs),
         )
 
 
@@ -70,6 +85,11 @@ class QueryTree:
     finished: List[Path] = dataclasses.field(default_factory=list)
     init_div: int = 1
     total_segments: int = 0
+    # J - 1 of the padded ancestor rows recorded by add_finished (set by
+    # the sampler from tree_cfg.max_depth; 0 = rows not being recorded)
+    max_depth: int = 0
+    # one (J,) int64 row per finished path, built incrementally
+    anc_rows: List[Any] = dataclasses.field(default_factory=list)
 
     @property
     def num_leaves(self) -> int:
@@ -78,6 +98,35 @@ class QueryTree:
     @property
     def num_trajectories(self) -> int:
         return len(self.finished)
+
+    def add_finished(self, path: Path) -> None:
+        """Record a finished path + its padded ancestor row (the (G, J)
+        tensor grows one row at a time instead of being rebuilt per tree
+        at pack time)."""
+        self.finished.append(path)
+        if self.max_depth > 0:
+            self.anc_rows.append(
+                _ancestor_row(path.node_ids, self.max_depth))
+
+    def ancestors(self, max_depth: Optional[int] = None):
+        """(G, J) ancestor matrix from the incrementally recorded rows
+        (falls back to a full rebuild for trees populated directly by
+        tests / legacy callers)."""
+        import numpy as np
+
+        J = (max_depth if max_depth is not None else self.max_depth) + 1
+        if len(self.anc_rows) == len(self.finished) and self.finished \
+                and self.anc_rows[0].shape[0] == J:
+            return np.stack(self.anc_rows)
+        return ancestor_matrix(self.finished, J - 1)
+
+    def rewards(self):
+        """(G,) memoized terminal rewards (every entry must have been
+        scored — see ``Path.reward`` / the sampler's ``score_fn``)."""
+        import numpy as np
+
+        return np.asarray([0.0 if p.reward is None else p.reward
+                           for p in self.finished], np.float32)
 
     def fallback_candidates(self) -> List[Path]:
         """Paper §2.2: only paths with a formatted answer or EOS may seed
@@ -92,6 +141,18 @@ def new_node_id() -> int:
     return _next_node_id()
 
 
+def _ancestor_row(node_ids: List[int], max_depth: int):
+    """One path's (J,) ancestor row: leaf id repeated below its depth
+    (Eq. 4's nesting — a finished path is a singleton chain downward)."""
+    import numpy as np
+
+    row = np.empty((max_depth + 1,), dtype=np.int64)
+    ids = node_ids[: max_depth + 1]
+    row[: len(ids)] = ids
+    row[len(ids):] = ids[-1]
+    return row
+
+
 def ancestor_matrix(paths: List[Path], max_depth: int):
     """(G, J) ancestor-node-id matrix for advantage estimation.
 
@@ -104,8 +165,40 @@ def ancestor_matrix(paths: List[Path], max_depth: int):
     G = len(paths)
     anc = np.zeros((G, max_depth + 1), dtype=np.int64)
     for i, p in enumerate(paths):
-        ids = p.node_ids[: max_depth + 1]
-        anc[i, : len(ids)] = ids
-        if len(ids) < max_depth + 1:
-            anc[i, len(ids):] = ids[-1]
+        anc[i] = _ancestor_row(p.node_ids, max_depth)
     return anc
+
+
+def batch_group_tensors(trees: List["QueryTree"], max_depth: int,
+                        group_pad: Optional[int] = None,
+                        query_pad: Optional[int] = None
+                        ) -> Tuple[Any, Any, Any]:
+    """Stack Q trees into padded (Q, G, J) ancestors / (Q, G) rewards /
+    (Q, G) validity mask for the one-dispatch batched advantage.
+
+    ``group_pad`` fixes G and ``query_pad`` fixes Q (defaults: the
+    actual sizes) — callers pass bucketed values so the jitted dispatch
+    compiles once per bucket, not once per (Q, G) combination.  Padded
+    slots (and whole padded query rows) get a unique negative ancestor
+    id per (row, slot) so they can never collide with a real subgroup
+    even if a masked kernel ignores the mask; their reward is 0 and
+    mask is 0.
+    """
+    import numpy as np
+
+    J = max_depth + 1
+    Q = max(query_pad or len(trees), len(trees), 1)
+    G = group_pad or max((t.num_trajectories for t in trees), default=1)
+    G = max(G, max((t.num_trajectories for t in trees), default=1), 1)
+    anc = np.zeros((Q, G, J), np.int64)
+    rew = np.zeros((Q, G), np.float32)
+    mask = np.zeros((Q, G), np.float32)
+    for qi in range(Q):
+        g = trees[qi].num_trajectories if qi < len(trees) else 0
+        if g:
+            anc[qi, :g] = trees[qi].ancestors(max_depth)
+            rew[qi, :g] = trees[qi].rewards()
+            mask[qi, :g] = 1.0
+        for slot in range(g, G):
+            anc[qi, slot] = -(qi * G + slot + 1)
+    return anc, rew, mask

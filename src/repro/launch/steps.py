@@ -21,16 +21,15 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.configs import INPUT_SHAPES, get_config
 from repro.configs.base import ModelConfig, TrainConfig
-from repro.core.loss import dapo_pg_loss, token_logprobs_from_logits
 from repro.distributed.sharding import (
     batch_pspec,
     cache_pspecs,
     param_pspecs,
     to_named_sharding,
 )
-from repro.models.model import decode_step, forward, init_cache, init_params, \
-    prefill
-from repro.optim import adamw_init, adamw_update, clip_by_global_norm
+from repro.models.model import decode_step, init_cache, init_params, prefill
+from repro.optim import adamw_init, warmup_constant_schedule
+from repro.rl.update import make_ppo_update
 
 
 # ---------------------------------------------------------------------------
@@ -39,40 +38,23 @@ from repro.optim import adamw_init, adamw_update, clip_by_global_norm
 
 def make_train_step(cfg: ModelConfig, train_cfg: Optional[TrainConfig] = None,
                     remat: bool = True) -> Callable:
+    """Multi-pod PG update: the SAME K-epoch scanned update the
+    single-replica trainer jits per bucket (``repro.rl.update``), wrapped
+    to the pjit dry-run's (params, opt_state, batch) calling convention.
+    The warmup schedule is driven by the optimizer step count; the
+    entropy diagnostic is skipped (full-vocab log-softmax is pure
+    overhead at multi-pod scale)."""
     tc = train_cfg or TrainConfig()
+    update = make_ppo_update(
+        cfg, tc, remat=remat, with_entropy=False,
+        lr_fn=warmup_constant_schedule(tc.learning_rate, tc.warmup_steps))
+    K = max(tc.ppo_epochs, 1)
 
     def train_step(params, opt_state, batch):
-        def loss_fn(p):
-            kwargs = {}
-            if "prefix_embeds" in batch:
-                kwargs["prefix_embeds"] = batch["prefix_embeds"]
-            if "enc_frames" in batch:
-                kwargs["enc_frames"] = batch["enc_frames"]
-            logits, aux = forward(p, cfg, batch["tokens"], remat=remat,
-                                  **kwargs)
-            S = batch["tokens"].shape[1]
-            logits = logits[:, -S:]  # drop modality prefix positions
-            lp_new = token_logprobs_from_logits(logits[:, :-1],
-                                                batch["tokens"][:, 1:])
-            mask = batch["response_mask"][:, 1:]
-            loss, metrics = dapo_pg_loss(
-                lp_new, batch["logprobs_old"][:, 1:],
-                batch["advantages"][:, 1:], mask,
-                clip_eps_low=tc.clip_eps_low,
-                clip_eps_high=tc.clip_eps_high)
-            if cfg.moe is not None:
-                loss = loss + cfg.moe.aux_loss_coef * aux
-            return loss, metrics
-
-        (loss, metrics), grads = jax.value_and_grad(
-            loss_fn, has_aux=True)(params)
-        grads, gnorm = clip_by_global_norm(grads, tc.max_grad_norm)
-        new_params, new_opt = adamw_update(
-            params, grads, opt_state, lr=tc.learning_rate,
-            beta1=tc.beta1, beta2=tc.beta2, eps=tc.eps,
-            weight_decay=tc.weight_decay)
-        metrics = dict(metrics, loss=loss, grad_norm=gnorm)
-        return new_params, new_opt, metrics
+        # opt_state.step advances K times per train step; divide it back
+        # so the warmup schedule sees the same train-step counter the
+        # single-replica trainer feeds lr_fn
+        return update(params, opt_state, batch, opt_state.step // K)
 
     return train_step
 
@@ -208,6 +190,12 @@ def build_case(arch: str, shape_name: str, mesh: Mesh,
         args = (params_shape, opt_shape, specs)
         in_shardings = (p_shard, opt_shard, batch_shard)
         out_shardings = (p_shard, opt_shard, None)
+        # params/opt-state flow through the K-epoch scan carry: donate the
+        # input buffers so weights + moments update in place on-chip
+        return LowerCase(arch=arch, shape_name=shape_name, fn=fn, args=args,
+                         in_shardings=in_shardings,
+                         out_shardings=out_shardings, mode=mode,
+                         donate_argnums=(0, 1))
     elif mode == "prefill":
         cache_shape = init_cache(
             cfg, batch,

@@ -1,3 +1,10 @@
-from repro.rl.trainer import RLTrainer, RolloutBatch, TrainerMode
+from repro.rl.trainer import (
+    LegacyRolloutBatch,
+    RLTrainer,
+    RolloutBatch,
+    TrainerMode,
+)
+from repro.rl.update import make_pg_loss, make_ppo_update
 
-__all__ = ["RLTrainer", "RolloutBatch", "TrainerMode"]
+__all__ = ["LegacyRolloutBatch", "RLTrainer", "RolloutBatch",
+           "TrainerMode", "make_pg_loss", "make_ppo_update"]

@@ -9,6 +9,25 @@ verifiable reward → DAPO dynamic-sampling filter (0 < #correct < G) →
 advantage → K epochs of the clipped token-level PG update (Eq. 1) with
 AdamW (lr 1e-6, 10 warmup steps) — all from a base (untrained) model,
 the "RL-zero" setting the paper emphasizes.
+
+The training half is a device-resident hot path (the twin of the
+device-resident decode loop):
+
+* rewards are memoized per trajectory at sampling time (``score_fn``) —
+  each path is decoded + verified exactly once, ever;
+* the advantage for ALL kept queries is ONE jitted
+  ``batch_treepo_advantage`` dispatch over padded (Q, G[, J]) tensors
+  whose ancestor rows were recorded incrementally during sampling;
+* the host packs only the compact batch — (N, L) tokens + rollout
+  logprobs, (N,) lengths and per-trajectory advantages; response masks,
+  token-broadcast advantages and the REINFORCE++ global normalization
+  are derived on device inside the update;
+* all K ppo epochs run in ONE jitted call per (N, L) bucket
+  (``lax.scan`` carry, donated params/opt-state buffers).
+
+The previous per-tree / per-epoch host loop is kept as
+``build_batch_legacy`` / ``update_legacy`` — the parity reference for
+tests and the "before" side of ``benchmarks/train_hotpath.py``.
 """
 from __future__ import annotations
 
@@ -24,10 +43,15 @@ import numpy as np
 from repro.configs.base import ModelConfig, TrainConfig, TreeConfig
 from repro.core import advantage as adv_mod
 from repro.core.engine import TreeEngine
-from repro.core.loss import dapo_pg_loss, entropy_from_logits, \
-    token_logprobs_from_logits
+from repro.core.loss import token_logprobs_from_logits
 from repro.core.sampler import sample_sequential, sample_trees
-from repro.core.tree import QueryTree, Status, ancestor_matrix
+from repro.core.tree import (
+    Path,
+    QueryTree,
+    Status,
+    ancestor_matrix,
+    batch_group_tensors,
+)
 from repro.data.reward import reward_fn
 from repro.data.synthetic_math import MathTaskGenerator
 from repro.data.tokenizer import ByteTokenizer
@@ -38,6 +62,7 @@ from repro.optim import (
     clip_by_global_norm,
     warmup_constant_schedule,
 )
+from repro.rl.update import make_pg_loss, make_ppo_update
 
 
 class TrainerMode(str, enum.Enum):
@@ -48,20 +73,84 @@ class TrainerMode(str, enum.Enum):
 
 @dataclasses.dataclass
 class RolloutBatch:
-    """Fixed-shape device batch for the PG update."""
+    """Compact host-side batch for the PG update.
+
+    Only these arrays cross to the device (``host_pack_bytes``); the
+    dense (N, L) response mask and token-broadcast advantages are
+    derived on device inside the jitted update.  ``response_mask`` /
+    ``advantages`` below are lazy *inspection* views for tests, metrics
+    and the legacy comparison — the hot path never materializes them.
+    """
 
     tokens: np.ndarray          # (N, L) prompt+response, right-padded
-    response_mask: np.ndarray   # (N, L) 1 on generated tokens
+    prompt_lens: np.ndarray     # (N,) int32 prompt token counts
+    resp_lens: np.ndarray       # (N,) int32 response token counts
     logprobs_old: np.ndarray    # (N, L) rollout logprobs (0 elsewhere)
-    advantages: np.ndarray      # (N, L) token-broadcast advantage
+    adv_traj: np.ndarray        # (N,) per-trajectory advantage (pre-norm)
     rewards: np.ndarray         # (N,)
     num_queries: int = 0
     mean_response_len: float = 0.0
     leaf_rate: float = 0.0
+    host_pack_bytes: int = 0    # bytes shipped host->device for the update
+
+    @classmethod
+    def empty(cls) -> "RolloutBatch":
+        return cls(np.zeros((0, 1), np.int32), np.zeros((0,), np.int32),
+                   np.zeros((0,), np.int32), np.zeros((0, 1), np.float32),
+                   np.zeros((0,), np.float32), np.zeros((0,), np.float32))
+
+    @property
+    def response_mask(self) -> np.ndarray:
+        """(N, L) dense view: 1 on generated tokens."""
+        return _response_mask_from_lens(self.prompt_lens, self.resp_lens,
+                                        self.tokens.shape[1])
+
+    @property
+    def advantages(self) -> np.ndarray:
+        """(N, L) dense view: per-trajectory advantage broadcast over its
+        response tokens (before global normalization)."""
+        return self.adv_traj[:, None] * self.response_mask
+
+
+@dataclasses.dataclass
+class LegacyRolloutBatch:
+    """Dense batch produced by the pre-refactor host loop (parity /
+    benchmark reference only)."""
+
+    tokens: np.ndarray
+    response_mask: np.ndarray
+    logprobs_old: np.ndarray
+    advantages: np.ndarray
+    rewards: np.ndarray
+    num_queries: int = 0
+    host_pack_bytes: int = 0
 
 
 def _bucket_len(n: int, quantum: int = 64) -> int:
     return max(quantum, -(-n // quantum) * quantum)
+
+
+def _response_mask_from_lens(prompt_lens, resp_lens, length: int, xp=np):
+    """(N, L) mask with 1 on generated tokens, derived from per-row
+    lengths — the ONE definition shared by the on-device update
+    (xp=jnp) and the host-side inspection view (xp=np)."""
+    pos = xp.arange(length)[None, :]
+    lo = prompt_lens[:, None]
+    hi = (prompt_lens + resp_lens)[:, None]
+    return ((pos >= lo) & (pos < hi)).astype(xp.float32)
+
+
+def _bucket_rows(n: int, quantum: int = 4, pow2_from: int = 32) -> int:
+    """Pad the batch dimension to a bucket so the per-(N, L) update
+    compile cache stays small: fine-grained (multiples of ``quantum``)
+    for small batches — padding a 4-row batch to 8 would double the
+    fwd/bwd compute — and powers of two beyond ``pow2_from``."""
+    if n <= pow2_from:
+        return max(quantum, -(-n // quantum) * quantum)
+    b = pow2_from
+    while b < n:
+        b *= 2
+    return b
 
 
 class RLTrainer:
@@ -90,6 +179,7 @@ class RLTrainer:
                                      max_difficulty)
         self.engine_kwargs = dict(engine_kwargs or {})
         self._update_fns: Dict[Tuple[int, int], Any] = {}
+        self._legacy_update_fns: Dict[Tuple[int, int], Any] = {}
         self.step = 0
         self.metrics_log: List[Dict[str, float]] = []
         self._rng = np.random.default_rng(seed)
@@ -111,6 +201,12 @@ class RLTrainer:
         prompts = [self.tok.encode(s.query, bos=True) for s in samples]
         return samples, prompts
 
+    def _score_path(self, tree: QueryTree, path: Path) -> float:
+        """Terminal reward for one finished LEAF trajectory (invoked once
+        per path, at finish time — the memoized score)."""
+        return reward_fn(self.tok.decode(path.tokens), tree.target,
+                         shaping=self.train_cfg.reward_shaping)
+
     def rollout(self, num_queries: int, progress: float = 0.0
                 ) -> Tuple[List[QueryTree], TreeEngine]:
         samples, prompts = self._sample_queries(num_queries)
@@ -119,51 +215,185 @@ class RLTrainer:
         if self.mode == TrainerMode.GRPO:
             trees, _ = sample_sequential(engine, prompts, targets,
                                          rng=self._pyrng,
-                                         progress=progress)
+                                         progress=progress,
+                                         score_fn=self._score_path)
         else:
             trees, _ = sample_trees(engine, prompts, targets,
-                                    rng=self._pyrng, progress=progress)
+                                    rng=self._pyrng, progress=progress,
+                                    score_fn=self._score_path)
         return trees, engine
 
     # -- reward + advantage ------------------------------------------------------
 
     def _tree_rewards(self, tree: QueryTree) -> np.ndarray:
-        rs = []
+        """Memoized per-path rewards (scored at sampling time via
+        ``score_fn``; this only fills in paths from trees sampled without
+        one — tests / external callers)."""
         for p in tree.finished:
-            if p.status == Status.FAILED:
-                rs.append(0.0)
-            else:
-                rs.append(reward_fn(self.tok.decode(p.tokens), tree.target,
-                                    shaping=self.train_cfg.reward_shaping))
-        return np.asarray(rs, np.float32)
+            if p.reward is None:
+                p.reward = 0.0 if p.status == Status.FAILED else \
+                    self._score_path(tree, p)
+        return tree.rewards()
 
-    def _tree_advantages(self, tree: QueryTree,
-                         rewards: np.ndarray) -> np.ndarray:
-        variant = (self.train_cfg.advantage_kind
-                   if self.mode == TrainerMode.TREEPO else "grpo")
-        if variant == "grpo":
-            return np.asarray(adv_mod.grpo_advantage(jnp.asarray(rewards)))
-        anc = ancestor_matrix(tree.finished, self.tree_cfg.max_depth)
-        return np.asarray(adv_mod.treepo_advantage(
-            jnp.asarray(rewards), jnp.asarray(anc), variant=variant))
+    @property
+    def _advantage_variant(self) -> str:
+        return (self.train_cfg.advantage_kind
+                if self.mode == TrainerMode.TREEPO else "grpo")
 
-    def build_batch(self, trees: List[QueryTree]) -> RolloutBatch:
-        """Reward, dynamic-sampling filter, advantage, fixed-shape pack."""
-        kept: List[Tuple[QueryTree, np.ndarray, np.ndarray]] = []
+    @property
+    def _use_global_norm(self) -> bool:
+        return (self.train_cfg.global_norm
+                and self.mode == TrainerMode.TREEPO
+                and self.train_cfg.advantage_kind != "grpo")
+
+    def _kept_trees(self, trees: List[QueryTree]
+                    ) -> List[Tuple[QueryTree, np.ndarray]]:
+        """Reward + DAPO dynamic-sampling filter (rewards memoized)."""
+        kept = []
         for tree in trees:
             if not tree.finished:
                 continue
             rewards = self._tree_rewards(tree)
             if self.train_cfg.dynamic_sampling and rewards.std() <= 1e-6:
                 continue  # DAPO: drop all-correct / all-wrong groups
-            advs = self._tree_advantages(tree, rewards)
+            kept.append((tree, rewards))
+        return kept
+
+    def build_batch(self, trees: List[QueryTree]) -> RolloutBatch:
+        """Reward, dynamic-sampling filter, ONE batched advantage
+        dispatch, compact fixed-shape pack."""
+        kept = self._kept_trees(trees)
+        if not kept:
+            return RolloutBatch.empty()
+        # bucket Q and pad G to the width cap so the jitted advantage
+        # dispatch compiles once per bucket, not once per (Q, G) combo
+        anc, rew_qg, gmask = batch_group_tensors(
+            [t for t, _ in kept], self.tree_cfg.max_depth,
+            group_pad=self.tree_cfg.max_width,
+            query_pad=_bucket_rows(len(kept)))
+        adv_qg = np.asarray(adv_mod.batch_treepo_advantage(
+            jnp.asarray(rew_qg), jnp.asarray(anc), jnp.asarray(gmask),
+            variant=self._advantage_variant, use_global_norm=False))
+
+        rows = []
+        for qi, (tree, rewards) in enumerate(kept):
+            for gi, (p, r) in enumerate(zip(tree.finished, rewards)):
+                rows.append((tree.prompt_tokens, p.tokens, p.logprobs,
+                             float(r), float(adv_qg[qi, gi])))
+        L = _bucket_len(max(len(pr) + len(t) for pr, t, *_ in rows))
+        N = len(rows)
+        tokens = np.full((N, L), ByteTokenizer.PAD, np.int32)
+        prompt_lens = np.zeros((N,), np.int32)
+        resp_lens = np.zeros((N,), np.int32)
+        lp_old = np.zeros((N, L), np.float32)
+        adv_traj = np.zeros((N,), np.float32)
+        rew = np.zeros((N,), np.float32)
+        n_leaves = 0
+        for i, (prompt, resp, lps, r, a) in enumerate(rows):
+            n_p, n_r = len(prompt), len(resp)
+            tokens[i, : n_p] = prompt
+            tokens[i, n_p: n_p + n_r] = resp
+            prompt_lens[i] = n_p
+            resp_lens[i] = n_r
+            lp_old[i, n_p: n_p + n_r] = lps
+            adv_traj[i] = a
+            rew[i] = r
+        for tree, _ in kept:
+            n_leaves += tree.num_leaves
+        # what update() will actually ship: the ROW-PADDED (Nb, L)
+        # buffers, not the unpadded (N, L) pack built here
+        Nb = _bucket_rows(N)
+        pack_bytes = Nb * (tokens.itemsize * L + lp_old.itemsize * L +
+                           prompt_lens.itemsize + resp_lens.itemsize +
+                           adv_traj.itemsize)
+        return RolloutBatch(
+            tokens=tokens, prompt_lens=prompt_lens, resp_lens=resp_lens,
+            logprobs_old=lp_old, adv_traj=adv_traj, rewards=rew,
+            num_queries=len(kept),
+            mean_response_len=float(resp_lens.mean()),
+            leaf_rate=n_leaves / max(sum(len(t.finished)
+                                         for t, _ in kept), 1),
+            host_pack_bytes=pack_bytes)
+
+    # -- update -----------------------------------------------------------------
+
+    def _get_update_fn(self, N: int, L: int):
+        """One jitted K-epoch update per (N, L) bucket: derives the dense
+        mask/advantages on device, runs global normalization there, scans
+        the ppo epochs, and donates the params/opt-state buffers."""
+        key = (N, L)
+        if key not in self._update_fns:
+            base_update = make_ppo_update(self.cfg, self.train_cfg,
+                                          lr_fn=self.lr_fn)
+            apply_global = self._use_global_norm
+
+            def update(params, opt_state, tokens, prompt_lens, resp_lens,
+                       lp_old, adv_traj, step):
+                rmask = _response_mask_from_lens(
+                    prompt_lens, resp_lens, tokens.shape[1], xp=jnp)
+                advs = adv_traj[:, None] * rmask
+                if apply_global:
+                    advs = adv_mod.global_normalize(advs, rmask)
+                batch = {"tokens": tokens, "response_mask": rmask,
+                         "logprobs_old": lp_old, "advantages": advs}
+                return base_update(params, opt_state, batch, step)
+
+            self._update_fns[key] = jax.jit(update, donate_argnums=(0, 1))
+        return self._update_fns[key]
+
+    def update(self, batch: RolloutBatch) -> Dict[str, float]:
+        """All K ppo epochs in one jitted dispatch (per (N, L) bucket)."""
+        N = batch.tokens.shape[0]
+        if N == 0:
+            return {"skipped": 1.0}
+        L = batch.tokens.shape[1]
+        Nb = _bucket_rows(N)
+        tokens = np.full((Nb, L), ByteTokenizer.PAD, np.int32)
+        tokens[:N] = batch.tokens
+        prompt_lens = np.zeros((Nb,), np.int32)
+        prompt_lens[:N] = batch.prompt_lens
+        resp_lens = np.zeros((Nb,), np.int32)   # padded rows: empty mask
+        resp_lens[:N] = batch.resp_lens
+        lp_old = np.zeros((Nb, L), np.float32)
+        lp_old[:N] = batch.logprobs_old
+        adv_traj = np.zeros((Nb,), np.float32)
+        adv_traj[:N] = batch.adv_traj
+        fn = self._get_update_fn(Nb, L)
+        self.params, self.opt_state, m = fn(
+            self.params, self.opt_state,
+            jnp.asarray(tokens), jnp.asarray(prompt_lens),
+            jnp.asarray(resp_lens), jnp.asarray(lp_old),
+            jnp.asarray(adv_traj), jnp.asarray(self.step, jnp.int32))
+        return {k: float(v) for k, v in m.items()}
+
+    # -- legacy reference path ---------------------------------------------------
+    #
+    # The pre-refactor host loop: per-tree unjitted advantage calls, dense
+    # (N, L) host packing (mask + broadcast advantages + host-side global
+    # norm) and one jitted dispatch per ppo epoch.  Kept verbatim as the
+    # parity oracle for tests and the "before" side of
+    # benchmarks/train_hotpath.py.  Not used by train_step.
+
+    def _tree_advantages_legacy(self, tree: QueryTree,
+                                rewards: np.ndarray) -> np.ndarray:
+        variant = self._advantage_variant
+        if variant == "grpo":
+            return np.asarray(adv_mod.grpo_advantage(jnp.asarray(rewards)))
+        anc = ancestor_matrix(tree.finished, self.tree_cfg.max_depth)
+        return np.asarray(adv_mod.treepo_advantage(
+            jnp.asarray(rewards), jnp.asarray(anc), variant=variant))
+
+    def build_batch_legacy(self, trees: List[QueryTree]
+                           ) -> LegacyRolloutBatch:
+        kept: List[Tuple[QueryTree, np.ndarray, np.ndarray]] = []
+        for tree, rewards in self._kept_trees(trees):
+            advs = self._tree_advantages_legacy(tree, rewards)
             kept.append((tree, rewards, advs))
         if not kept:
-            return RolloutBatch(np.zeros((0, 1), np.int32),
-                                np.zeros((0, 1), np.float32),
-                                np.zeros((0, 1), np.float32),
-                                np.zeros((0, 1), np.float32),
-                                np.zeros((0,), np.float32))
+            return LegacyRolloutBatch(
+                np.zeros((0, 1), np.int32), np.zeros((0, 1), np.float32),
+                np.zeros((0, 1), np.float32), np.zeros((0, 1), np.float32),
+                np.zeros((0,), np.float32))
         rows = []
         for tree, rewards, advs in kept:
             for p, r, a in zip(tree.finished, rewards, advs):
@@ -176,8 +406,6 @@ class RLTrainer:
         lp_old = np.zeros((N, L), np.float32)
         advsb = np.zeros((N, L), np.float32)
         rew = np.zeros((N,), np.float32)
-        resp_lens = []
-        n_leaves = 0
         for i, (prompt, resp, lps, r, a) in enumerate(rows):
             n_p, n_r = len(prompt), len(resp)
             tokens[i, : n_p] = prompt
@@ -186,49 +414,28 @@ class RLTrainer:
             lp_old[i, n_p: n_p + n_r] = lps
             advsb[i, n_p: n_p + n_r] = a
             rew[i] = r
-            resp_lens.append(n_r)
-        if self.train_cfg.global_norm and \
-                self.mode == TrainerMode.TREEPO and \
-                self.train_cfg.advantage_kind != "grpo":
+        if self._use_global_norm:
             advsb = np.asarray(adv_mod.global_normalize(
                 jnp.asarray(advsb), jnp.asarray(rmask)))
-        for tree, _, _ in kept:
-            n_leaves += tree.num_leaves
-        return RolloutBatch(
+        pack_bytes = (tokens.nbytes + rmask.nbytes + lp_old.nbytes +
+                      advsb.nbytes)
+        return LegacyRolloutBatch(
             tokens=tokens, response_mask=rmask, logprobs_old=lp_old,
             advantages=advsb, rewards=rew, num_queries=len(kept),
-            mean_response_len=float(np.mean(resp_lens)),
-            leaf_rate=n_leaves / max(sum(len(t.finished)
-                                         for t, _, _ in kept), 1))
+            host_pack_bytes=pack_bytes)
 
-    # -- update -----------------------------------------------------------------
-
-    def _get_update_fn(self, N: int, L: int):
+    def _get_legacy_update_fn(self, N: int, L: int):
         key = (N, L)
-        if key not in self._update_fns:
-            cfg, tc = self.cfg, self.train_cfg
-
-            def loss_fn(params, tokens, rmask, lp_old, advs):
-                logits, aux = forward(params, cfg, tokens)
-                lp_new = token_logprobs_from_logits(
-                    logits[:, :-1], tokens[:, 1:])
-                # align: response token at t is predicted from t-1
-                mask = rmask[:, 1:]
-                loss, metrics = dapo_pg_loss(
-                    lp_new, lp_old[:, 1:], advs[:, 1:], mask,
-                    clip_eps_low=tc.clip_eps_low,
-                    clip_eps_high=tc.clip_eps_high)
-                ent = entropy_from_logits(logits[:, :-1], mask)
-                if cfg.moe is not None:
-                    loss = loss + cfg.moe.aux_loss_coef * aux
-                metrics = dict(metrics, entropy=ent, moe_aux=aux)
-                return loss, metrics
+        if key not in self._legacy_update_fns:
+            loss_fn = make_pg_loss(self.cfg, self.train_cfg)
+            tc = self.train_cfg
 
             def update(params, opt_state, tokens, rmask, lp_old, advs,
                        step):
+                batch = {"tokens": tokens, "response_mask": rmask,
+                         "logprobs_old": lp_old, "advantages": advs}
                 (loss, metrics), grads = jax.value_and_grad(
-                    loss_fn, has_aux=True)(params, tokens, rmask, lp_old,
-                                           advs)
+                    loss_fn, has_aux=True)(params, batch)
                 grads, gnorm = clip_by_global_norm(grads,
                                                    tc.max_grad_norm)
                 lr = self.lr_fn(step)
@@ -239,14 +446,16 @@ class RLTrainer:
                 metrics = dict(metrics, loss=loss, grad_norm=gnorm, lr=lr)
                 return new_params, new_opt, metrics
 
-            self._update_fns[key] = jax.jit(update)
-        return self._update_fns[key]
+            self._legacy_update_fns[key] = jax.jit(update)
+        return self._legacy_update_fns[key]
 
-    def update(self, batch: RolloutBatch) -> Dict[str, float]:
+    def update_legacy(self, batch: LegacyRolloutBatch) -> Dict[str, float]:
+        """Pre-refactor update: one jitted dispatch per ppo epoch, no
+        donation, dense host-packed inputs re-shipped every epoch."""
         if batch.tokens.shape[0] == 0:
             return {"skipped": 1.0}
         N, L = batch.tokens.shape
-        fn = self._get_update_fn(N, L)
+        fn = self._get_legacy_update_fn(N, L)
         metrics: Dict[str, float] = {}
         for _ in range(self.train_cfg.ppo_epochs):
             self.params, self.opt_state, m = fn(
@@ -298,6 +507,7 @@ class RLTrainer:
             num_queries_kept=float(batch.num_queries),
             response_len=batch.mean_response_len,
             leaf_rate=batch.leaf_rate,
+            host_pack_bytes=float(batch.host_pack_bytes),
             sample_model_tokens=float(sample_tokens),
             wall_time=time.time() - t0,
         )
@@ -305,15 +515,9 @@ class RLTrainer:
         return metrics
 
     def _count_kept(self, trees: List[QueryTree]) -> int:
-        n = 0
-        for tree in trees:
-            if not tree.finished:
-                continue
-            rewards = self._tree_rewards(tree)
-            if (not self.train_cfg.dynamic_sampling
-                    or rewards.std() > 1e-6):
-                n += 1
-        return n
+        """Number of kept queries so far — memoized rewards make this a
+        cache lookup, not a re-decode of every accumulated tree."""
+        return len(self._kept_trees(trees))
 
     # -- behavior-cloning warmup ----------------------------------------------------
     #

@@ -1,0 +1,111 @@
+"""Shared jitted K-epoch PG update (paper Eq. 1 + AdamW).
+
+One builder serves both training paths:
+
+* :class:`repro.rl.trainer.RLTrainer` jits it per (N, L) bucket with
+  donated params/opt-state buffers (the single-replica hot path), and
+* :func:`repro.launch.steps.make_train_step` wraps it for the pjit
+  multi-pod lowering (same math, shardings applied outside).
+
+The K ``ppo_epochs`` run inside ONE jitted call as a ``jax.lax.scan``
+over the (params, opt_state) carry — one dispatch per step instead of K,
+and XLA can keep the donated weight/moment buffers in place across
+epochs.  Metrics are reported from the final epoch (matching the
+previous per-epoch loop's "last write wins" semantics).
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, TrainConfig
+from repro.core.loss import dapo_pg_loss, entropy_from_logits, \
+    token_logprobs_from_logits
+from repro.models.model import forward
+from repro.optim import adamw_update, clip_by_global_norm
+
+Batch = Dict[str, jnp.ndarray]
+
+
+def make_pg_loss(cfg: ModelConfig, tc: TrainConfig, *,
+                 remat: bool = False,
+                 with_entropy: bool = True) -> Callable[[Any, Batch],
+                                                        Tuple]:
+    """Token-level clipped PG loss over a dense batch dict with keys
+    ``tokens`` / ``response_mask`` / ``logprobs_old`` / ``advantages``
+    (+ optional ``prefix_embeds`` / ``enc_frames`` modality stubs).
+
+    ``with_entropy=False`` skips the full-vocab log-softmax entropy
+    metric — the multi-pod lowering doesn't pay (N, S, V) extra HBM
+    traffic for a diagnostics value."""
+
+    def loss_fn(params, batch: Batch):
+        kwargs = {}
+        if "prefix_embeds" in batch:
+            kwargs["prefix_embeds"] = batch["prefix_embeds"]
+        if "enc_frames" in batch:
+            kwargs["enc_frames"] = batch["enc_frames"]
+        logits, aux = forward(params, cfg, batch["tokens"], remat=remat,
+                              **kwargs)
+        S = batch["tokens"].shape[1]
+        logits = logits[:, -S:]  # drop modality prefix positions
+        lp_new = token_logprobs_from_logits(logits[:, :-1],
+                                            batch["tokens"][:, 1:])
+        # align: response token at t is predicted from t-1
+        mask = batch["response_mask"][:, 1:]
+        loss, metrics = dapo_pg_loss(
+            lp_new, batch["logprobs_old"][:, 1:],
+            batch["advantages"][:, 1:], mask,
+            clip_eps_low=tc.clip_eps_low,
+            clip_eps_high=tc.clip_eps_high)
+        if with_entropy:
+            metrics = dict(metrics, entropy=entropy_from_logits(
+                logits[:, :-1], mask))
+        if cfg.moe is not None:
+            loss = loss + cfg.moe.aux_loss_coef * aux
+        metrics = dict(metrics, moe_aux=aux)
+        return loss, metrics
+
+    return loss_fn
+
+
+def make_ppo_update(cfg: ModelConfig, tc: TrainConfig, *,
+                    remat: bool = False,
+                    ppo_epochs: Optional[int] = None,
+                    lr_fn: Optional[Callable] = None,
+                    with_entropy: bool = True) -> Callable:
+    """Build ``update(params, opt_state, batch, step) -> (params,
+    opt_state, metrics)`` running all K ppo epochs in one traced scan.
+
+    ``lr_fn(step)`` defaults to the constant ``tc.learning_rate``; the
+    trainer passes its warmup schedule.  The returned function is pure —
+    callers jit/pjit it with their own shardings and donation.
+    """
+    K = int(ppo_epochs if ppo_epochs is not None else tc.ppo_epochs)
+    K = max(K, 1)
+    loss_fn = make_pg_loss(cfg, tc, remat=remat, with_entropy=with_entropy)
+    if lr_fn is None:
+        lr_fn = lambda step: jnp.asarray(tc.learning_rate, jnp.float32)
+
+    def update(params, opt_state, batch: Batch, step):
+        lr = lr_fn(step)
+
+        def epoch(carry, _):
+            params, opt_state = carry
+            (loss, metrics), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(params, batch)
+            grads, gnorm = clip_by_global_norm(grads, tc.max_grad_norm)
+            new_params, new_opt = adamw_update(
+                params, grads, opt_state, lr=lr, beta1=tc.beta1,
+                beta2=tc.beta2, eps=tc.eps, weight_decay=tc.weight_decay)
+            metrics = dict(metrics, loss=loss, grad_norm=gnorm, lr=lr)
+            return (new_params, new_opt), metrics
+
+        (params, opt_state), ms = jax.lax.scan(
+            epoch, (params, opt_state), None, length=K)
+        metrics = {k: v[-1] for k, v in ms.items()}
+        return params, opt_state, metrics
+
+    return update

@@ -87,15 +87,20 @@ def test_size_weighted_differs_and_matches_eq6():
 
 
 def test_subgroup_reject_zeroes_degenerate():
-    """Eq. 7: a subgroup with zero reward-std contributes nothing."""
+    """Eq. 7: a subgroup with zero reward-std contributes nothing — to the
+    numerator AND the per-trajectory std denominator (the rejected depth
+    is dropped from the whole estimator, per the paper's ablation)."""
     rewards, anc = _paper_tree()
     adv = np.asarray(treepo_advantage(rewards, anc,
                                       variant="treepo_subgroup_reject"))
     # leaves 4,5 sit in subgroup c21 with rewards (1,1): std=0 at depth 2,
-    # so only depths 0,1 count for them
+    # so only depths 0,1 count for them — numerator and denominator both
     a_j = np.array([1 - 0.5, 1 - 0.75])
-    want4 = a_j.mean() / (np.array([0.5, 0.25, 0.0]).std() + 1e-6)
+    want4 = a_j.mean() / (a_j.std() + 1e-6)
     assert_allclose(adv[4], want4, rtol=1e-4)
+    # leaf 6's subgroups are all non-degenerate: matches plain treepo
+    a6 = np.array([-0.5, -0.75, -0.5])
+    assert_allclose(adv[6], a6.mean() / (a6.std() + 1e-6), rtol=1e-4)
 
 
 def test_no_root_drops_depth0():
@@ -148,3 +153,156 @@ def test_batch_wrapper_shapes():
     assert out.shape == (2, 8)
     out_g = batch_treepo_advantage(r, a, variant="grpo")
     assert out_g.shape == (2, 8)
+
+
+ALL_VARIANTS = ["grpo", "treepo", "treepo_size_weighted",
+                "treepo_subgroup_reject", "treepo_no_root"]
+
+
+def _hand_advantage(rewards, anc, variant, eps=1e-6):
+    """Plain-loop numpy reference (hand-derived from Eq. 2/5/6/7).
+
+    This is a *structural* cross-check (loops vs the vmapped dense
+    kernels); the estimator *definitions* — including the Eq. 7
+    kept-terms denominator — are pinned independently by the explicit
+    numeric fixtures above (e.g. test_subgroup_reject_zeroes_degenerate).
+    """
+    rewards = np.asarray(rewards, np.float64)
+    anc = np.asarray(anc)
+    G, J = anc.shape
+    if variant == "grpo":
+        return (rewards - rewards.mean()) / (rewards.std() + eps)
+    means = np.zeros((G, J))
+    stds = np.zeros((G, J))
+    sizes = np.zeros((G, J))
+    for i in range(G):
+        for j in range(J):
+            grp = rewards[anc[:, j] == anc[i, j]]
+            means[i, j] = grp.mean()
+            stds[i, j] = grp.std()
+            sizes[i, j] = len(grp)
+    adv_j = rewards[:, None] - means
+    if variant == "treepo_no_root":
+        adv_j = adv_j[:, 1:]
+        w = np.ones_like(adv_j)
+        std_w = np.ones_like(adv_j)
+    elif variant == "treepo_size_weighted":
+        w = sizes
+        std_w = np.ones_like(adv_j)
+    elif variant == "treepo_subgroup_reject":
+        w = (stds > eps).astype(np.float64)
+        std_w = w
+    else:
+        w = np.ones_like(adv_j)
+        std_w = np.ones_like(adv_j)
+    agg = (w * adv_j).sum(1) / np.maximum(w.sum(1), eps)
+    n = np.maximum(std_w.sum(1), 1.0)
+    m = (std_w * adv_j).sum(1) / n
+    std = np.sqrt((std_w * (adv_j - m[:, None]) ** 2).sum(1) / n)
+    return agg / (std + eps)
+
+
+@pytest.mark.parametrize("variant", ALL_VARIANTS)
+def test_every_variant_matches_hand_reference(variant):
+    """Hand-computed fixture for each estimator on the known small tree."""
+    rewards, anc = _paper_tree()
+    got = np.asarray(treepo_advantage(rewards, anc, variant=variant)
+                     if variant != "grpo" else grpo_advantage(rewards))
+    want = _hand_advantage(rewards, anc, variant)
+    assert_allclose(got, want, atol=1e-5)
+
+
+def _ragged_queries():
+    """Two queries with different group sizes (8 and 5) + varied rewards."""
+    r0, a0 = _paper_tree()
+    a1 = np.array([
+        [9, 10, 12],
+        [9, 10, 12],
+        [9, 10, 13],
+        [9, 11, 14],
+        [9, 11, 15],
+    ])
+    r1 = np.array([0.0, 1.0, 1.0, 0.0, 1.0], np.float32)
+    return [(np.asarray(r0), np.asarray(a0)), (r1, a1)]
+
+
+@pytest.mark.parametrize("variant", ALL_VARIANTS)
+def test_masked_batched_matches_per_tree_reference(variant):
+    """The one-dispatch masked batched path must agree with the per-tree
+    reference on ragged group sizes to <= 1e-5."""
+    queries = _ragged_queries()
+    Q = len(queries)
+    G = max(len(r) for r, _ in queries)
+    J = queries[0][1].shape[1]
+    rew = np.zeros((Q, G), np.float32)
+    anc = np.zeros((Q, G, J), np.int64)
+    mask = np.zeros((Q, G), np.float32)
+    for qi, (r, a) in enumerate(queries):
+        g = len(r)
+        rew[qi, :g] = r
+        anc[qi, :g] = a
+        mask[qi, :g] = 1.0
+        for slot in range(g, G):
+            anc[qi, slot] = -(qi * G + slot + 1)   # sentinel singleton
+    got = np.asarray(batch_treepo_advantage(
+        jnp.asarray(rew), jnp.asarray(anc), jnp.asarray(mask),
+        variant=variant, use_global_norm=False))
+    for qi, (r, a) in enumerate(queries):
+        g = len(r)
+        if variant == "grpo":
+            want = np.asarray(grpo_advantage(jnp.asarray(r)))
+        else:
+            want = np.asarray(treepo_advantage(
+                jnp.asarray(r), jnp.asarray(a), variant=variant))
+        assert_allclose(got[qi, :g], want, atol=1e-5)
+        assert_allclose(got[qi, g:], 0.0, atol=1e-6)  # padded slots zeroed
+
+
+def test_batched_global_norm_masks_padding():
+    """Global normalization must use only valid entries."""
+    queries = _ragged_queries()
+    G = 8
+    rew = np.zeros((2, G), np.float32)
+    anc = np.zeros((2, G, 3), np.int64)
+    mask = np.zeros((2, G), np.float32)
+    for qi, (r, a) in enumerate(queries):
+        g = len(r)
+        rew[qi, :g] = r
+        anc[qi, :g] = a
+        mask[qi, :g] = 1.0
+        for slot in range(g, G):
+            anc[qi, slot] = -(qi * G + slot + 1)
+    out = np.asarray(batch_treepo_advantage(
+        jnp.asarray(rew), jnp.asarray(anc), jnp.asarray(mask),
+        variant="treepo", use_global_norm=True))
+    valid = out[np.asarray(mask) > 0]
+    # normalized second moment ~ 1 over the valid entries
+    assert abs(np.sqrt((valid ** 2).mean()) - 1.0) < 0.2
+    assert_allclose(out[np.asarray(mask) == 0], 0.0, atol=1e-6)
+
+
+def test_batch_group_tensors_roundtrip():
+    """batch_group_tensors pads with unique sentinels and preserves the
+    incremental per-path rows."""
+    from repro.core.tree import Path, QueryTree, Status, batch_group_tensors
+
+    trees = []
+    for qi, g in enumerate([3, 2]):
+        t = QueryTree(query_idx=qi, prompt_tokens=[1], target="x",
+                      max_depth=2)
+        for i in range(g):
+            p = Path(query_idx=qi, depth=1, node_ids=[100 * qi, i + 1],
+                     tokens=[1, 2], logprobs=[0.0, 0.0])
+            p.status = Status.LEAF
+            p.reward = float(i)
+            t.add_finished(p)
+        trees.append(t)
+    anc, rew, mask = batch_group_tensors(trees, max_depth=2)
+    assert anc.shape == (2, 3, 3) and rew.shape == (2, 3)
+    assert mask.tolist() == [[1, 1, 1], [1, 1, 0]]
+    # short path repeats its leaf id below its depth
+    assert anc[0, 0].tolist() == [0, 1, 1]
+    assert rew[1].tolist() == [0.0, 1.0, 0.0]
+    # padded slot has a unique negative id that matches nothing real
+    assert anc[1, 2, 0] < 0
+    assert (anc[1, 2] != anc[1, 1]).all()

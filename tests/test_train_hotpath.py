@@ -1,0 +1,302 @@
+"""Training-side hot path: mixed-depth branching budgets, fallback
+segment-logprob inheritance, reward memoization, double-release
+idempotency, and new-vs-legacy build/update parity."""
+import random
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.configs.base import TrainConfig, TreeConfig
+from repro.core import advantage as adv_mod
+from repro.core.branching import depth_budget, mixed_depth_budgets
+from repro.core.engine import TreeEngine
+from repro.core.sampler import SamplerReport, _branch_tree, _fallback_tree
+from repro.core.tree import Path, QueryTree, Status
+from repro.models.model import init_params
+from repro.rl.trainer import RLTrainer, TrainerMode
+
+ENGINE_KW = dict(num_pages=512, page_size=16, max_slots=32, max_queries=16,
+                 max_prompt_len=256)
+
+
+def _trainer(mode, advantage="treepo", seed=0, **train_kw):
+    cfg = get_config("qwen2.5-7b", smoke=True)
+    tc = TreeConfig(max_depth=4, segment_len=16, max_width=4,
+                    branch_factor=2, init_divergence_low=2,
+                    init_divergence_high=2, temperature=0.9)
+    base = dict(batch_size=2, group_size=4, oversample_factor=2,
+                max_resample_rounds=0, learning_rate=1e-3,
+                advantage_kind=advantage, reward_shaping=0.1)
+    base.update(train_kw)
+    trc = TrainConfig(**base)
+    return RLTrainer(cfg, trc, tc, mode, seed=seed,
+                     engine_kwargs=ENGINE_KW, min_difficulty=1,
+                     max_difficulty=1)
+
+
+# ---------------------------------------------------------------------------
+# mixed-depth branching budget
+# ---------------------------------------------------------------------------
+
+class _FakeEngine:
+    """Just enough engine surface for host-side _branch/_fallback units."""
+
+    n_prefix = 0
+
+    def __init__(self):
+        self.released = []
+
+    def fork_paths(self, parents):
+        return [None] * len(parents)
+
+    def fork_from_prefix(self, src_ep, prefix_position, replay):
+        return None
+
+    def release_path(self, ep):
+        self.released.append(ep)
+
+
+def _tc(**kw):
+    base = dict(max_depth=6, segment_len=8, max_width=8, branch_factor=2,
+                init_divergence_low=2, init_divergence_high=2)
+    base.update(kw)
+    return TreeConfig(**base)
+
+
+def test_mixed_depth_budgets_single_depth_reduces_to_depth_budget():
+    tc = _tc()
+    for depth in range(5):
+        for finished in (0, 3, 8):
+            got = mixed_depth_budgets(tc, [depth] * 3, 2, finished)
+            assert got == {depth: depth_budget(tc, depth, 2, finished)}
+
+
+def test_mixed_depth_budgets_every_group_keeps_a_continuation():
+    """A fresh shallow fallback child must not be starved by a deeper
+    group's fan-out while width remains."""
+    tc = _tc()
+    got = mixed_depth_budgets(tc, [3, 1], 2, 6)   # cap = 2
+    assert got[3] >= 1 and got[1] >= 1
+
+
+def _leaf_path(depth, seg_len=8, reason="eos"):
+    bounds = [seg_len * k for k in range(depth + 1)]
+    p = Path(query_idx=0, depth=depth, node_ids=list(range(depth + 1)),
+             tokens=list(range(bounds[-1])), logprobs=[-0.1] * bounds[-1],
+             seg_bounds=bounds,
+             seg_logprobs=[-float(k + 1) for k in range(depth)],
+             seg_logprob=-float(depth))
+    p.status = Status.LEAF
+    p.finish_reason = reason
+    return p
+
+
+def test_branch_tree_mixed_depth_budget_regression():
+    """Two fallback children at different fork depths j: each must be
+    branched under its OWN depth's budget, not active[0]'s.
+
+    Regression: the old code read tree.active[0].depth (here the shallow
+    path) and applied depth_budget(1) == 4 to the whole round, leaving
+    the depth-3 path underbudgeted; per-depth budgets give the deep
+    group its full remaining allowance."""
+    tc = _tc()
+    tree = QueryTree(query_idx=0, prompt_tokens=[1], target="x")
+    tree.init_div = 2
+    tree.finished = [_leaf_path(4), _leaf_path(4)]   # 2 trajectories -> cap 6
+    shallow = Path(query_idx=0, depth=1, node_ids=[0, 1],
+                   tokens=list(range(8)), logprobs=[-0.1] * 8,
+                   seg_bounds=[0, 8], seg_logprobs=[-1.0],
+                   seg_logprob=-1.0)
+    deep = Path(query_idx=0, depth=3, node_ids=[0, 1, 2, 3],
+                tokens=list(range(24)), logprobs=[-0.1] * 24,
+                seg_bounds=[0, 8, 16, 24],
+                seg_logprobs=[-1.0, -2.0, -3.0], seg_logprob=-3.0)
+    tree.active = [shallow, deep]    # shallow FIRST: the old failure mode
+    eng = _FakeEngine()
+    _branch_tree(tree, tc, eng, random.Random(0), 0.0)
+    depths = sorted(p.depth for p in tree.active)
+    # cap = 8 - 2 = 6: depth-3 group gets 1 + min(2*2^3 - 1, 4) = 5,
+    # depth-1 group keeps its guaranteed single continuation
+    assert len(tree.active) == 6
+    assert depths == [1, 3, 3, 3, 3, 3]
+    # nothing was pruned: both survived under their own budgets
+    assert all(p.status == Status.LEAF for p in tree.finished)
+
+
+def test_fallback_child_inherits_prefix_segment_logprob():
+    """The fallback child's heuristic signal must be the mean logprob of
+    prefix segment j — not the source leaf's final-segment value."""
+    tc = _tc(max_width=4)
+    tree = QueryTree(query_idx=0, prompt_tokens=[5, 6], target="x")
+    src = _leaf_path(4)
+    tree.finished = [src]
+    report = SamplerReport()
+    _fallback_tree(tree, tc, _FakeEngine(), random.Random(0),
+                   guard=10_000, n_prefix=0, report=report)
+    assert report.num_fallbacks == 3      # max_width - 1 children
+    depths = set()
+    for child in tree.active:
+        j = child.depth
+        depths.add(j)
+        assert child.seg_logprobs == src.seg_logprobs[:j]
+        assert child.seg_logprob == src.seg_logprobs[j - 1]
+        assert child.seg_logprob != src.seg_logprob or j == src.depth
+    assert len(depths) >= 2               # mixed-depth refill really occurs
+
+
+# ---------------------------------------------------------------------------
+# engine release idempotency
+# ---------------------------------------------------------------------------
+
+def test_release_path_idempotent():
+    cfg = get_config("yi-6b", smoke=True)
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    eng = TreeEngine(params, cfg, _tc(), num_pages=256, page_size=8,
+                     max_slots=16, max_queries=4, max_prompt_len=32)
+    base_pages = eng.kv.pool.pages_in_use   # engine-reserved scratch pages
+    [root] = eng.prefill_queries([[1, 2, 3, 4, 5]])
+    child = eng.fork_path(root)
+    eng.release_path(child)
+    pages_after_first = eng.kv.pool.pages_in_use
+    assert child.released
+    eng.release_path(child)               # double release: no-op
+    assert eng.kv.pool.pages_in_use == pages_after_first
+    eng.release_path(root)
+    pages_final = eng.kv.pool.pages_in_use
+    eng.release_path(root)
+    assert eng.kv.pool.pages_in_use == pages_final == base_pages
+
+
+# ---------------------------------------------------------------------------
+# reward memoization
+# ---------------------------------------------------------------------------
+
+def test_reward_scored_exactly_once_per_trajectory():
+    tr = _trainer(TrainerMode.TREEPO)
+    tr.bc_warmup(steps=15, batch_size=4, lr=3e-3)
+    calls = []
+    orig = tr._score_path
+    tr._score_path = lambda tree, path: (calls.append(id(path)),
+                                         orig(tree, path))[1]
+    trees, _ = tr.rollout(2)
+    leaves = sum(1 for t in trees for p in t.finished
+                 if p.status != Status.FAILED)
+    assert len(calls) == leaves           # scored at finish time only
+    assert len(set(calls)) == len(calls)  # ... and once per path
+    # every downstream consumer hits the memo, never the reward fn
+    tr._count_kept(trees)
+    tr._count_kept(trees)
+    tr.build_batch(trees)
+    assert len(calls) == leaves
+    for t in trees:
+        for p in t.finished:
+            assert p.reward is not None
+            if p.status == Status.FAILED:
+                assert p.reward == 0.0
+
+
+# ---------------------------------------------------------------------------
+# new vs legacy parity
+# ---------------------------------------------------------------------------
+
+def _rollout_with_batch(tr, n=2):
+    tr.bc_warmup(steps=20, batch_size=4, lr=3e-3)
+    trees, _ = tr.rollout(n)
+    batch = tr.build_batch(trees)
+    if batch.tokens.shape[0] == 0:
+        pytest.skip("dynamic sampling dropped everything")
+    return trees, batch
+
+
+@pytest.mark.parametrize("mode,advantage", [
+    (TrainerMode.TREEPO, "treepo"),
+    (TrainerMode.TREEPO, "treepo_subgroup_reject"),
+    (TrainerMode.GRPO_TREE, "treepo"),   # grpo advantage over tree groups
+])
+def test_build_batch_matches_legacy(mode, advantage):
+    tr = _trainer(mode, advantage=advantage, seed=3)
+    trees, batch = _rollout_with_batch(tr)
+    legacy = tr.build_batch_legacy(trees)
+    np.testing.assert_array_equal(batch.tokens, legacy.tokens)
+    np.testing.assert_array_equal(batch.response_mask,
+                                  legacy.response_mask)
+    np.testing.assert_allclose(batch.logprobs_old, legacy.logprobs_old)
+    np.testing.assert_allclose(batch.rewards, legacy.rewards)
+    dense = batch.advantages
+    if tr._use_global_norm:
+        dense = np.asarray(adv_mod.global_normalize(
+            jnp.asarray(dense), jnp.asarray(batch.response_mask)))
+    np.testing.assert_allclose(dense, legacy.advantages, atol=1e-5)
+    # the compact pack ships strictly fewer bytes than the dense one
+    assert batch.host_pack_bytes < legacy.host_pack_bytes
+
+
+def test_update_matches_legacy_k_epochs():
+    """The single scanned K-epoch jitted update must land on the same
+    params as the legacy one-dispatch-per-epoch loop."""
+    tr = _trainer(TrainerMode.TREEPO, seed=5, ppo_epochs=2)
+    trees, batch = _rollout_with_batch(tr)
+    legacy_batch = tr.build_batch_legacy(trees)
+    snap = jax.tree.map(np.array, (tr.params, tr.opt_state))
+
+    m_new = tr.update(batch)
+    new_params = jax.tree.map(np.array, tr.params)
+
+    tr.params, tr.opt_state = jax.tree.map(jnp.asarray, snap)
+    m_old = tr.update_legacy(legacy_batch)
+    old_params = jax.tree.map(np.array, tr.params)
+
+    assert np.isfinite(m_new["loss"]) and np.isfinite(m_old["loss"])
+    np.testing.assert_allclose(m_new["loss"], m_old["loss"],
+                               rtol=1e-4, atol=1e-6)
+    flat_new = jax.tree.leaves(new_params)
+    flat_old = jax.tree.leaves(old_params)
+    for a, b in zip(flat_new, flat_old):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32),
+                                   rtol=1e-3, atol=1e-5)
+    # one compiled update per (N, L) bucket
+    assert len(tr._update_fns) == 1
+
+
+def test_update_pads_batch_rows_without_changing_loss():
+    """Row padding to the bucket size must be invisible to the loss (the
+    padded rows carry an empty response mask)."""
+    import dataclasses as dc
+
+    from repro.data.tokenizer import ByteTokenizer
+    from repro.rl.trainer import _bucket_rows
+
+    tr = _trainer(TrainerMode.TREEPO, seed=7)
+    trees, batch = _rollout_with_batch(tr)
+    N = batch.tokens.shape[0]
+    assert _bucket_rows(N) >= N
+    snap = jax.tree.map(np.array, (tr.params, tr.opt_state))
+    m1 = tr.update(batch)
+    tr.params, tr.opt_state = jax.tree.map(jnp.asarray, snap)
+    # append explicit dead rows (forces the next bucket up): same loss
+    pad = _bucket_rows(N)
+    bigger = dc.replace(
+        batch,
+        tokens=np.concatenate(
+            [batch.tokens,
+             np.full((pad, batch.tokens.shape[1]), ByteTokenizer.PAD,
+                     np.int32)]),
+        prompt_lens=np.concatenate(
+            [batch.prompt_lens, np.zeros((pad,), np.int32)]),
+        resp_lens=np.concatenate(
+            [batch.resp_lens, np.zeros((pad,), np.int32)]),
+        logprobs_old=np.concatenate(
+            [batch.logprobs_old,
+             np.zeros((pad, batch.logprobs_old.shape[1]), np.float32)]),
+        adv_traj=np.concatenate(
+            [batch.adv_traj, np.zeros((pad,), np.float32)]),
+        rewards=np.concatenate(
+            [batch.rewards, np.zeros((pad,), np.float32)]))
+    m2 = tr.update(bigger)
+    np.testing.assert_allclose(m1["loss"], m2["loss"],
+                               rtol=1e-4, atol=1e-6)
+    assert len(tr._update_fns) == 2       # two distinct (N, L) buckets
