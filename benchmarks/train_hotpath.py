@@ -11,12 +11,18 @@ through both training paths:
   padded (Q, G, J) tensors recorded during sampling, compact pack
   ((N, L) tokens/logprobs + (N,) lengths/advantages; mask, broadcast
   and global norm derived on device), one jitted K-epoch ``lax.scan``
-  update per (N, L) bucket with donated params/opt-state.
+  update per (N, L) bucket with donated params/opt-state;
+* **packed** — the new path plus sequence packing
+  (``repro.rl.packing``): multiple short trajectories FFD-binned into
+  each (N, L) row with (N, S) per-segment tables, segment-masked
+  attention and per-segment RoPE resets derived on device.
 
 Reported per mode: host-pack bytes per step, build (reward → advantage
-→ pack) wall time, and steady-state (post-compile) update wall time.
-Wall-clock on this container is relative, not TPU; the byte counts are
-exact.  Emits ``results/BENCH_train.json``.
+→ pack) wall time, steady-state (post-compile) update wall time, and —
+for the unpacked-vs-packed comparison — the padded-token fraction of
+the (N, L) grid (the fwd/bwd FLOP waste packing exists to shrink).
+Wall-clock on this container is relative, not TPU; the byte counts and
+pad fractions are exact.  Emits ``results/BENCH_train.json``.
 """
 from __future__ import annotations
 
@@ -40,10 +46,14 @@ MODES = [TrainerMode.GRPO, TrainerMode.GRPO_TREE, TrainerMode.TREEPO]
 
 
 def _cfgs(ppo_epochs: int):
-    tree_cfg = TreeConfig(max_depth=4, segment_len=16, max_width=4,
+    # deep/wide enough that early-stopped paths (EOS after the BC
+    # warmup, repetition guard) coexist with max-depth survivors — the
+    # mixed-depth length spread sequence packing exists to absorb
+    tree_cfg = TreeConfig(max_depth=8, segment_len=32, max_width=8,
                           branch_factor=2, init_divergence_low=2,
-                          init_divergence_high=2, temperature=0.9)
-    train_cfg = TrainConfig(batch_size=2, group_size=4,
+                          init_divergence_high=2, temperature=0.9,
+                          repetition_ngram=8, repetition_count=3)
+    train_cfg = TrainConfig(batch_size=2, group_size=8,
                             oversample_factor=2, max_resample_rounds=0,
                             learning_rate=5e-4, reward_shaping=0.1,
                             ppo_epochs=ppo_epochs)
@@ -70,8 +80,8 @@ def _time_best(fn, reps: int = 3) -> float:
 def run(quick: bool = True, out_path: str = OUT_PATH) -> dict:
     n_queries = 2 if quick else 4
     ppo_epochs = 2
-    bc_steps = 30 if quick else 60
-    reps = 3 if quick else 5
+    bc_steps = 60      # enough BC that EOS early-stops appear (the
+    reps = 3 if quick else 5   # length spread the packed mode measures)
     rows = []
     print("\n== Train hot path: batched advantage + scanned K-epoch "
           "update vs legacy host loop ==")
@@ -96,9 +106,12 @@ def run(quick: bool = True, out_path: str = OUT_PATH) -> dict:
                 tr.train_cfg, dynamic_sampling=False)
             batch = tr.build_batch(trees)
             legacy = tr.build_batch_legacy(trees)
+        packed = tr.build_batch_packed(trees)
         build_s = _time_best(lambda: tr.build_batch(trees), reps)
         legacy_build_s = _time_best(
             lambda: tr.build_batch_legacy(trees), reps)
+        packed_build_s = _time_best(
+            lambda: tr.build_batch_packed(trees), reps)
 
         snap = _snapshot(tr)
         tr.update(batch)            # compile the scanned K-epoch update
@@ -108,8 +121,13 @@ def run(quick: bool = True, out_path: str = OUT_PATH) -> dict:
         tr.update_legacy(legacy)    # compile the per-epoch legacy update
         _restore(tr, snap)
         legacy_upd_s = _time_best(lambda: tr.update_legacy(legacy), reps)
+        _restore(tr, snap)
+        tr.update_packed(packed)    # compile the packed K-epoch update
+        _restore(tr, snap)
+        packed_upd_s = _time_best(lambda: tr.update_packed(packed), reps)
 
         N, L = batch.tokens.shape
+        Np = packed.tokens.shape[0]
         row = {
             "mode": mode.value,
             "ppo_epochs": ppo_epochs,
@@ -124,12 +142,30 @@ def run(quick: bool = True, out_path: str = OUT_PATH) -> dict:
             "legacy_update_s": round(legacy_upd_s, 4),
             "update_dispatches_per_step": 1,
             "legacy_update_dispatches_per_step": ppo_epochs,
+            "padded_token_fraction": round(
+                batch.padded_token_fraction, 4),
+            "packed": {
+                "batch_rows": int(Np),
+                "bucket_len": int(packed.tokens.shape[1]),
+                "segment_slots": int(packed.seg_prompt_lens.shape[1]),
+                "host_pack_bytes": int(packed.host_pack_bytes),
+                "build_s": round(packed_build_s, 4),
+                "update_s": round(packed_upd_s, 4),
+                "padded_token_fraction": round(
+                    packed.padded_token_fraction, 4),
+            },
         }
         rows.append(row)
         print(fmt_row([mode.value, N, L, batch.host_pack_bytes,
                        legacy.host_pack_bytes, round(build_s, 4),
                        round(legacy_build_s, 4), round(upd_s, 4),
                        round(legacy_upd_s, 4)], widths))
+        print(fmt_row(["  packed", Np, packed.tokens.shape[1],
+                       packed.host_pack_bytes, "-",
+                       round(packed_build_s, 4), "-",
+                       round(packed_upd_s, 4),
+                       f"pad {packed.padded_token_fraction:.3f} vs "
+                       f"{batch.padded_token_fraction:.3f}"], widths))
     result = {"benchmark": "train_hotpath", "quick": quick,
               "wall_is_container_relative": True, "rows": rows}
     os.makedirs(os.path.dirname(os.path.abspath(out_path)), exist_ok=True)

@@ -28,6 +28,10 @@ def main():
     ap.add_argument("--queries", type=int, default=2)
     ap.add_argument("--width", type=int, default=6)
     ap.add_argument("--ckpt-dir", default="checkpoints/treepo")
+    ap.add_argument("--pack", action="store_true",
+                    help="sequence-pack the update batches "
+                         "(repro.rl.packing): several short "
+                         "trajectories per row, fewer pad-token FLOPs")
     args = ap.parse_args()
 
     cfg = get_config(args.arch, smoke=True)
@@ -39,7 +43,8 @@ def main():
                             group_size=args.width,
                             oversample_factor=2, max_resample_rounds=1,
                             learning_rate=5e-4, advantage_kind="treepo",
-                            reward_shaping=0.1)
+                            reward_shaping=0.1,
+                            pack_sequences=args.pack)
     trainer = RLTrainer(cfg, train_cfg, tree_cfg, TrainerMode.TREEPO,
                         seed=0,
                         engine_kwargs=dict(num_pages=4096, page_size=16,
@@ -61,6 +66,7 @@ def main():
               f"reward={m['reward_mean']:.3f} "
               f"trajs={m['num_trajectories']:.0f} "
               f"len={m['response_len']:.0f} "
+              f"pad={m.get('padded_token_fraction', 0.0):.2f} "
               f"entropy={m.get('entropy', float('nan')):.3f}",
               flush=True)
         if m["step"] % 50 == 0:

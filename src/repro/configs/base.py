@@ -274,6 +274,13 @@ class TrainConfig:
     eps: float = 1e-8
     max_grad_norm: float = 1.0
     ppo_epochs: int = 1
+    # sequence packing: bin multiple short trajectories into each (N, L)
+    # row of the update batch (repro.rl.packing) — attention is segment-
+    # masked and RoPE positions reset per segment, so the update matches
+    # the unpacked one while spending far fewer FLOPs on pad tokens.
+    # Exact for attention-only archs (repro.rl.packing.packing_supported;
+    # SSM/RWKV state and encoder/prefix conditioning cross segments).
+    pack_sequences: bool = False
     # partial credit for a well-formatted but wrong boxed answer.  The paper
     # uses binary rewards on a pretrained base model; at toy scale the
     # shaping keeps reward std > 0 early (0.0 = paper-faithful binary).

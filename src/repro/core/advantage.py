@@ -16,10 +16,18 @@ Variants (paper names in quotes):
   treepo_no_root                — drop the j=0 root-group term (ablation:
                                  comparable)
 
-All return a per-trajectory advantage (G,); token-level  = broadcast over
+All return a per-trajectory advantage (G,); token-level = broadcast over
 the trajectory's tokens (Eq. 1 applies it at every t).
-REINFORCE++-style *global* normalization across the whole batch of queries
-is applied separately (``global_normalize``).
+
+The paper's "global and local" mixing decomposes as: *local* = the
+per-depth subgroup baselines above (each trajectory is centered against
+the mean reward of every subtree it belongs to), *global* = the
+REINFORCE++ variance normalization across all response tokens of the
+whole batch (``global_normalize``).  Since PR 3 the global half runs
+on device inside the jitted update — the trainer broadcasts the (N,)
+per-trajectory advantages over the derived response mask and normalizes
+there (``repro.rl.update``; the sequence-packed layout derives the
+broadcast from its per-segment tables first).
 
 Batched dispatch: :func:`batch_treepo_advantage` is ONE jitted call over
 the whole (Q, G) batch.  Ragged groups are handled by a validity ``mask``
@@ -104,8 +112,17 @@ def treepo_advantage(
 
     rewards: (G,) terminal rewards; anc: (G, J) ancestor ids.
     Returns (G,) advantages.  Eq. 5 (variant="treepo"):
-        Â_i = (1/J) Σ_j Â_{i,j} / std_j({Â_{i,j}})
-    with Â_{i,j} = R_i − mean(R over G_j).
+        Â_i = (1/J) Σ_j Â_{i,j} / std({Â_{i,j}}_j)
+    with Â_{i,j} = R_i − mean(R over G_j); the denominator std runs over
+    trajectory i's own per-depth terms.  Eq. 7
+    (variant="treepo_subgroup_reject") zeroes degenerate subgroups
+    (std(G_j) == 0) out of BOTH the numerator aggregation and that
+    denominator std — the rejection removes the depth term from the
+    whole estimator, not just the average (PR 3 regression fix).
+
+    Batched path: :func:`batch_treepo_advantage` vmaps this over (Q, G)
+    with sentinel ancestor ids on padded slots; prefer it in hot paths —
+    no per-tree dispatches.
     """
     G, J = anc.shape
     means = _subgroup_means(rewards, anc)        # (G, J)

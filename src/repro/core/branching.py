@@ -4,17 +4,26 @@ The budget contract: at depth ``d`` the tree may hold up to
 ``init_div * N^d`` concurrent paths, capped by the remaining width
 (``w - finished``).  *Budget transfer* re-assigns the allowance of early-
 stopped paths to the survivors, keeping the inference batch full.  The
-distribution of extra forks over the active paths is the heuristic knob:
+distribution of extra forks over the active paths is the heuristic knob
+(``TreeConfig.branch_heuristic``; the ``*_encourage`` aliases are
+accepted for the prob-guided pair):
 
-  uniform             — round-robin (the paper's default);
-  low_prob_encourage  — softmax(-seg_logprob / tau): uncertain paths fork
-                        more (paper finds this *harmful* — §4.4);
-  high_prob_encourage — softmax(+seg_logprob / tau): confident paths fork
-                        more (overly greedy);
-  scheduled_low_prob  — low-prob encourage with tau annealed across
-                        training (5.0 -> 1.0 in the paper's ablation).
+  uniform            — round-robin (the paper's default);
+  low_prob           — softmax(-seg_logprob / tau): uncertain paths fork
+                       more (paper finds this *harmful* — §4.4);
+  high_prob          — softmax(+seg_logprob / tau): confident paths fork
+                       more (overly greedy);
+  scheduled_low_prob — low_prob with tau annealed across training
+                       (5.0 -> 1.0 in the paper's ablation).
 
-Every active path always keeps >= 1 continuation (the paper's guarantee).
+The per-path heuristic signal is the mean logprob of the path's LAST
+decoded segment — ``Path.seg_logprob``, which since PR 3 is the tail of
+the per-segment ``Path.seg_logprobs`` list, so a DFS-fallback child at
+fork depth j reads its *prefix* segment's value, not the source leaf's.
+
+Every active path always keeps >= 1 continuation while the budget
+permits (the paper's guarantee); after mixed-depth fallback each depth
+group is budgeted independently (``mixed_depth_budgets``).
 """
 from __future__ import annotations
 

@@ -10,6 +10,10 @@ materialized head repetition (saves Hq/Hkv × KV bandwidth).
 
 Causal masking, sliding windows and the chunked-prefill ``q_offset`` are all
 position masks computed from grid coordinates (no mask tensors in HBM).
+Sequence-packed rows add one more mask term: per-token ``segment_ids``
+(B, S) int32 stream in as (1, blk) tiles alongside q and k, and the score
+mask requires ``seg[q] == seg[kv]`` — packed segments never attend across
+their boundary, at the cost of two int32 tiles (no (S, S) mask in HBM).
 """
 from __future__ import annotations
 
@@ -25,9 +29,14 @@ from repro.kernels.compat import CompilerParams
 _NEG_INF = -1e30
 
 
-def _flash_kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
+def _flash_kernel(q_ref, k_ref, v_ref, *refs,
                   scale: float, causal: bool, window: int, q_offset: int,
-                  blk_q: int, blk_k: int, sq: int, skv: int):
+                  blk_q: int, blk_k: int, sq: int, skv: int,
+                  has_seg: bool):
+    if has_seg:
+        qseg_ref, kseg_ref, o_ref, acc_ref, m_ref, l_ref = refs
+    else:
+        o_ref, acc_ref, m_ref, l_ref = refs
     iq = pl.program_id(2)
     ik = pl.program_id(3)
     nk = pl.num_programs(3)
@@ -53,6 +62,10 @@ def _flash_kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
         mask &= kpos <= qpos
     if window > 0:
         mask &= kpos > qpos - window
+    if has_seg:
+        qseg = qseg_ref[0, :]                          # (blk_q,)
+        kseg = kseg_ref[0, :]                          # (blk_k,)
+        mask &= qseg[:, None] == kseg[None, :]
     s = jnp.where(mask, s, _NEG_INF)
 
     m_prev = m_ref[...]                                 # (blk_q,)
@@ -77,13 +90,20 @@ def _flash_kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
 )
 def flash_attention_pallas(q, k, v, *, causal: bool = True, window: int = 0,
                            scale=None, q_offset: int = 0, blk_q: int = 128,
-                           blk_k: int = 128, interpret: bool = False):
-    """q: (B, Sq, Hq, D); k/v: (B, Skv, Hkv, D) -> (B, Sq, Hq, D)."""
+                           blk_k: int = 128, interpret: bool = False,
+                           segment_ids=None):
+    """q: (B, Sq, Hq, D); k/v: (B, Skv, Hkv, D) -> (B, Sq, Hq, D).
+
+    ``segment_ids``: optional (B, S) int32 (requires Sq == Skv): restrict
+    attention to same-segment pairs (sequence-packed rows)."""
     B, Sq, Hq, D = q.shape
     Skv, Hkv = k.shape[1], k.shape[2]
     group = Hq // Hkv
     if scale is None:
         scale = 1.0 / (D ** 0.5)
+    has_seg = segment_ids is not None
+    if has_seg and Sq != Skv:
+        raise ValueError("segment_ids requires self-attention (Sq == Skv)")
 
     blk_q = min(blk_q, max(Sq, 1))
     blk_k = min(blk_k, max(Skv, 1))
@@ -97,18 +117,34 @@ def flash_attention_pallas(q, k, v, *, causal: bool = True, window: int = 0,
     nq = q.shape[1] // blk_q
     nk = k.shape[1] // blk_k
 
+    in_specs = [
+        pl.BlockSpec((1, blk_q, 1, D), lambda b, h, i, j: (b, i, h, 0)),
+        pl.BlockSpec((1, blk_k, 1, D),
+                     lambda b, h, i, j: (b, j, h // group, 0)),
+        pl.BlockSpec((1, blk_k, 1, D),
+                     lambda b, h, i, j: (b, j, h // group, 0)),
+    ]
+    inputs = [q, k, v]
+    if has_seg:
+        # -1 on the kv pad tail can never equal a real q segment id of a
+        # surviving (un-sliced) row; the kpos < skv term masks it anyway.
+        qseg = jnp.pad(segment_ids.astype(jnp.int32), ((0, 0), (0, pad_q)),
+                       constant_values=-1)
+        kseg = jnp.pad(segment_ids.astype(jnp.int32), ((0, 0), (0, pad_k)),
+                       constant_values=-1)
+        in_specs += [
+            pl.BlockSpec((1, blk_q), lambda b, h, i, j: (b, i)),
+            pl.BlockSpec((1, blk_k), lambda b, h, i, j: (b, j)),
+        ]
+        inputs += [qseg, kseg]
+
     out = pl.pallas_call(
         functools.partial(
             _flash_kernel, scale=float(scale), causal=causal, window=window,
-            q_offset=q_offset, blk_q=blk_q, blk_k=blk_k, sq=Sq, skv=Skv),
+            q_offset=q_offset, blk_q=blk_q, blk_k=blk_k, sq=Sq, skv=Skv,
+            has_seg=has_seg),
         grid=(B, Hq, nq, nk),
-        in_specs=[
-            pl.BlockSpec((1, blk_q, 1, D), lambda b, h, i, j: (b, i, h, 0)),
-            pl.BlockSpec((1, blk_k, 1, D),
-                         lambda b, h, i, j: (b, j, h // group, 0)),
-            pl.BlockSpec((1, blk_k, 1, D),
-                         lambda b, h, i, j: (b, j, h // group, 0)),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((1, blk_q, 1, D),
                                lambda b, h, i, j: (b, i, h, 0)),
         out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
@@ -122,7 +158,7 @@ def flash_attention_pallas(q, k, v, *, causal: bool = True, window: int = 0,
                                  "arbitrary"),
         ),
         interpret=interpret,
-    )(q, k, v)
+    )(*inputs)
     if pad_q:
         out = out[:, :Sq]
     return out

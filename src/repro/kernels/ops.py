@@ -46,11 +46,15 @@ def rmsnorm(x, scale, eps: float = 1e-6):
 # ---------------------------------------------------------------------------
 
 def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
-                    scale: float | None = None, q_offset: int = 0):
+                    scale: float | None = None, q_offset: int = 0,
+                    segment_ids=None):
     """q: (B, Sq, Hq, D); k/v: (B, Skv, Hkv, D). Returns (B, Sq, Hq, D).
 
     ``window``: sliding-window size (0 = full). ``q_offset``: absolute
     position of q[0] relative to k[0] (for chunked prefill).
+    ``segment_ids``: optional (B, S) int32 per-token segment labels for
+    sequence-packed rows — attention is restricted to same-segment pairs
+    (requires Sq == Skv).
     """
     # the Pallas kernel tiles one head dim for q/k/v; MLA prefill attends
     # with qk_head_dim != v_head_dim, which only the reference supports.
@@ -59,11 +63,12 @@ def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
 
         return flash_attention_pallas(q, k, v, causal=causal, window=window,
                                       scale=scale, q_offset=q_offset,
+                                      segment_ids=segment_ids,
                                       interpret=_interpret())
     from repro.kernels.ref import attention_ref
 
     return attention_ref(q, k, v, causal=causal, window=window, scale=scale,
-                         q_offset=q_offset)
+                         q_offset=q_offset, segment_ids=segment_ids)
 
 
 # ---------------------------------------------------------------------------

@@ -26,8 +26,13 @@ def _repeat_kv(k, num_q_heads: int):
 
 
 def attention_ref(q, k, v, *, causal: bool = True, window: int = 0,
-                  scale=None, q_offset: int = 0, bias=None):
-    """Full-sequence attention. q: (B,Sq,Hq,D); k,v: (B,Skv,Hkv,D)."""
+                  scale=None, q_offset: int = 0, bias=None,
+                  segment_ids=None):
+    """Full-sequence attention. q: (B,Sq,Hq,D); k,v: (B,Skv,Hkv,D).
+
+    ``segment_ids``: optional (B, S) int32 (requires Sq == Skv) — tokens
+    attend only within their own segment (sequence-packed training rows).
+    """
     B, Sq, Hq, D = q.shape
     Skv = k.shape[1]
     scale = scale if scale is not None else 1.0 / (D ** 0.5)
@@ -42,7 +47,15 @@ def attention_ref(q, k, v, *, causal: bool = True, window: int = 0,
         mask &= kpos[None, :] <= qpos[:, None]
     if window > 0:
         mask &= kpos[None, :] > qpos[:, None] - window
-    logits = jnp.where(mask[None, None], logits, -1e30)
+    if segment_ids is None:
+        logits = jnp.where(mask[None, None], logits, -1e30)
+    else:
+        # packed rows: the mask becomes per-batch (B, Sq, Skv) — only
+        # pay that B-fold blowup when segments are actually present
+        assert Sq == Skv, "segment_ids requires self-attention (Sq == Skv)"
+        seg_mask = mask[None] & (segment_ids[:, :, None] ==
+                                 segment_ids[:, None, :])
+        logits = jnp.where(seg_mask[:, None], logits, -1e30)
     if bias is not None:
         logits = logits + bias
     p = jax.nn.softmax(logits, axis=-1)

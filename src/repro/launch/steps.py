@@ -29,6 +29,7 @@ from repro.distributed.sharding import (
 )
 from repro.models.model import decode_step, init_cache, init_params, prefill
 from repro.optim import adamw_init, warmup_constant_schedule
+from repro.rl.packing import packing_supported
 from repro.rl.update import make_ppo_update
 
 
@@ -36,17 +37,41 @@ from repro.rl.update import make_ppo_update
 # step functions
 # ---------------------------------------------------------------------------
 
+# segment-table width of the packed train_4k layout: 4096-token rows
+# hold at most a handful of tree trajectories each (the paper's l=512,
+# d<=14 budget); 8 slots cover the FFD packer's worst case at that
+# shape while keeping the (B, SEGS) tables negligible next to tokens.
+TRAIN_PACK_SEGMENTS = 8
+
+
 def make_train_step(cfg: ModelConfig, train_cfg: Optional[TrainConfig] = None,
                     remat: bool = True) -> Callable:
     """Multi-pod PG update: the SAME K-epoch scanned update the
     single-replica trainer jits per bucket (``repro.rl.update``), wrapped
     to the pjit dry-run's (params, opt_state, batch) calling convention.
+
+    For attention architectures (``packing_supported``) the batch is the
+    sequence-packed compact layout (``packed=True``): (B, S) tokens +
+    rollout logprobs and (B, SEGS) per-segment tables — masks, RoPE
+    position resets, segment-masked attention and the advantage
+    broadcast are all derived on device, so the pjit case ships lengths
+    instead of dense (B, S) mask/advantage tensors.  SSM/RWKV hybrids
+    keep the dense layout: their recurrent state would leak across
+    packed segment boundaries (``input_specs`` agrees on the same
+    predicate, so specs and step never disagree).  The REINFORCE++
+    global norm runs on device for packed batches under the same gate
+    the single-replica trainer uses (never for already-normalized GRPO
+    advantages); dense batches ship pre-normalized advantages.
+
     The warmup schedule is driven by the optimizer step count; the
     entropy diagnostic is skipped (full-vocab log-softmax is pure
     overhead at multi-pod scale)."""
     tc = train_cfg or TrainConfig()
+    packed = packing_supported(cfg)
     update = make_ppo_update(
-        cfg, tc, remat=remat, with_entropy=False,
+        cfg, tc, remat=remat, with_entropy=False, packed=packed,
+        use_global_norm=(packed and tc.global_norm
+                         and tc.advantage_kind != "grpo"),
         lr_fn=warmup_constant_schedule(tc.learning_rate, tc.warmup_steps))
     K = max(tc.ppo_epochs, 1)
 
@@ -102,9 +127,22 @@ def input_specs(cfg: ModelConfig, shape_name: str,
     specs: Dict[str, Any] = {}
     if mode == "train":
         specs["tokens"] = _sds((batch, seq_len), jnp.int32)
-        specs["response_mask"] = _sds((batch, seq_len), jnp.float32)
         specs["logprobs_old"] = _sds((batch, seq_len), jnp.float32)
-        specs["advantages"] = _sds((batch, seq_len), jnp.float32)
+        if packing_supported(cfg):
+            # sequence-packed compact layout: per-segment length/adv
+            # tables replace the dense (batch, seq) mask + advantage
+            # planes (2·seq f32 -> 3·SEGS words per row on the mesh)
+            specs["seg_prompt_lens"] = _sds((batch, TRAIN_PACK_SEGMENTS),
+                                            jnp.int32)
+            specs["seg_resp_lens"] = _sds((batch, TRAIN_PACK_SEGMENTS),
+                                          jnp.int32)
+            specs["seg_adv"] = _sds((batch, TRAIN_PACK_SEGMENTS),
+                                    jnp.float32)
+        else:
+            # SSM/RWKV hybrids: recurrent state crosses intra-row
+            # boundaries, so they keep the dense unpacked layout
+            specs["response_mask"] = _sds((batch, seq_len), jnp.float32)
+            specs["advantages"] = _sds((batch, seq_len), jnp.float32)
         if cfg.frontend is not None and cfg.frontend.kind == "vision":
             specs["prefix_embeds"] = _sds(
                 (batch, cfg.frontend.num_prefix_tokens,

@@ -55,12 +55,14 @@ def _gqa_qkv(params, cfg: ModelConfig, x, positions):
 
 def gqa_forward(params, cfg: ModelConfig, x, positions, layer_idx: int,
                 *, causal: bool = True,
-                return_kv: bool = False):
+                return_kv: bool = False,
+                segment_ids=None):
     q, k, v = _gqa_qkv(params, cfg, x, positions)
     window = 0
     if cfg.sliding_window > 0 and not cfg.is_global_attn_layer(layer_idx):
         window = cfg.sliding_window
-    out = kops.flash_attention(q, k, v, causal=causal, window=window)
+    out = kops.flash_attention(q, k, v, causal=causal, window=window,
+                               segment_ids=segment_ids)
     B, S, _, _ = out.shape
     y = out.reshape(B, S, -1) @ params["w_o"]
     if return_kv:
@@ -202,7 +204,8 @@ def _mla_latents(params, cfg, x, positions):
 
 
 def mla_forward(params, cfg: ModelConfig, x, positions, layer_idx: int,
-                *, causal: bool = True, return_kv: bool = False):
+                *, causal: bool = True, return_kv: bool = False,
+                segment_ids=None):
     """Decompressed (train/prefill) MLA: materialize per-head K/V."""
     m = cfg.mla
     B, S, _ = x.shape
@@ -216,7 +219,8 @@ def mla_forward(params, cfg: ModelConfig, x, positions, layer_idx: int,
         [k_nope, jnp.broadcast_to(k_rope[:, :, None, :],
                                   (B, S, H, m.qk_rope_head_dim))], axis=-1)
     scale = 1.0 / (m.qk_head_dim ** 0.5)
-    out = kops.flash_attention(q, k, v, causal=causal, scale=scale)
+    out = kops.flash_attention(q, k, v, causal=causal, scale=scale,
+                               segment_ids=segment_ids)
     y = out.reshape(B, S, -1) @ params["w_o"]
     if return_kv:
         return y, (ckv, k_rope)

@@ -157,12 +157,17 @@ def _ffn_apply(lp: Params, cfg: ModelConfig, h):
     return mlp(lp["ffn"], h, cfg.act), jnp.float32(0.0)
 
 
-def _decoder_layer_body(lp: Params, x, positions, cross_k, cross_v, *,
-                        cfg: ModelConfig, layer_idx: int):
+def _decoder_layer_body(lp: Params, x, positions, segment_ids, cross_k,
+                        cross_v, *, cfg: ModelConfig, layer_idx: int):
     """One decoder layer (attention/ssm + FFN [+ cross-attn]).
 
     Standalone so ``jax.checkpoint`` can wrap it for activation remat in
     the distributed train step.  Returns (x, aux_loss).
+
+    ``segment_ids`` (None or (B, S)) restricts attention to same-segment
+    pairs for sequence-packed rows.  SSM/RWKV layers have no equivalent
+    boundary: their recurrent state flows across packed segments, so
+    packing is only exact for attention architectures.
     """
     i = layer_idx
     B = x.shape[0]
@@ -170,9 +175,11 @@ def _decoder_layer_body(lp: Params, x, positions, cross_k, cross_v, *,
     h = rmsnorm(lp["norm1"], x, cfg.norm_eps)
     if kind == "attn":
         if cfg.attention_kind == "mla":
-            y = attn.mla_forward(lp["attn"], cfg, h, positions, i)
+            y = attn.mla_forward(lp["attn"], cfg, h, positions, i,
+                                 segment_ids=segment_ids)
         else:
-            y = attn.gqa_forward(lp["attn"], cfg, h, positions, i)
+            y = attn.gqa_forward(lp["attn"], cfg, h, positions, i,
+                                 segment_ids=segment_ids)
     elif kind == "mamba":
         y, _ = ssm.mamba_forward(lp["mamba"], cfg, h)
     elif kind == "rwkv":
@@ -202,12 +209,17 @@ def forward(params, cfg: ModelConfig, tokens, *,
             prefix_embeds: Optional[jnp.ndarray] = None,
             enc_frames: Optional[jnp.ndarray] = None,
             positions: Optional[jnp.ndarray] = None,
+            segment_ids: Optional[jnp.ndarray] = None,
             remat: bool = False,
             ) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """tokens: (B, S) -> (logits (B, S_total, V), moe_aux scalar).
 
     ``prefix_embeds``: (B, P, d) modality prefix (vlm/audio stub) prepended
     before token embeddings; logits cover the full combined sequence.
+    ``positions``: (B, S_total) RoPE positions (default: 0..S_total-1) —
+    sequence-packed rows pass per-segment-reset positions here.
+    ``segment_ids``: (B, S_total) int32 packing labels (-1 = pad); when
+    given, attention layers mask out cross-segment pairs.
     ``remat``: checkpoint each decoder layer (training memory).
     """
     B, S = tokens.shape
@@ -232,7 +244,7 @@ def forward(params, cfg: ModelConfig, tokens, *,
         if remat:
             body = jax.checkpoint(body)
         ck, cv = cross_kv[i] if cross_kv is not None else (dummy_kv, dummy_kv)
-        x, aux = body(lp, x, positions, ck, cv)
+        x, aux = body(lp, x, positions, segment_ids, ck, cv)
         aux_total = aux_total + aux
     x = rmsnorm(params["norm_f"], x, cfg.norm_eps)
     logits = unembed(params["embed"], x, cfg.tie_embeddings)

@@ -1,3 +1,11 @@
+from repro.rl.packing import (
+    PackedRolloutBatch,
+    bucket_segments,
+    first_fit_decreasing,
+    packed_batch_tensors,
+    packed_row_tensors,
+    packing_supported,
+)
 from repro.rl.trainer import (
     LegacyRolloutBatch,
     RLTrainer,
@@ -6,5 +14,8 @@ from repro.rl.trainer import (
 )
 from repro.rl.update import make_pg_loss, make_ppo_update
 
-__all__ = ["LegacyRolloutBatch", "RLTrainer", "RolloutBatch",
-           "TrainerMode", "make_pg_loss", "make_ppo_update"]
+__all__ = ["LegacyRolloutBatch", "PackedRolloutBatch", "RLTrainer",
+           "RolloutBatch", "TrainerMode", "bucket_segments",
+           "first_fit_decreasing", "make_pg_loss", "make_ppo_update",
+           "packed_batch_tensors", "packed_row_tensors",
+           "packing_supported"]

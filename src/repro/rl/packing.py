@@ -1,0 +1,218 @@
+"""Sequence packing for the training hot path.
+
+TreePO's segment-wise tree sampling produces trajectories of wildly
+varying depth — early-stopped paths are a few segments long while
+max-depth survivors fill the whole ``(N, L)`` bucket row — so the dense
+per-trajectory-per-row pack burns a large fraction of its fwd/bwd FLOPs
+on pad tokens.  This module bins multiple short trajectories into each
+row (first-fit-decreasing on total length) and derives, on device, the
+per-token tensors the PPO loss needs to treat each packed *segment* as
+an independent trajectory:
+
+* ``segment_ids`` (N, L)  — which segment a token belongs to (-1 = pad);
+  fed to the attention mask so no token attends across a segment
+  boundary;
+* ``positions`` (N, L)    — RoPE positions, reset to 0 at each segment
+  start (a packed segment sees exactly the positions its unpacked row
+  would);
+* ``response_mask`` (N, L) / ``advantages`` (N, L) — response-token mask
+  and the per-segment advantage broadcast over that segment's response
+  span.
+
+Only the compact tables cross the host->device boundary: ``(N, L)``
+tokens + rollout logprobs and three ``(N, S)`` per-segment tables
+(prompt lengths, response lengths, advantages).  Everything dense is
+derived inside the jitted update (``repro.rl.update`` with
+``packed=True``) — the same compact-pack discipline PR 3 introduced for
+the unpacked path, now amortized over multiple trajectories per row.
+
+The unpacked path (``RolloutBatch`` + ``RLTrainer.update``) stays as
+the parity oracle: a packed batch must produce the same loss and the
+same parameter update as its unpacked twin (tests/test_train_hotpath).
+
+Known limitation: segment isolation relies on the attention mask, so
+packing is exact for attention-only architectures
+(:func:`packing_supported`).  SSM/RWKV layers carry recurrent state
+across intra-row boundaries, and encoder / modality-prefix archs would
+make every packed segment share one per-row conditioning signal; those
+archs train unpacked (documented in docs/architecture.md).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Sequence, Tuple
+
+import numpy as np
+
+
+def packing_supported(cfg) -> bool:
+    """Whether sequence packing is *exact* for this architecture.
+
+    Two conditions: every layer is attention (segment-maskable —
+    Mamba/RWKV recurrent state crosses intra-row boundaries), and there
+    is no shared per-row conditioning (encoder cross-attention or a
+    modality prefix) that every packed segment would jointly attend.
+    Archs failing either must train on the unpacked layout."""
+    if cfg.encoder is not None or cfg.frontend is not None:
+        return False
+    return all(cfg.layer_kind(i) == "attn" for i in range(cfg.num_layers))
+
+
+def first_fit_decreasing(lengths: Sequence[int], capacity: int
+                         ) -> List[List[int]]:
+    """Greedy FFD bin packing: sort items by length (desc), place each in
+    the first row with room, open a new row otherwise.
+
+    An item longer than ``capacity`` gets a dedicated row (the caller's
+    bucket length then grows to cover it); it is never truncated.
+    Returns a list of rows, each a list of item indices in placement
+    order (the order segments are laid out left-to-right in the row).
+    """
+    order = sorted(range(len(lengths)), key=lambda i: (-lengths[i], i))
+    rows: List[List[int]] = []
+    space: List[int] = []
+    for i in order:
+        n = lengths[i]
+        for r in range(len(rows)):
+            if space[r] >= n:
+                rows[r].append(i)
+                space[r] -= n
+                break
+        else:
+            rows.append([i])
+            space.append(max(capacity - n, 0))
+    return rows
+
+
+def bucket_segments(n: int, quantum: int = 2) -> int:
+    """Pad the per-row segment-table width to a small bucket (multiples
+    of ``quantum``) so the packed update's compile cache is keyed by few
+    distinct (N, L, S) shapes."""
+    return max(quantum, -(-n // quantum) * quantum)
+
+
+def packed_row_tensors(seg_prompt_lens, seg_resp_lens, length: int, xp=np
+                       ) -> Tuple:
+    """Derive (segment_ids, positions, response_mask) from the compact
+    per-segment tables — the ONE definition shared by the on-device
+    packed update (xp=jnp) and host-side inspection views (xp=np).
+
+    seg_prompt_lens / seg_resp_lens: (N, S) int32, zero-padded (a
+    zero-total segment is a pad slot).  Segments occupy the row
+    contiguously from column 0.  Returns:
+
+      segment_ids   (N, L) int32, -1 on pad columns
+      positions     (N, L) int32, within-segment position (0 on pads)
+      response_mask (N, L) float32, 1 on generated tokens
+    """
+    plens = seg_prompt_lens.astype(xp.int32)
+    tot = plens + seg_resp_lens.astype(xp.int32)          # (N, S)
+    ends = xp.cumsum(tot, axis=1)                         # (N, S)
+    starts = ends - tot
+    t = xp.arange(length, dtype=xp.int32)[None, :, None]  # (1, L, 1)
+    in_seg = (t >= starts[:, None, :]) & (t < ends[:, None, :])  # (N, L, S)
+    in_i = in_seg.astype(xp.int32)
+    valid = in_seg.any(axis=2)                            # (N, L)
+    sid = xp.where(valid, xp.argmax(in_seg, axis=2), -1).astype(xp.int32)
+    seg_start = (in_i * starts[:, None, :]).sum(axis=2)   # (N, L)
+    seg_prompt = (in_i * plens[:, None, :]).sum(axis=2)
+    pos = xp.where(valid,
+                   xp.arange(length, dtype=xp.int32)[None, :] - seg_start,
+                   0).astype(xp.int32)
+    rmask = (valid & (pos >= seg_prompt)).astype(xp.float32)
+    return sid, pos, rmask
+
+
+def packed_batch_tensors(seg_prompt_lens, seg_resp_lens, seg_adv,
+                         length: int, xp=np) -> Tuple:
+    """packed_row_tensors + the per-segment advantage broadcast over each
+    segment's response span: returns (segment_ids, positions,
+    response_mask, advantages), all (N, L)."""
+    sid, pos, rmask = packed_row_tensors(seg_prompt_lens, seg_resp_lens,
+                                         length, xp=xp)
+    S = seg_adv.shape[1]
+    onehot = (sid[:, :, None] ==
+              xp.arange(S, dtype=xp.int32)[None, None, :])     # (N, L, S)
+    adv = (onehot.astype(xp.float32) *
+           seg_adv[:, None, :].astype(xp.float32)).sum(axis=2) * rmask
+    return sid, pos, rmask, adv
+
+
+@dataclasses.dataclass
+class PackedRolloutBatch:
+    """Compact sequence-packed host-side batch for the PG update.
+
+    Only ``tokens`` / ``logprobs_old`` (N, L) and the three (N, S)
+    per-segment tables are shipped to the device (``host_pack_bytes``);
+    ``segment_ids`` / ``positions`` / ``response_mask`` / ``advantages``
+    below are lazy *inspection* views for tests and metrics — the hot
+    path derives them on device inside the jitted packed update.
+    """
+
+    tokens: np.ndarray           # (N, L) packed prompt+response rows
+    logprobs_old: np.ndarray     # (N, L) rollout logprobs (0 elsewhere)
+    seg_prompt_lens: np.ndarray  # (N, S) int32, 0 = pad segment
+    seg_resp_lens: np.ndarray    # (N, S) int32
+    seg_adv: np.ndarray          # (N, S) per-trajectory advantage
+    seg_rewards: np.ndarray      # (N, S) terminal rewards (metrics only)
+    num_queries: int = 0
+    num_trajectories: int = 0
+    mean_response_len: float = 0.0
+    leaf_rate: float = 0.0
+    host_pack_bytes: int = 0
+    padded_rows: int = 0         # Nb: row-bucket the update really runs
+
+    @classmethod
+    def empty(cls) -> "PackedRolloutBatch":
+        z2 = np.zeros((0, 1), np.int32)
+        zs = np.zeros((0, 1), np.int32)
+        return cls(z2, np.zeros((0, 1), np.float32), zs, zs.copy(),
+                   np.zeros((0, 1), np.float32), np.zeros((0, 1),
+                                                          np.float32))
+
+    @property
+    def segment_ids(self) -> np.ndarray:
+        sid, _, _ = packed_row_tensors(self.seg_prompt_lens,
+                                       self.seg_resp_lens,
+                                       self.tokens.shape[1])
+        return sid
+
+    @property
+    def positions(self) -> np.ndarray:
+        _, pos, _ = packed_row_tensors(self.seg_prompt_lens,
+                                       self.seg_resp_lens,
+                                       self.tokens.shape[1])
+        return pos
+
+    @property
+    def response_mask(self) -> np.ndarray:
+        _, _, rmask = packed_row_tensors(self.seg_prompt_lens,
+                                         self.seg_resp_lens,
+                                         self.tokens.shape[1])
+        return rmask
+
+    @property
+    def advantages(self) -> np.ndarray:
+        _, _, _, adv = packed_batch_tensors(
+            self.seg_prompt_lens, self.seg_resp_lens, self.seg_adv,
+            self.tokens.shape[1])
+        return adv
+
+    @property
+    def rewards(self) -> np.ndarray:
+        """(num_trajectories,) flat rewards of the real segments."""
+        real = (self.seg_prompt_lens + self.seg_resp_lens) > 0
+        return self.seg_rewards[real]
+
+    @property
+    def padded_token_fraction(self) -> float:
+        """Fraction of the token grid the jitted update really runs
+        (``max(N, padded_rows)`` × L — row-bucket padding included)
+        occupied by pad tokens — the FLOP-waste metric packing exists
+        to shrink."""
+        n, L = self.tokens.shape
+        n = max(n, self.padded_rows)
+        if n == 0 or L == 0:
+            return 0.0
+        used = int((self.seg_prompt_lens + self.seg_resp_lens).sum())
+        return 1.0 - used / float(n * L)

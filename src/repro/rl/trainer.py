@@ -23,11 +23,20 @@ device-resident decode loop):
   token-broadcast advantages and the REINFORCE++ global normalization
   are derived on device inside the update;
 * all K ppo epochs run in ONE jitted call per (N, L) bucket
-  (``lax.scan`` carry, donated params/opt-state buffers).
+  (``lax.scan`` carry, donated params/opt-state buffers);
+* with ``TrainConfig.pack_sequences`` the batch is *sequence-packed*
+  (``repro.rl.packing``): multiple short trajectories share one (N, L)
+  row (first-fit-decreasing), the host ships only (N, L) tokens +
+  logprobs and three (N, S) per-segment tables, and the jitted update
+  derives segment-masked attention, per-segment RoPE resets, masks and
+  advantages on device — shrinking the pad-token fraction the tree's
+  mixed-depth trajectories otherwise burn.
 
 The previous per-tree / per-epoch host loop is kept as
 ``build_batch_legacy`` / ``update_legacy`` — the parity reference for
-tests and the "before" side of ``benchmarks/train_hotpath.py``.
+tests and the "before" side of ``benchmarks/train_hotpath.py``; the
+unpacked ``build_batch`` / ``update`` pair plays the same oracle role
+for the packed path.
 """
 from __future__ import annotations
 
@@ -62,6 +71,12 @@ from repro.optim import (
     clip_by_global_norm,
     warmup_constant_schedule,
 )
+from repro.rl.packing import (
+    PackedRolloutBatch,
+    bucket_segments,
+    first_fit_decreasing,
+    packing_supported,
+)
 from repro.rl.update import make_pg_loss, make_ppo_update
 
 
@@ -92,6 +107,7 @@ class RolloutBatch:
     mean_response_len: float = 0.0
     leaf_rate: float = 0.0
     host_pack_bytes: int = 0    # bytes shipped host->device for the update
+    padded_rows: int = 0        # Nb: row-bucket the update really runs
 
     @classmethod
     def empty(cls) -> "RolloutBatch":
@@ -110,6 +126,19 @@ class RolloutBatch:
         """(N, L) dense view: per-trajectory advantage broadcast over its
         response tokens (before global normalization)."""
         return self.adv_traj[:, None] * self.response_mask
+
+    @property
+    def padded_token_fraction(self) -> float:
+        """Fraction of the token grid the jitted update really runs
+        (``max(N, padded_rows)`` × L — row-bucket padding included)
+        occupied by pad tokens — the waste sequence packing
+        (PackedRolloutBatch) shrinks."""
+        n, L = self.tokens.shape
+        n = max(n, self.padded_rows)
+        if n == 0 or L == 0:
+            return 0.0
+        used = int((self.prompt_lens + self.resp_lens).sum())
+        return 1.0 - used / float(n * L)
 
 
 @dataclasses.dataclass
@@ -170,6 +199,12 @@ class RLTrainer:
         self.tok = ByteTokenizer()
         if cfg.vocab_size < self.tok.vocab_size:
             raise ValueError("model vocab too small for the byte tokenizer")
+        if train_cfg.pack_sequences and not packing_supported(cfg):
+            raise ValueError(
+                f"pack_sequences is not exact for {cfg.name}: SSM/RWKV "
+                "recurrent state (or encoder/prefix conditioning) crosses "
+                "packed segment boundaries — train unpacked "
+                "(repro.rl.packing.packing_supported)")
         key = jax.random.PRNGKey(seed)
         self.params = init_params(key, cfg)
         self.opt_state = adamw_init(self.params)
@@ -179,6 +214,7 @@ class RLTrainer:
                                      max_difficulty)
         self.engine_kwargs = dict(engine_kwargs or {})
         self._update_fns: Dict[Tuple[int, int], Any] = {}
+        self._packed_update_fns: Dict[Tuple[int, int, int], Any] = {}
         self._legacy_update_fns: Dict[Tuple[int, int], Any] = {}
         self.step = 0
         self.metrics_log: List[Dict[str, float]] = []
@@ -259,12 +295,16 @@ class RLTrainer:
             kept.append((tree, rewards))
         return kept
 
-    def build_batch(self, trees: List[QueryTree]) -> RolloutBatch:
-        """Reward, dynamic-sampling filter, ONE batched advantage
-        dispatch, compact fixed-shape pack."""
+    def _advantage_rows(self, trees: List[QueryTree]):
+        """Reward + DAPO filter + ONE batched advantage dispatch.
+
+        Returns (kept, rows) with rows = [(prompt, resp, logprobs,
+        reward, advantage), ...] — the per-trajectory material both the
+        unpacked and the packed pack layouts are built from.
+        """
         kept = self._kept_trees(trees)
         if not kept:
-            return RolloutBatch.empty()
+            return kept, []
         # bucket Q and pad G to the width cap so the jitted advantage
         # dispatch compiles once per bucket, not once per (Q, G) combo
         anc, rew_qg, gmask = batch_group_tensors(
@@ -280,6 +320,14 @@ class RLTrainer:
             for gi, (p, r) in enumerate(zip(tree.finished, rewards)):
                 rows.append((tree.prompt_tokens, p.tokens, p.logprobs,
                              float(r), float(adv_qg[qi, gi])))
+        return kept, rows
+
+    def build_batch(self, trees: List[QueryTree]) -> RolloutBatch:
+        """Reward, dynamic-sampling filter, ONE batched advantage
+        dispatch, compact fixed-shape pack."""
+        kept, rows = self._advantage_rows(trees)
+        if not rows:
+            return RolloutBatch.empty()
         L = _bucket_len(max(len(pr) + len(t) for pr, t, *_ in rows))
         N = len(rows)
         tokens = np.full((N, L), ByteTokenizer.PAD, np.int32)
@@ -313,7 +361,59 @@ class RLTrainer:
             mean_response_len=float(resp_lens.mean()),
             leaf_rate=n_leaves / max(sum(len(t.finished)
                                          for t, _ in kept), 1),
-            host_pack_bytes=pack_bytes)
+            host_pack_bytes=pack_bytes, padded_rows=Nb)
+
+    def build_batch_packed(self, trees: List[QueryTree]
+                           ) -> PackedRolloutBatch:
+        """Sequence-packed twin of :meth:`build_batch`: same rewards /
+        filter / batched advantage, then first-fit-decreasing packing of
+        the trajectories into shared (N, L) rows with (N, S) per-segment
+        tables (``repro.rl.packing``) instead of one row each."""
+        kept, rows = self._advantage_rows(trees)
+        if not rows:
+            return PackedRolloutBatch.empty()
+        totals = [len(pr) + len(t) for pr, t, *_ in rows]
+        # pack into the SAME bucket length the unpacked layout would use,
+        # so packing strictly reduces N at equal L
+        L = _bucket_len(max(totals))
+        packing_rows = first_fit_decreasing(totals, L)
+        N = len(packing_rows)
+        S = bucket_segments(max(len(r) for r in packing_rows))
+        tokens = np.full((N, L), ByteTokenizer.PAD, np.int32)
+        lp_old = np.zeros((N, L), np.float32)
+        seg_plens = np.zeros((N, S), np.int32)
+        seg_rlens = np.zeros((N, S), np.int32)
+        seg_adv = np.zeros((N, S), np.float32)
+        seg_rew = np.zeros((N, S), np.float32)
+        for i, members in enumerate(packing_rows):
+            off = 0
+            for s, j in enumerate(members):
+                prompt, resp, lps, r, a = rows[j]
+                n_p, n_r = len(prompt), len(resp)
+                tokens[i, off: off + n_p] = prompt
+                tokens[i, off + n_p: off + n_p + n_r] = resp
+                lp_old[i, off + n_p: off + n_p + n_r] = lps
+                seg_plens[i, s] = n_p
+                seg_rlens[i, s] = n_r
+                seg_adv[i, s] = a
+                seg_rew[i, s] = r
+                off += n_p + n_r
+        n_leaves = sum(t.num_leaves for t, _ in kept)
+        # what update_packed() will actually ship: the ROW-PADDED (Nb, ·)
+        # buffers, not the unpadded pack built here
+        Nb = _bucket_rows(N)
+        pack_bytes = Nb * (tokens.itemsize * L + lp_old.itemsize * L +
+                           S * (seg_plens.itemsize + seg_rlens.itemsize +
+                                seg_adv.itemsize))
+        return PackedRolloutBatch(
+            tokens=tokens, logprobs_old=lp_old,
+            seg_prompt_lens=seg_plens, seg_resp_lens=seg_rlens,
+            seg_adv=seg_adv, seg_rewards=seg_rew,
+            num_queries=len(kept), num_trajectories=len(rows),
+            mean_response_len=float(np.mean([len(t) for _, t, *_ in rows])),
+            leaf_rate=n_leaves / max(sum(len(t.finished)
+                                         for t, _ in kept), 1),
+            host_pack_bytes=pack_bytes, padded_rows=Nb)
 
     # -- update -----------------------------------------------------------------
 
@@ -364,6 +464,51 @@ class RLTrainer:
             jnp.asarray(tokens), jnp.asarray(prompt_lens),
             jnp.asarray(resp_lens), jnp.asarray(lp_old),
             jnp.asarray(adv_traj), jnp.asarray(self.step, jnp.int32))
+        return {k: float(v) for k, v in m.items()}
+
+    def _get_packed_update_fn(self, N: int, L: int, S: int):
+        """One jitted K-epoch update per (N, L, S) bucket over the
+        sequence-packed compact layout: segment-ids / RoPE positions /
+        masks / advantages (+ optional global norm) all derived on
+        device by ``repro.rl.update`` with ``packed=True``."""
+        key = (N, L, S)
+        if key not in self._packed_update_fns:
+            fn = make_ppo_update(self.cfg, self.train_cfg,
+                                 lr_fn=self.lr_fn, packed=True,
+                                 use_global_norm=self._use_global_norm)
+            self._packed_update_fns[key] = jax.jit(fn,
+                                                   donate_argnums=(0, 1))
+        return self._packed_update_fns[key]
+
+    def update_packed(self, batch: PackedRolloutBatch) -> Dict[str, float]:
+        """All K ppo epochs in one jitted dispatch per (N, L, S) bucket
+        over a sequence-packed batch (rows padded with zero-width
+        segments, invisible to the loss)."""
+        N = batch.tokens.shape[0]
+        if N == 0:
+            return {"skipped": 1.0}
+        L = batch.tokens.shape[1]
+        S = batch.seg_prompt_lens.shape[1]
+        Nb = _bucket_rows(N)
+        tokens = np.full((Nb, L), ByteTokenizer.PAD, np.int32)
+        tokens[:N] = batch.tokens
+        lp_old = np.zeros((Nb, L), np.float32)
+        lp_old[:N] = batch.logprobs_old
+        seg_plens = np.zeros((Nb, S), np.int32)   # padded rows: 0-width segs
+        seg_plens[:N] = batch.seg_prompt_lens
+        seg_rlens = np.zeros((Nb, S), np.int32)
+        seg_rlens[:N] = batch.seg_resp_lens
+        seg_adv = np.zeros((Nb, S), np.float32)
+        seg_adv[:N] = batch.seg_adv
+        fn = self._get_packed_update_fn(Nb, L, S)
+        dev_batch = {"tokens": jnp.asarray(tokens),
+                     "logprobs_old": jnp.asarray(lp_old),
+                     "seg_prompt_lens": jnp.asarray(seg_plens),
+                     "seg_resp_lens": jnp.asarray(seg_rlens),
+                     "seg_adv": jnp.asarray(seg_adv)}
+        self.params, self.opt_state, m = fn(
+            self.params, self.opt_state, dev_batch,
+            jnp.asarray(self.step, jnp.int32))
         return {k: float(v) for k, v in m.items()}
 
     # -- legacy reference path ---------------------------------------------------
@@ -496,8 +641,12 @@ class RLTrainer:
             rounds += 1
             if not self.train_cfg.dynamic_sampling:
                 break
-        batch = self.build_batch(all_trees)
-        metrics = self.update(batch)
+        if self.train_cfg.pack_sequences:
+            batch = self.build_batch_packed(all_trees)
+            metrics = self.update_packed(batch)
+        else:
+            batch = self.build_batch(all_trees)
+            metrics = self.update(batch)
         self.step += 1
         rewards = batch.rewards
         metrics.update(
@@ -508,6 +657,7 @@ class RLTrainer:
             response_len=batch.mean_response_len,
             leaf_rate=batch.leaf_rate,
             host_pack_bytes=float(batch.host_pack_bytes),
+            padded_token_fraction=batch.padded_token_fraction,
             sample_model_tokens=float(sample_tokens),
             wall_time=time.time() - t0,
         )

@@ -12,6 +12,21 @@ over the (params, opt_state) carry — one dispatch per step instead of K,
 and XLA can keep the donated weight/moment buffers in place across
 epochs.  Metrics are reported from the final epoch (matching the
 previous per-epoch loop's "last write wins" semantics).
+
+Two batch layouts are supported, selected by ``packed``:
+
+* dense (``packed=False``): one trajectory per row, batch keys
+  ``tokens`` / ``response_mask`` / ``logprobs_old`` / ``advantages``;
+* sequence-packed (``packed=True``): several trajectories (segments)
+  per row, compact batch keys ``tokens`` / ``logprobs_old`` plus the
+  (N, S) per-segment tables ``seg_prompt_lens`` / ``seg_resp_lens`` /
+  ``seg_adv``.  The dense segment-id / RoPE-position / response-mask /
+  advantage tensors and the optional REINFORCE++ global norm are all
+  derived on device (``repro.rl.packing.packed_batch_tensors``), the
+  forward pass gets segment-masked attention + per-segment-reset
+  positions, and the loss mask drops any token whose predecessor lies
+  in a different segment — a segment's first scored token is never
+  aligned against the previous segment's last token.
 """
 from __future__ import annotations
 
@@ -21,32 +36,51 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig, TrainConfig
+from repro.core.advantage import global_normalize
 from repro.core.loss import dapo_pg_loss, entropy_from_logits, \
     token_logprobs_from_logits
 from repro.models.model import forward
 from repro.optim import adamw_update, clip_by_global_norm
+from repro.rl import packing
 
 Batch = Dict[str, jnp.ndarray]
 
 
+def _modality_kwargs(cfg: ModelConfig, batch: Batch) -> Dict[str, Any]:
+    kwargs = {}
+    if "prefix_embeds" in batch:
+        kwargs["prefix_embeds"] = batch["prefix_embeds"]
+    if "enc_frames" in batch:
+        kwargs["enc_frames"] = batch["enc_frames"]
+    return kwargs
+
+
 def make_pg_loss(cfg: ModelConfig, tc: TrainConfig, *,
                  remat: bool = False,
-                 with_entropy: bool = True) -> Callable[[Any, Batch],
-                                                        Tuple]:
-    """Token-level clipped PG loss over a dense batch dict with keys
-    ``tokens`` / ``response_mask`` / ``logprobs_old`` / ``advantages``
-    (+ optional ``prefix_embeds`` / ``enc_frames`` modality stubs).
+                 with_entropy: bool = True,
+                 packed: bool = False,
+                 use_global_norm: bool = False) -> Callable[[Any, Batch],
+                                                            Tuple]:
+    """Token-level clipped PG loss over a batch dict (dense or packed
+    layout — see the module docstring for the keys; optional
+    ``prefix_embeds`` / ``enc_frames`` modality stubs ride along in
+    both).
 
     ``with_entropy=False`` skips the full-vocab log-softmax entropy
     metric — the multi-pod lowering doesn't pay (N, S, V) extra HBM
-    traffic for a diagnostics value."""
+    traffic for a diagnostics value.
+
+    ``use_global_norm`` (packed only): apply the REINFORCE++ global
+    normalization to the derived token advantages on device; the dense
+    layout receives already-normalized advantages from the caller.
+    """
+    if packed:
+        return _make_packed_pg_loss(cfg, tc, remat=remat,
+                                    with_entropy=with_entropy,
+                                    use_global_norm=use_global_norm)
 
     def loss_fn(params, batch: Batch):
-        kwargs = {}
-        if "prefix_embeds" in batch:
-            kwargs["prefix_embeds"] = batch["prefix_embeds"]
-        if "enc_frames" in batch:
-            kwargs["enc_frames"] = batch["enc_frames"]
+        kwargs = _modality_kwargs(cfg, batch)
         logits, aux = forward(params, cfg, batch["tokens"], remat=remat,
                               **kwargs)
         S = batch["tokens"].shape[1]
@@ -71,21 +105,79 @@ def make_pg_loss(cfg: ModelConfig, tc: TrainConfig, *,
     return loss_fn
 
 
+def _make_packed_pg_loss(cfg: ModelConfig, tc: TrainConfig, *,
+                         remat: bool, with_entropy: bool,
+                         use_global_norm: bool):
+    def loss_fn(params, batch: Batch):
+        tokens = batch["tokens"]
+        B, S = tokens.shape
+        sid, pos, rmask, advs = packing.packed_batch_tensors(
+            batch["seg_prompt_lens"], batch["seg_resp_lens"],
+            batch["seg_adv"], S, xp=jnp)
+        if use_global_norm:
+            advs = global_normalize(advs, rmask)
+        kwargs = _modality_kwargs(cfg, batch)
+        pos_full, sid_full = pos, sid
+        if "prefix_embeds" in batch and cfg.encoder is None:
+            # Frontend archs are excluded from the default packed paths
+            # (``packing_supported``: segments would share the prefix);
+            # this keeps direct make_ppo_update(packed=True) callers
+            # shape-correct: the prefix occupies positions [0, P), every
+            # segment's positions shift up by P, and the prefix joins
+            # the row's first segment.
+            P = batch["prefix_embeds"].shape[1]
+            pos_full = jnp.concatenate(
+                [jnp.broadcast_to(jnp.arange(P, dtype=jnp.int32), (B, P)),
+                 pos + P], axis=1)
+            sid_full = jnp.concatenate(
+                [jnp.zeros((B, P), jnp.int32), sid], axis=1)
+        logits, aux = forward(params, cfg, tokens, remat=remat,
+                              positions=pos_full, segment_ids=sid_full,
+                              **kwargs)
+        logits = logits[:, -S:]  # drop modality prefix positions
+        lp_new = token_logprobs_from_logits(logits[:, :-1], tokens[:, 1:])
+        # align: token t is predicted from t-1 — AND t-1 must belong to
+        # the same segment, so a segment's first scored token never reads
+        # the previous segment's last token (boundary leakage guard;
+        # segment starts are prompt tokens, so rmask already zeroes them,
+        # but the guard keeps the contract explicit and shape-derived)
+        mask = rmask[:, 1:] * (sid[:, 1:] == sid[:, :-1]).astype(
+            jnp.float32)
+        loss, metrics = dapo_pg_loss(
+            lp_new, batch["logprobs_old"][:, 1:], advs[:, 1:], mask,
+            clip_eps_low=tc.clip_eps_low,
+            clip_eps_high=tc.clip_eps_high)
+        if with_entropy:
+            metrics = dict(metrics, entropy=entropy_from_logits(
+                logits[:, :-1], mask))
+        if cfg.moe is not None:
+            loss = loss + cfg.moe.aux_loss_coef * aux
+        metrics = dict(metrics, moe_aux=aux)
+        return loss, metrics
+
+    return loss_fn
+
+
 def make_ppo_update(cfg: ModelConfig, tc: TrainConfig, *,
                     remat: bool = False,
                     ppo_epochs: Optional[int] = None,
                     lr_fn: Optional[Callable] = None,
-                    with_entropy: bool = True) -> Callable:
+                    with_entropy: bool = True,
+                    packed: bool = False,
+                    use_global_norm: bool = False) -> Callable:
     """Build ``update(params, opt_state, batch, step) -> (params,
     opt_state, metrics)`` running all K ppo epochs in one traced scan.
 
     ``lr_fn(step)`` defaults to the constant ``tc.learning_rate``; the
-    trainer passes its warmup schedule.  The returned function is pure —
-    callers jit/pjit it with their own shardings and donation.
+    trainer passes its warmup schedule.  ``packed`` selects the
+    sequence-packed compact batch layout (see module docstring).  The
+    returned function is pure — callers jit/pjit it with their own
+    shardings and donation.
     """
     K = int(ppo_epochs if ppo_epochs is not None else tc.ppo_epochs)
     K = max(K, 1)
-    loss_fn = make_pg_loss(cfg, tc, remat=remat, with_entropy=with_entropy)
+    loss_fn = make_pg_loss(cfg, tc, remat=remat, with_entropy=with_entropy,
+                           packed=packed, use_global_norm=use_global_norm)
     if lr_fn is None:
         lr_fn = lambda step: jnp.asarray(tc.learning_rate, jnp.float32)
 

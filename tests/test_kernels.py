@@ -70,6 +70,31 @@ def test_flash_attention(sq, skv, hq, hkv, causal, window):
     assert_allclose(np.asarray(got), np.asarray(want), rtol=3e-5, atol=3e-5)
 
 
+@pytest.mark.parametrize("causal,window", [(True, 0), (True, 12),
+                                           (False, 0)])
+def test_flash_attention_segment_ids(causal, window):
+    """Sequence-packed rows: attention restricted to same-segment pairs
+    (ragged segment layout per batch row, -1 tail pads)."""
+    B, S, Hq, Hkv, D = 2, 48, 4, 2, 32
+    ks = jax.random.split(jax.random.PRNGKey(7), 3)
+    q = jax.random.normal(ks[0], (B, S, Hq, D))
+    k = jax.random.normal(ks[1], (B, S, Hkv, D))
+    v = jax.random.normal(ks[2], (B, S, Hkv, D))
+    seg = np.full((B, S), -1, np.int32)
+    seg[0, :10], seg[0, 10:30], seg[0, 30:44] = 0, 1, 2
+    seg[1, :25], seg[1, 25:40] = 0, 1
+    seg = jnp.asarray(seg)
+    got = flash_attention_pallas(q, k, v, causal=causal, window=window,
+                                 segment_ids=seg, blk_q=16, blk_k=16,
+                                 interpret=True)
+    want = ref.attention_ref(q, k, v, causal=causal, window=window,
+                             segment_ids=seg)
+    assert_allclose(np.asarray(got), np.asarray(want), rtol=3e-5, atol=3e-5)
+    # sanity: the segment mask actually changed the result
+    plain = ref.attention_ref(q, k, v, causal=causal, window=window)
+    assert not np.allclose(np.asarray(want), np.asarray(plain))
+
+
 @pytest.mark.parametrize("dtype", [jnp.bfloat16])
 def test_flash_attention_bf16(dtype):
     B, S, H, D = 1, 33, 2, 64

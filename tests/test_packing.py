@@ -1,0 +1,260 @@
+"""Sequence-packing unit tests: FFD binning edge cases, the shared
+segment-table -> dense-tensor derivation, cross-segment attention
+isolation, and the boundary loss-mask guard."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.configs.base import TrainConfig
+from repro.models.model import forward, init_params
+from repro.rl.packing import (
+    PackedRolloutBatch,
+    bucket_segments,
+    first_fit_decreasing,
+    packed_batch_tensors,
+    packed_row_tensors,
+)
+from repro.rl.update import make_pg_loss
+
+
+# ---------------------------------------------------------------------------
+# first-fit-decreasing binning
+# ---------------------------------------------------------------------------
+
+def test_ffd_all_short_exactly_fills_rows():
+    """Four length-8 items at capacity 16: two rows, both exactly full."""
+    rows = first_fit_decreasing([8, 8, 8, 8], 16)
+    assert len(rows) == 2
+    assert all(len(r) == 2 for r in rows)
+    assert sorted(i for r in rows for i in r) == [0, 1, 2, 3]
+
+
+def test_ffd_single_item_longer_than_capacity_gets_own_row():
+    """An oversized trajectory is never truncated or co-binned: it gets a
+    dedicated row, and nothing else is placed after it."""
+    rows = first_fit_decreasing([20, 4, 4], 16)
+    assert rows[0] == [0]
+    assert sorted(i for r in rows[1:] for i in r) == [1, 2]
+    # the short items still pack together in one row
+    assert len(rows) == 2
+
+
+def test_ffd_first_fit_order_and_capacity():
+    rows = first_fit_decreasing([10, 6, 4, 16, 2], 16)
+    lens = [10, 6, 4, 16, 2]
+    for r in rows:
+        total = sum(lens[i] for i in r)
+        assert total <= 16 or len(r) == 1
+    assert sorted(i for r in rows for i in r) == [0, 1, 2, 3, 4]
+    assert len(rows) == 3  # [16], [10, 6], [4, 2]
+
+
+def test_packing_supported_gates_archs_and_pjit_specs():
+    """Packing is exact only for attention-only archs with no shared
+    per-row conditioning; the pjit train specs and train step must
+    agree on the same predicate (dense layout for SSM/RWKV hybrids and
+    encoder/prefix archs, packed tables otherwise), and the trainer
+    must refuse a pack_sequences config it cannot honor."""
+    from repro.launch.steps import input_specs
+    from repro.rl.packing import packing_supported
+
+    for arch, want in (("qwen2.5-7b", True), ("deepseek-v3-671b", True),
+                       ("jamba-v0.1-52b", False), ("rwkv6-7b", False),
+                       ("whisper-tiny", False), ("llava-next-34b", False)):
+        cfg = get_config(arch)
+        assert packing_supported(cfg) is want
+        specs = input_specs(cfg, "train_4k")
+        assert ("seg_adv" in specs) == want
+        assert ("response_mask" in specs) == (not want)
+
+
+def test_trainer_rejects_pack_sequences_on_unsupported_arch():
+    from repro.configs.base import TreeConfig
+    from repro.rl.trainer import RLTrainer, TrainerMode
+
+    cfg = get_config("jamba-v0.1-52b", smoke=True)
+    with pytest.raises(ValueError, match="pack_sequences"):
+        RLTrainer(cfg, TrainConfig(pack_sequences=True), TreeConfig(),
+                  TrainerMode.TREEPO)
+
+
+def test_bucket_segments_quantum():
+    assert bucket_segments(1) == 2
+    assert bucket_segments(2) == 2
+    assert bucket_segments(3) == 4
+    assert bucket_segments(5) == 6
+
+
+# ---------------------------------------------------------------------------
+# segment-table -> dense tensor derivation (shared np/jnp definition)
+# ---------------------------------------------------------------------------
+
+def _tables():
+    plens = np.array([[2, 3, 0], [1, 0, 0]], np.int32)
+    rlens = np.array([[3, 2, 0], [4, 0, 0]], np.int32)
+    adv = np.array([[1.0, 2.0, 0.0], [3.0, 0.0, 0.0]], np.float32)
+    return plens, rlens, adv
+
+
+def test_packed_row_tensors_hand_checked():
+    plens, rlens, _ = _tables()
+    sid, pos, rmask = packed_row_tensors(plens, rlens, 12)
+    np.testing.assert_array_equal(sid[0], [0] * 5 + [1] * 5 + [-1] * 2)
+    np.testing.assert_array_equal(sid[1], [0] * 5 + [-1] * 7)
+    # positions reset to 0 at each segment start (RoPE offsets)
+    np.testing.assert_array_equal(pos[0], [0, 1, 2, 3, 4, 0, 1, 2, 3, 4,
+                                           0, 0])
+    # response mask covers exactly each segment's response span
+    np.testing.assert_array_equal(
+        rmask[0], [0, 0, 1, 1, 1, 0, 0, 0, 1, 1, 0, 0])
+    np.testing.assert_array_equal(
+        rmask[1], [0, 1, 1, 1, 1, 0, 0, 0, 0, 0, 0, 0])
+
+
+def test_packed_batch_tensors_advantage_broadcast_and_jnp_parity():
+    plens, rlens, adv = _tables()
+    sid, pos, rmask, a = packed_batch_tensors(plens, rlens, adv, 12)
+    np.testing.assert_allclose(
+        a[0], [0, 0, 1, 1, 1, 0, 0, 0, 2, 2, 0, 0])
+    np.testing.assert_allclose(a[1, 1:5], [3.0] * 4)
+    sj, pj, rj, aj = packed_batch_tensors(
+        jnp.asarray(plens), jnp.asarray(rlens), jnp.asarray(adv), 12,
+        xp=jnp)
+    np.testing.assert_array_equal(np.asarray(sj), sid)
+    np.testing.assert_array_equal(np.asarray(pj), pos)
+    np.testing.assert_array_equal(np.asarray(rj), rmask)
+    np.testing.assert_allclose(np.asarray(aj), a)
+
+
+def test_packed_batch_views_consistent():
+    plens, rlens, adv = _tables()
+    b = PackedRolloutBatch(
+        tokens=np.ones((2, 12), np.int32),
+        logprobs_old=np.zeros((2, 12), np.float32),
+        seg_prompt_lens=plens, seg_resp_lens=rlens, seg_adv=adv,
+        seg_rewards=adv.copy(), num_trajectories=3)
+    assert b.response_mask.shape == (2, 12)
+    assert b.rewards.shape == (3,)
+    used = (plens + rlens).sum()
+    assert b.padded_token_fraction == pytest.approx(1 - used / 24.0)
+
+
+# ---------------------------------------------------------------------------
+# no cross-segment attention leakage
+# ---------------------------------------------------------------------------
+
+def test_packed_forward_isolates_segments():
+    """Perturbing a token inside segment 0 must not move ANY logit of
+    segment 1 in the same packed row (segment-masked attention +
+    per-segment RoPE reset)."""
+    cfg = get_config("qwen2.5-7b", smoke=True)
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    plens = np.array([[2, 2]], np.int32)
+    rlens = np.array([[4, 3]], np.int32)
+    L = 12
+    sid, pos, _ = packed_row_tensors(plens, rlens, L)
+    rng = np.random.default_rng(0)
+    tokens = rng.integers(1, cfg.vocab_size, (1, L)).astype(np.int32)
+    logits1, _ = forward(params, cfg, jnp.asarray(tokens),
+                         positions=jnp.asarray(pos),
+                         segment_ids=jnp.asarray(sid))
+    tokens2 = tokens.copy()
+    tokens2[0, 5] = (tokens2[0, 5] + 1) % cfg.vocab_size  # seg-0 last token
+    logits2, _ = forward(params, cfg, jnp.asarray(tokens2),
+                         positions=jnp.asarray(pos),
+                         segment_ids=jnp.asarray(sid))
+    a = np.asarray(logits1)[0]
+    b = np.asarray(logits2)[0]
+    assert not np.allclose(a[5], b[5])              # seg 0 itself moved
+    np.testing.assert_allclose(a[6:11], b[6:11],    # seg 1 untouched
+                               rtol=1e-6, atol=1e-6)
+
+
+def test_packed_forward_matches_unpacked_rows():
+    """Each packed segment's logits equal the same trajectory's logits in
+    its own unpacked row — the per-token forward-parity that makes the
+    packed update a drop-in for the unpacked one."""
+    cfg = get_config("qwen2.5-7b", smoke=True)
+    params = init_params(jax.random.PRNGKey(1), cfg)
+    rng = np.random.default_rng(1)
+    seg_a = rng.integers(1, cfg.vocab_size, 6).astype(np.int32)
+    seg_b = rng.integers(1, cfg.vocab_size, 4).astype(np.int32)
+    L = 12
+    packed_tokens = np.zeros((1, L), np.int32)
+    packed_tokens[0, :6] = seg_a
+    packed_tokens[0, 6:10] = seg_b
+    sid, pos, _ = packed_row_tensors(np.array([[2, 1]], np.int32),
+                                     np.array([[4, 3]], np.int32), L)
+    packed_logits, _ = forward(params, cfg, jnp.asarray(packed_tokens),
+                               positions=jnp.asarray(pos),
+                               segment_ids=jnp.asarray(sid))
+    packed_logits = np.asarray(packed_logits)[0]
+    for toks, sl in ((seg_a, slice(0, 6)), (seg_b, slice(6, 10))):
+        row = np.zeros((1, len(toks)), np.int32)
+        row[0] = toks
+        solo, _ = forward(params, cfg, jnp.asarray(row))
+        np.testing.assert_allclose(packed_logits[sl],
+                                   np.asarray(solo)[0],
+                                   rtol=2e-5, atol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# boundary loss-mask guard
+# ---------------------------------------------------------------------------
+
+def test_loss_mask_ignores_previous_segment_last_token():
+    """A segment whose first token is a *response* token (prompt_len 0)
+    would be scored against the previous segment's last token; the
+    packed loss mask must drop it.  Compare against the plain response
+    mask, which alone would keep it."""
+    plens = np.array([[2, 0]], np.int32)   # 2nd segment: no prompt
+    rlens = np.array([[3, 3]], np.int32)
+    L = 8
+    sid, _, rmask = packed_row_tensors(plens, rlens, L)
+    # the packed loss builds: mask = rmask[:, 1:] * (sid aligned)
+    guard = (sid[:, 1:] == sid[:, :-1]).astype(np.float32)
+    mask = rmask[:, 1:] * guard
+    start_col = 5                          # 2nd segment starts at col 5
+    assert rmask[0, start_col] == 1.0      # response token at seg start
+    assert mask[0, start_col - 1] == 0.0   # ... but never scored across
+    # all other response tokens survive the guard
+    assert mask.sum() == rmask[:, 1:].sum() - 1
+
+
+def test_packed_pg_loss_runs_and_masks_pad_rows():
+    """make_pg_loss(packed=True): finite loss; an extra all-pad row (the
+    row-bucket padding) leaves loss and grads unchanged."""
+    cfg = get_config("qwen2.5-7b", smoke=True)
+    tc = TrainConfig()
+    params = init_params(jax.random.PRNGKey(2), cfg)
+    loss_fn = make_pg_loss(cfg, tc, packed=True)
+    rng = np.random.default_rng(2)
+    L, S = 16, 2
+
+    def batch(n_pad_rows=0):
+        N = 1 + n_pad_rows
+        tokens = np.zeros((N, L), np.int32)
+        tokens[0] = rng.integers(1, cfg.vocab_size, L)
+        plens = np.zeros((N, S), np.int32)
+        rlens = np.zeros((N, S), np.int32)
+        plens[0], rlens[0] = (2, 3), (5, 4)
+        adv = np.zeros((N, S), np.float32)
+        adv[0] = (0.5, -0.5)
+        lp = np.zeros((N, L), np.float32)
+        lp[0, 2:7] = -1.0
+        lp[0, 8:12] = -1.0
+        return {"tokens": jnp.asarray(tokens),
+                "logprobs_old": jnp.asarray(lp),
+                "seg_prompt_lens": jnp.asarray(plens),
+                "seg_resp_lens": jnp.asarray(rlens),
+                "seg_adv": jnp.asarray(adv)}
+
+    rng = np.random.default_rng(2)
+    loss1, m1 = loss_fn(params, batch(0))
+    rng = np.random.default_rng(2)
+    loss2, m2 = loss_fn(params, batch(2))
+    assert np.isfinite(float(loss1))
+    np.testing.assert_allclose(float(loss1), float(loss2),
+                               rtol=1e-6, atol=1e-7)

@@ -1,6 +1,7 @@
 """Training-side hot path: mixed-depth branching budgets, fallback
 segment-logprob inheritance, reward memoization, double-release
-idempotency, and new-vs-legacy build/update parity."""
+idempotency, new-vs-legacy build/update parity, and
+packed-vs-unpacked (sequence packing) build/update parity."""
 import random
 
 import jax
@@ -260,6 +261,98 @@ def test_update_matches_legacy_k_epochs():
                                    rtol=1e-3, atol=1e-5)
     # one compiled update per (N, L) bucket
     assert len(tr._update_fns) == 1
+
+
+def test_packed_build_matches_unpacked():
+    """Sequence packing must preserve the trajectory set exactly: same
+    token/logprob/advantage content per trajectory, same rewards, same
+    queries — only the row layout (and the pad fraction) changes."""
+    tr = _trainer(TrainerMode.TREEPO, seed=3)
+    trees, batch = _rollout_with_batch(tr)
+    packed = tr.build_batch_packed(trees)
+    N = batch.tokens.shape[0]
+    assert packed.num_trajectories == N
+    assert packed.num_queries == batch.num_queries
+    np.testing.assert_allclose(sorted(packed.rewards),
+                               sorted(batch.rewards))
+    # per-trajectory content parity: match each unpacked row to a packed
+    # segment by (prompt_len, resp_len, advantage)
+    sid = packed.segment_ids
+    seg_tot = packed.seg_prompt_lens + packed.seg_resp_lens
+    seg_start = np.cumsum(seg_tot, axis=1) - seg_tot
+    matched = np.zeros(packed.seg_prompt_lens.shape, bool)
+    for i in range(N):
+        n_p, n_r = int(batch.prompt_lens[i]), int(batch.resp_lens[i])
+        found = False
+        for r in range(packed.tokens.shape[0]):
+            for s in range(packed.seg_prompt_lens.shape[1]):
+                if matched[r, s] or \
+                        packed.seg_prompt_lens[r, s] != n_p or \
+                        packed.seg_resp_lens[r, s] != n_r:
+                    continue
+                off = int(seg_start[r, s])
+                if not np.array_equal(packed.tokens[r, off: off + n_p + n_r],
+                                      batch.tokens[i, : n_p + n_r]):
+                    continue
+                if not np.isclose(packed.seg_adv[r, s], batch.adv_traj[i]):
+                    continue
+                np.testing.assert_allclose(
+                    packed.logprobs_old[r, off: off + n_p + n_r],
+                    batch.logprobs_old[i, : n_p + n_r])
+                assert (sid[r, off: off + n_p + n_r] == s).all()
+                matched[r, s] = True
+                found = True
+                break
+            if found:
+                break
+        assert found, f"unpacked trajectory {i} missing from the pack"
+    # packing at equal bucket length can only reduce (or keep) pad waste
+    assert packed.tokens.shape[1] == batch.tokens.shape[1]
+    assert packed.padded_token_fraction <= batch.padded_token_fraction
+
+
+def test_packed_update_matches_unpacked():
+    """The packed K-epoch update (segment-masked attention, per-segment
+    RoPE resets, on-device mask/advantage derivation) must land on the
+    same loss and parameters as the unpacked oracle."""
+    tr = _trainer(TrainerMode.TREEPO, seed=5, ppo_epochs=2)
+    trees, batch = _rollout_with_batch(tr)
+    packed = tr.build_batch_packed(trees)
+    snap = jax.tree.map(np.array, (tr.params, tr.opt_state))
+
+    m_unpacked = tr.update(batch)
+    unpacked_params = jax.tree.map(np.array, tr.params)
+
+    tr.params, tr.opt_state = jax.tree.map(jnp.asarray, snap)
+    m_packed = tr.update_packed(packed)
+    packed_params = jax.tree.map(np.array, tr.params)
+
+    assert np.isfinite(m_packed["loss"])
+    np.testing.assert_allclose(m_packed["loss"], m_unpacked["loss"],
+                               rtol=1e-4, atol=1e-6)
+    for key in ("pg_loss", "ratio_mean", "adv_mean"):
+        np.testing.assert_allclose(m_packed[key], m_unpacked[key],
+                                   rtol=1e-4, atol=1e-6)
+    for a, b in zip(jax.tree.leaves(packed_params),
+                    jax.tree.leaves(unpacked_params)):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32),
+                                   rtol=1e-3, atol=1e-5)
+    # one compiled packed update per (N, L, S) bucket
+    assert len(tr._packed_update_fns) == 1
+
+
+def test_packed_train_step_end_to_end():
+    """TrainConfig.pack_sequences routes train_step through the packed
+    build/update pair and reports the pad-fraction metric."""
+    tr = _trainer(TrainerMode.TREEPO, seed=3, pack_sequences=True)
+    tr.bc_warmup(steps=15, batch_size=4, lr=3e-3)
+    m = tr.train_step()
+    assert m["step"] == 1
+    assert "padded_token_fraction" in m
+    if "loss" in m:                        # batch may be starved
+        assert np.isfinite(m["loss"])
+        assert 0.0 <= m["padded_token_fraction"] < 1.0
 
 
 def test_update_pads_batch_rows_without_changing_loss():

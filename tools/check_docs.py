@@ -1,0 +1,124 @@
+#!/usr/bin/env python3
+"""Docs link/reference checker.
+
+Validates that README.md and docs/*.md only reference things that
+exist:
+
+* markdown links ``[text](path)`` — the relative path must resolve from
+  the file that contains it (http(s)/mailto/anchors are skipped);
+* backtick path references like ``src/repro/rl/packing.py`` or
+  ``benchmarks/run.py`` — must exist relative to the repo root
+  (``repro/...`` is resolved under ``src/``);
+* backtick dotted module references like ``repro.rl.update`` or
+  ``repro.core.tree.QueryTree.add_finished`` — the longest module
+  prefix must map to a real module file under ``src/``, with at most
+  two trailing attribute components.
+
+Run standalone (exits non-zero and lists dangling references):
+
+    python tools/check_docs.py
+
+or via pytest: ``tests/test_docs.py`` runs :func:`collect_errors` at
+collection time as part of the tier-1 suite.
+"""
+from __future__ import annotations
+
+import os
+import re
+import sys
+from typing import List
+
+REPO_ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+
+# artifacts a doc may legitimately describe before they are generated
+GENERATED_OK = {
+    "results/dryrun.jsonl",
+}
+
+# path-like backtick references we validate, by first component
+_PATH_ROOTS = ("src", "benchmarks", "tests", "examples", "tools", "docs",
+               "results", "repro")
+
+_LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+_CODE_RE = re.compile(r"`([^`\n]+)`")
+_MODULE_RE = re.compile(r"^repro(\.\w+)+$")
+_PATH_RE = re.compile(r"^[\w./-]+$")
+
+
+def _doc_files(root: str) -> List[str]:
+    files = [os.path.join(root, "README.md")]
+    docs_dir = os.path.join(root, "docs")
+    if os.path.isdir(docs_dir):
+        for name in sorted(os.listdir(docs_dir)):
+            if name.endswith(".md"):
+                files.append(os.path.join(docs_dir, name))
+    return [f for f in files if os.path.isfile(f)]
+
+
+def _check_link(target: str, base_dir: str, root: str) -> bool:
+    if target.startswith(("http://", "https://", "mailto:", "#")):
+        return True
+    target = target.split("#", 1)[0]
+    if not target:
+        return True
+    return os.path.exists(os.path.normpath(os.path.join(base_dir, target)))
+
+
+def _check_module_ref(ref: str, root: str) -> bool:
+    """``repro.a.b[.Attr[.attr]]``: longest prefix must be a module under
+    src/, and at most two components may remain as attributes."""
+    parts = ref.split(".")
+    for k in range(len(parts), 1, -1):
+        base = os.path.join(root, "src", *parts[:k])
+        if os.path.isfile(base + ".py") or \
+                os.path.isfile(os.path.join(base, "__init__.py")):
+            return len(parts) - k <= 2
+    return False
+
+
+def _check_path_ref(ref: str, root: str) -> bool:
+    rel = ref.rstrip("/")
+    if rel in GENERATED_OK:
+        return True
+    if rel.startswith("repro/"):
+        rel = "src/" + rel
+    return os.path.exists(os.path.join(root, rel))
+
+
+def collect_errors(root: str = REPO_ROOT) -> List[str]:
+    errors: List[str] = []
+    for path in _doc_files(root):
+        rel_file = os.path.relpath(path, root)
+        with open(path, encoding="utf-8") as f:
+            text = f.read()
+        for m in _LINK_RE.finditer(text):
+            target = m.group(1)
+            if not _check_link(target, os.path.dirname(path), root):
+                errors.append(f"{rel_file}: dangling link ({target})")
+        for m in _CODE_RE.finditer(text):
+            ref = m.group(0).strip("`").strip()
+            if _MODULE_RE.match(ref):
+                if not _check_module_ref(ref, root):
+                    errors.append(
+                        f"{rel_file}: dangling module reference `{ref}`")
+            elif "/" in ref and _PATH_RE.match(ref) and \
+                    ref.split("/", 1)[0] in _PATH_ROOTS:
+                if not _check_path_ref(ref, root):
+                    errors.append(
+                        f"{rel_file}: dangling path reference `{ref}`")
+    return errors
+
+
+def main() -> int:
+    errors = collect_errors()
+    if errors:
+        print("check_docs: FAILED")
+        for e in errors:
+            print("  " + e)
+        return 1
+    print(f"check_docs: OK ({len(_doc_files(REPO_ROOT))} files)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
