@@ -23,6 +23,11 @@ for the unpacked-vs-packed comparison — the padded-token fraction of
 the (N, L) grid (the fwd/bwd FLOP waste packing exists to shrink).
 Wall-clock on this container is relative, not TPU; the byte counts and
 pad fractions are exact.  Emits ``results/BENCH_train.json``.
+
+Besides the three qwen2.5-7b trainer modes, a ``treepo`` row per hybrid
+arch (jamba / rwkv6; ``arch`` field) exercises the segment-reset packed
+path the dense layout previously gated — the pad-fraction pair is
+reported for the recurrent substrates too.
 """
 from __future__ import annotations
 
@@ -43,6 +48,10 @@ OUT_PATH = os.path.join(os.path.dirname(__file__), "..", "results",
                         "BENCH_train.json")
 
 MODES = [TrainerMode.GRPO, TrainerMode.GRPO_TREE, TrainerMode.TREEPO]
+
+# hybrid (SSM/RWKV) archs: tree mode only — the packed path the dense
+# layout previously gated (segment-reset kernels)
+HYBRID_ARCHS = ["jamba-v0.1-52b", "rwkv6-7b"]
 
 
 def _cfgs(ppo_epochs: int):
@@ -87,12 +96,16 @@ def run(quick: bool = True, out_path: str = OUT_PATH) -> dict:
           "update vs legacy host loop ==")
     hdr = ["mode", "N", "L", "pack_B", "legacy_B", "build_s",
            "lg_build_s", "upd_s", "lg_upd_s"]
-    widths = [10, 5, 5, 9, 9, 9, 10, 9, 9]
+    widths = [14, 5, 5, 9, 9, 9, 10, 9, 9]
     print(fmt_row(hdr, widths))
-    for mode in MODES:
+    cases = [(mode, "qwen2.5-7b") for mode in MODES]
+    cases += [(TrainerMode.TREEPO, a)
+              for a in (HYBRID_ARCHS[:1] if quick else HYBRID_ARCHS)]
+    for mode, arch in cases:
         tree_cfg, train_cfg = _cfgs(ppo_epochs)
-        tr = warmed_trainer(mode, tree_cfg=tree_cfg, train_cfg=train_cfg,
-                            bc_steps=bc_steps, seed=3)
+        tr = warmed_trainer(mode, arch=arch, tree_cfg=tree_cfg,
+                            train_cfg=train_cfg, bc_steps=bc_steps,
+                            seed=3)
         trees, _ = tr.rollout(n_queries)
         if not any(t.finished for t in trees):
             continue
@@ -130,6 +143,7 @@ def run(quick: bool = True, out_path: str = OUT_PATH) -> dict:
         Np = packed.tokens.shape[0]
         row = {
             "mode": mode.value,
+            "arch": arch,
             "ppo_epochs": ppo_epochs,
             "batch_rows": int(N),
             "bucket_len": int(L),
@@ -156,7 +170,9 @@ def run(quick: bool = True, out_path: str = OUT_PATH) -> dict:
             },
         }
         rows.append(row)
-        print(fmt_row([mode.value, N, L, batch.host_pack_bytes,
+        label = mode.value if arch == "qwen2.5-7b" else \
+            f"{mode.value}:{arch.split('-')[0]}"
+        print(fmt_row([label, N, L, batch.host_pack_bytes,
                        legacy.host_pack_bytes, round(build_s, 4),
                        round(legacy_build_s, 4), round(upd_s, 4),
                        round(legacy_upd_s, 4)], widths))

@@ -276,10 +276,11 @@ class TrainConfig:
     ppo_epochs: int = 1
     # sequence packing: bin multiple short trajectories into each (N, L)
     # row of the update batch (repro.rl.packing) — attention is segment-
-    # masked and RoPE positions reset per segment, so the update matches
-    # the unpacked one while spending far fewer FLOPs on pad tokens.
-    # Exact for attention-only archs (repro.rl.packing.packing_supported;
-    # SSM/RWKV state and encoder/prefix conditioning cross segments).
+    # masked, RoPE positions reset per segment and SSM/RWKV recurrent
+    # state is zeroed at segment starts inside the scan kernels, so the
+    # update matches the unpacked one while spending far fewer FLOPs on
+    # pad tokens.  Exact for every arch, hybrids included
+    # (repro.rl.packing.packing_supported).
     pack_sequences: bool = False
     # partial credit for a well-formatted but wrong boxed answer.  The paper
     # uses binary rewards on a pretrained base model; at toy scale the

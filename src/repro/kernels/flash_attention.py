@@ -11,9 +11,13 @@ materialized head repetition (saves Hq/Hkv × KV bandwidth).
 Causal masking, sliding windows and the chunked-prefill ``q_offset`` are all
 position masks computed from grid coordinates (no mask tensors in HBM).
 Sequence-packed rows add one more mask term: per-token ``segment_ids``
-(B, S) int32 stream in as (1, blk) tiles alongside q and k, and the score
-mask requires ``seg[q] == seg[kv]`` — packed segments never attend across
-their boundary, at the cost of two int32 tiles (no (S, S) mask in HBM).
+(B, Skv) int32 over the key axis stream in as (1, blk) tiles alongside q
+and k, and the score mask requires ``seg[q] == seg[kv]`` — packed segments
+never attend across their boundary, at the cost of two int32 tiles (no
+(S, S) mask in HBM).  The q chunk's labels are the kv labels sliced at
+``q_offset`` (chunked prefill packs too), and kv labels equal to
+``SHARED_SEGMENT_ID`` (-2; a per-row modality prefix) are attendable by
+every query.
 """
 from __future__ import annotations
 
@@ -25,6 +29,7 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro.kernels.compat import CompilerParams
+from repro.kernels.ref import SHARED_SEGMENT_ID
 
 _NEG_INF = -1e30
 
@@ -65,7 +70,8 @@ def _flash_kernel(q_ref, k_ref, v_ref, *refs,
     if has_seg:
         qseg = qseg_ref[0, :]                          # (blk_q,)
         kseg = kseg_ref[0, :]                          # (blk_k,)
-        mask &= qseg[:, None] == kseg[None, :]
+        mask &= ((qseg[:, None] == kseg[None, :])
+                 | (kseg[None, :] == SHARED_SEGMENT_ID))
     s = jnp.where(mask, s, _NEG_INF)
 
     m_prev = m_ref[...]                                 # (blk_q,)
@@ -94,16 +100,19 @@ def flash_attention_pallas(q, k, v, *, causal: bool = True, window: int = 0,
                            segment_ids=None):
     """q: (B, Sq, Hq, D); k/v: (B, Skv, Hkv, D) -> (B, Sq, Hq, D).
 
-    ``segment_ids``: optional (B, S) int32 (requires Sq == Skv): restrict
-    attention to same-segment pairs (sequence-packed rows)."""
+    ``segment_ids``: optional (B, Skv) int32 labels over the key axis:
+    restrict attention to same-segment pairs (sequence-packed rows).
+    When Sq < Skv (chunked prefill) the q chunk's labels are the slice at
+    ``q_offset``; ``SHARED_SEGMENT_ID`` kv tokens are visible to all."""
     B, Sq, Hq, D = q.shape
     Skv, Hkv = k.shape[1], k.shape[2]
     group = Hq // Hkv
     if scale is None:
         scale = 1.0 / (D ** 0.5)
     has_seg = segment_ids is not None
-    if has_seg and Sq != Skv:
-        raise ValueError("segment_ids requires self-attention (Sq == Skv)")
+    if has_seg and (segment_ids.shape[1] != Skv or q_offset + Sq > Skv):
+        raise ValueError("segment_ids labels the kv axis (B, Skv); the q "
+                         "chunk is its slice at q_offset")
 
     blk_q = min(blk_q, max(Sq, 1))
     blk_k = min(blk_k, max(Skv, 1))
@@ -128,10 +137,10 @@ def flash_attention_pallas(q, k, v, *, causal: bool = True, window: int = 0,
     if has_seg:
         # -1 on the kv pad tail can never equal a real q segment id of a
         # surviving (un-sliced) row; the kpos < skv term masks it anyway.
-        qseg = jnp.pad(segment_ids.astype(jnp.int32), ((0, 0), (0, pad_q)),
-                       constant_values=-1)
-        kseg = jnp.pad(segment_ids.astype(jnp.int32), ((0, 0), (0, pad_k)),
-                       constant_values=-1)
+        seg = segment_ids.astype(jnp.int32)
+        qseg = jnp.pad(seg[:, q_offset: q_offset + Sq],
+                       ((0, 0), (0, pad_q)), constant_values=-1)
+        kseg = jnp.pad(seg, ((0, 0), (0, pad_k)), constant_values=-1)
         in_specs += [
             pl.BlockSpec((1, blk_q), lambda b, h, i, j: (b, i)),
             pl.BlockSpec((1, blk_k), lambda b, h, i, j: (b, j)),

@@ -52,9 +52,11 @@ def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
 
     ``window``: sliding-window size (0 = full). ``q_offset``: absolute
     position of q[0] relative to k[0] (for chunked prefill).
-    ``segment_ids``: optional (B, S) int32 per-token segment labels for
-    sequence-packed rows — attention is restricted to same-segment pairs
-    (requires Sq == Skv).
+    ``segment_ids``: optional (B, Skv) int32 per-token segment labels
+    over the key axis for sequence-packed rows — attention is restricted
+    to same-segment pairs.  With Sq < Skv (chunked prefill) the q chunk's
+    labels are the slice at ``q_offset``; kv labels equal to
+    ``SHARED_SEGMENT_ID`` (a per-row modality prefix) are visible to all.
     """
     # the Pallas kernel tiles one head dim for q/k/v; MLA prefill attends
     # with qk_head_dim != v_head_dim, which only the reference supports.
@@ -144,35 +146,43 @@ def mla_paged_attention(q_lat, q_rope, ckv_pool, kr_pool, block_tables,
 # mamba selective scan
 # ---------------------------------------------------------------------------
 
-def mamba_scan(u, dt, B_, C_, A, D, h0):
+def mamba_scan(u, dt, B_, C_, A, D, h0, segment_ids=None):
     """Selective scan: u,dt (B,T,d_in); B_,C_ (B,T,N); A (d_in,N); D
     (d_in,); h0 (B,d_in,N) -> (y, h_final).  Pallas keeps the state in
     VMEM across the time loop (vs. an HBM round-trip per step in the XLA
-    scan lowering — §Perf)."""
+    scan lowering — §Perf).
+
+    ``segment_ids``: optional (B, T) packed-row labels — the carried
+    state is zeroed at every segment start, so packed segments scan
+    exactly as they would in their own rows."""
     if _use_pallas():
         from repro.kernels.mamba_scan import mamba_scan_pallas
 
-        return mamba_scan_pallas(u, dt, B_, C_, A, D, h0,
+        return mamba_scan_pallas(u, dt, B_, C_, A, D, h0, segment_ids,
                                  interpret=_interpret())
     from repro.kernels.ref import mamba_scan_ref
 
-    return mamba_scan_ref(u, dt, B_, C_, A, D, h0)
+    return mamba_scan_ref(u, dt, B_, C_, A, D, h0,
+                          segment_ids=segment_ids)
 
 
 # ---------------------------------------------------------------------------
 # rwkv6 wkv recurrence
 # ---------------------------------------------------------------------------
 
-def wkv6(r, k, v, w, u, state):
+def wkv6(r, k, v, w, u, state, segment_ids=None):
     """RWKV6 time-mix recurrence.
 
     r,k,v: (B, T, H, D); w: (B, T, H, D) decay in (0,1); u: (H, D) bonus;
     state: (B, H, D, D). Returns (out (B,T,H,D), new_state).
-    """
+
+    ``segment_ids``: optional (B, T) packed-row labels — the carried
+    state is zeroed at every segment start (no cross-segment wkv leak)."""
     if _use_pallas():
         from repro.kernels.wkv6 import wkv6_pallas
 
-        return wkv6_pallas(r, k, v, w, u, state, interpret=_interpret())
+        return wkv6_pallas(r, k, v, w, u, state, segment_ids,
+                           interpret=_interpret())
     from repro.kernels.ref import wkv6_ref
 
-    return wkv6_ref(r, k, v, w, u, state)
+    return wkv6_ref(r, k, v, w, u, state, segment_ids=segment_ids)

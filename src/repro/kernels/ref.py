@@ -9,6 +9,25 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+# kv tokens carrying this segment id are attendable by EVERY query
+# (subject to the causal/window mask) — the convention sequence packing
+# uses for a per-row modality prefix that all packed segments condition
+# on.  -1 stays the pad label (attended only by other pads).
+SHARED_SEGMENT_ID = -2
+
+
+def segment_reset_mask(segment_ids, xp=jnp):
+    """(B, T) labels -> (B, T) float32 with 1.0 exactly where the carried
+    recurrent state must be zeroed *before* the step consumes it: every
+    token whose label differs from its predecessor's.  Token 0 is never a
+    reset — the caller's h0/state seeds the row's first segment (carried
+    state from a previous chunk of the same stream).  The ONE definition
+    shared by the recurrent Pallas kernels and the jnp references."""
+    seg = segment_ids.astype(xp.int32)
+    first = xp.zeros((seg.shape[0], 1), xp.float32)
+    rest = (seg[:, 1:] != seg[:, :-1]).astype(xp.float32)
+    return xp.concatenate([first, rest], axis=1)
+
 
 def rmsnorm_ref(x, scale, eps: float = 1e-6):
     xf = x.astype(jnp.float32)
@@ -30,8 +49,11 @@ def attention_ref(q, k, v, *, causal: bool = True, window: int = 0,
                   segment_ids=None):
     """Full-sequence attention. q: (B,Sq,Hq,D); k,v: (B,Skv,Hkv,D).
 
-    ``segment_ids``: optional (B, S) int32 (requires Sq == Skv) — tokens
-    attend only within their own segment (sequence-packed training rows).
+    ``segment_ids``: optional (B, Skv) int32 labels over the KEY axis —
+    tokens attend only within their own segment (sequence-packed rows).
+    When Sq < Skv (chunked prefill) the query chunk's labels are the
+    slice at ``q_offset``; kv labels equal to ``SHARED_SEGMENT_ID`` (-2,
+    e.g. a per-row modality prefix) are attendable by every query.
     """
     B, Sq, Hq, D = q.shape
     Skv = k.shape[1]
@@ -52,9 +74,13 @@ def attention_ref(q, k, v, *, causal: bool = True, window: int = 0,
     else:
         # packed rows: the mask becomes per-batch (B, Sq, Skv) — only
         # pay that B-fold blowup when segments are actually present
-        assert Sq == Skv, "segment_ids requires self-attention (Sq == Skv)"
-        seg_mask = mask[None] & (segment_ids[:, :, None] ==
-                                 segment_ids[:, None, :])
+        kseg = segment_ids.astype(jnp.int32)
+        assert kseg.shape[1] == Skv and q_offset + Sq <= Skv, \
+            "segment_ids labels the kv axis; the q chunk is its slice " \
+            "at q_offset"
+        qseg = kseg[:, q_offset: q_offset + Sq]
+        seg_mask = mask[None] & ((qseg[:, :, None] == kseg[:, None, :])
+                                 | (kseg[:, None, :] == SHARED_SEGMENT_ID))
         logits = jnp.where(seg_mask[:, None], logits, -1e30)
     if bias is not None:
         logits = logits + bias
@@ -149,11 +175,19 @@ def mla_paged_attention_ref(q_lat, q_rope, ckv_pool, kr_pool, block_tables,
     return out.astype(q_lat.dtype)
 
 
-def mamba_scan_ref(u, dt, B_, C_, A, D, h0):
+def mamba_scan_ref(u, dt, B_, C_, A, D, h0, segment_ids=None):
     """Selective-scan oracle. u,dt: (B,T,d_in); B_,C_: (B,T,N);
-    A: (d_in,N); D: (d_in,); h0: (B,d_in,N)."""
+    A: (d_in,N); D: (d_in,); h0: (B,d_in,N).
+
+    ``segment_ids``: optional (B, T) packed-row labels — the carried
+    state is zeroed at each segment start (``segment_reset_mask``)."""
+    reset = (segment_reset_mask(segment_ids)
+             if segment_ids is not None else None)
+
     def step(h, inp):
-        u_t, dt_t, b_t, c_t = inp
+        u_t, dt_t, b_t, c_t = inp[:4]
+        if reset is not None:
+            h = h * (1.0 - inp[4][:, None, None])
         dA = jnp.exp(dt_t[..., None] * A[None])
         h = dA * h + (dt_t * u_t)[..., None] * b_t[:, None, :]
         y = jnp.einsum("bdn,bn->bd", h, c_t)
@@ -161,29 +195,39 @@ def mamba_scan_ref(u, dt, B_, C_, A, D, h0):
 
     xs = tuple(jnp.moveaxis(a, 1, 0).astype(jnp.float32)
                for a in (u, dt, B_, C_))
+    if reset is not None:
+        xs = xs + (jnp.moveaxis(reset, 1, 0),)
     h_final, ys = jax.lax.scan(step, h0.astype(jnp.float32), xs)
     y = jnp.moveaxis(ys, 0, 1) + u.astype(jnp.float32) * D[None, None]
     return y.astype(u.dtype), h_final.astype(h0.dtype)
 
 
-def wkv6_ref(r, k, v, w, u, state):
+def wkv6_ref(r, k, v, w, u, state, segment_ids=None):
     """RWKV6 recurrence, scanned over time in f32.
 
     o_t = r_t . (S_{t-1} + diag(u) k_t v_t^T);  S_t = diag(w_t) S_{t-1} + k_t v_t^T
     Shapes: r,k,v,w (B,T,H,D); u (H,D); state (B,H,D,D) [key-dim first].
-    """
+
+    ``segment_ids``: optional (B, T) packed-row labels — the carried
+    state is zeroed at each segment start (``segment_reset_mask``)."""
     rf, kf, vf, wf = (a.astype(jnp.float32) for a in (r, k, v, w))
     uf = u.astype(jnp.float32)
     s0 = state.astype(jnp.float32)
+    reset = (segment_reset_mask(segment_ids)
+             if segment_ids is not None else None)
 
     def step(s, inp):
-        rt, kt, vt, wt = inp  # (B,H,D) each
+        rt, kt, vt, wt = inp[:4]  # (B,H,D) each
+        if reset is not None:
+            s = s * (1.0 - inp[4][:, None, None, None])
         kv = kt[..., :, None] * vt[..., None, :]  # (B,H,D,D)
         out = jnp.einsum("bhk,bhkv->bhv", rt, s + uf[None, :, :, None] * kv)
         s_new = wt[..., :, None] * s + kv
         return s_new, out
 
     xs = tuple(jnp.moveaxis(a, 1, 0) for a in (rf, kf, vf, wf))
+    if reset is not None:
+        xs = xs + (jnp.moveaxis(reset, 1, 0),)
     s_final, outs = jax.lax.scan(step, s0, xs)
     out = jnp.moveaxis(outs, 0, 1)  # (B,T,H,D)
     return out.astype(r.dtype), s_final.astype(state.dtype)

@@ -8,6 +8,11 @@ resident in f32 VMEM and walks the time axis with on-chip rank-1 updates —
 the state never round-trips to HBM between tokens (on GPU this is the shared
 -memory variant; on TPU VMEM plays that role).  D=64 keeps the (D, D) tile
 lane-aligned.  All math f32 for the decay products.
+
+Sequence-packed rows pass per-token ``segment_ids`` (B, T): the (D, D)
+state is zeroed at every packed-segment start (derived reset mask, one
+(1, T) int32 tile per program), so no wkv state leaks across a packing
+boundary.
 """
 from __future__ import annotations
 
@@ -19,10 +24,15 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro.kernels.compat import CompilerParams
+from repro.kernels.ref import segment_reset_mask
 
 
-def _wkv6_kernel(r_ref, k_ref, v_ref, w_ref, u_ref, s0_ref, o_ref, sT_ref,
-                 state_ref, *, T: int):
+def _wkv6_kernel(r_ref, k_ref, v_ref, w_ref, u_ref, s0_ref, *refs,
+                 T: int, has_reset: bool):
+    if has_reset:
+        reset_ref, o_ref, sT_ref, state_ref = refs
+    else:
+        reset_ref, (o_ref, sT_ref, state_ref) = None, refs
     state_ref[...] = s0_ref[0, 0].astype(jnp.float32)   # (D, D)
     u = u_ref[0].astype(jnp.float32)                    # (D,)
 
@@ -32,6 +42,9 @@ def _wkv6_kernel(r_ref, k_ref, v_ref, w_ref, u_ref, s0_ref, o_ref, sT_ref,
         vt = v_ref[0, t, 0, :].astype(jnp.float32)
         wt = w_ref[0, t, 0, :].astype(jnp.float32)
         s = state_ref[...]
+        if has_reset:
+            # packed-segment start: drop the previous segment's state
+            s = s * (1.0 - reset_ref[0, t].astype(jnp.float32))
         kv = kt[:, None] * vt[None, :]                  # (D, D) rank-1
         out = ((s + u[:, None] * kv) * rt[:, None]).sum(axis=0)  # (D,)
         o_ref[0, t, 0, :] = out.astype(o_ref.dtype)
@@ -43,21 +56,32 @@ def _wkv6_kernel(r_ref, k_ref, v_ref, w_ref, u_ref, s0_ref, o_ref, sT_ref,
 
 
 @functools.partial(jax.jit, static_argnames=("interpret",))
-def wkv6_pallas(r, k, v, w, u, state, *, interpret: bool = False):
+def wkv6_pallas(r, k, v, w, u, state, segment_ids=None, *,
+                interpret: bool = False):
     """r,k,v,w: (B, T, H, D); u: (H, D); state: (B, H, D, D) [key-dim first].
+
+    ``segment_ids``: optional (B, T) int32 packed-row labels — the VMEM
+    state matrix is zeroed whenever the label changes from the previous
+    token (``state`` still seeds the row's first token).
 
     Returns (out (B, T, H, D), final state (B, H, D, D))."""
     B, T, H, D = r.shape
-    kernel = functools.partial(_wkv6_kernel, T=T)
+    has_reset = segment_ids is not None
+    kernel = functools.partial(_wkv6_kernel, T=T, has_reset=has_reset)
     seq_spec = pl.BlockSpec((1, T, 1, D), lambda b, h: (b, 0, h, 0))
+    in_specs = [
+        seq_spec, seq_spec, seq_spec, seq_spec,
+        pl.BlockSpec((1, D), lambda b, h: (h, 0)),
+        pl.BlockSpec((1, 1, D, D), lambda b, h: (b, h, 0, 0)),
+    ]
+    inputs = [r, k, v, w, u, state]
+    if has_reset:
+        inputs.append(segment_reset_mask(segment_ids))
+        in_specs.append(pl.BlockSpec((1, T), lambda b, h: (b, 0)))
     out, s_final = pl.pallas_call(
         kernel,
         grid=(B, H),
-        in_specs=[
-            seq_spec, seq_spec, seq_spec, seq_spec,
-            pl.BlockSpec((1, D), lambda b, h: (h, 0)),
-            pl.BlockSpec((1, 1, D, D), lambda b, h: (b, h, 0, 0)),
-        ],
+        in_specs=in_specs,
         out_specs=[
             seq_spec,
             pl.BlockSpec((1, 1, D, D), lambda b, h: (b, h, 0, 0)),
@@ -71,5 +95,5 @@ def wkv6_pallas(r, k, v, w, u, state, *, interpret: bool = False):
             dimension_semantics=("parallel", "parallel"),
         ),
         interpret=interpret,
-    )(r, k, v, w, u, state)
+    )(*inputs)
     return out, s_final

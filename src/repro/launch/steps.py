@@ -50,18 +50,17 @@ def make_train_step(cfg: ModelConfig, train_cfg: Optional[TrainConfig] = None,
     single-replica trainer jits per bucket (``repro.rl.update``), wrapped
     to the pjit dry-run's (params, opt_state, batch) calling convention.
 
-    For attention architectures (``packing_supported``) the batch is the
-    sequence-packed compact layout (``packed=True``): (B, S) tokens +
-    rollout logprobs and (B, SEGS) per-segment tables — masks, RoPE
-    position resets, segment-masked attention and the advantage
+    Every architecture (``packing_supported`` — universal since the
+    segment-reset kernels landed) ships the sequence-packed compact
+    layout (``packed=True``): (B, S) tokens + rollout logprobs and
+    (B, SEGS) per-segment tables — masks, RoPE position resets,
+    segment-masked attention, SSM/RWKV state resets and the advantage
     broadcast are all derived on device, so the pjit case ships lengths
-    instead of dense (B, S) mask/advantage tensors.  SSM/RWKV hybrids
-    keep the dense layout: their recurrent state would leak across
-    packed segment boundaries (``input_specs`` agrees on the same
-    predicate, so specs and step never disagree).  The REINFORCE++
-    global norm runs on device for packed batches under the same gate
-    the single-replica trainer uses (never for already-normalized GRPO
-    advantages); dense batches ship pre-normalized advantages.
+    instead of dense (B, S) mask/advantage tensors (``input_specs``
+    consults the same predicate, so specs and step never disagree).
+    The REINFORCE++ global norm runs on device for packed batches under
+    the same gate the single-replica trainer uses (never for
+    already-normalized GRPO advantages).
 
     The warmup schedule is driven by the optimizer step count; the
     entropy diagnostic is skipped (full-vocab log-softmax is pure
@@ -139,8 +138,9 @@ def input_specs(cfg: ModelConfig, shape_name: str,
             specs["seg_adv"] = _sds((batch, TRAIN_PACK_SEGMENTS),
                                     jnp.float32)
         else:
-            # SSM/RWKV hybrids: recurrent state crosses intra-row
-            # boundaries, so they keep the dense unpacked layout
+            # dense fallback for a future layer kind without a
+            # segment-reset path (unreachable today: the gate is
+            # universally true — hybrids pack via kernel state resets)
             specs["response_mask"] = _sds((batch, seq_len), jnp.float32)
             specs["advantages"] = _sds((batch, seq_len), jnp.float32)
         if cfg.frontend is not None and cfg.frontend.kind == "vision":

@@ -164,10 +164,13 @@ def _decoder_layer_body(lp: Params, x, positions, segment_ids, cross_k,
     Standalone so ``jax.checkpoint`` can wrap it for activation remat in
     the distributed train step.  Returns (x, aux_loss).
 
-    ``segment_ids`` (None or (B, S)) restricts attention to same-segment
-    pairs for sequence-packed rows.  SSM/RWKV layers have no equivalent
-    boundary: their recurrent state flows across packed segments, so
-    packing is only exact for attention architectures.
+    ``segment_ids`` (None or (B, S)) isolates sequence-packed segments in
+    EVERY layer kind: attention is restricted to same-segment pairs, and
+    SSM/RWKV layers zero their carried recurrent/token-shift state at
+    each segment start (inside the scan kernels), so a packed segment
+    computes exactly what it would in its own row.  Encoder
+    cross-attention stays per-row: all of a row's segments share its
+    conditioning signal by convention.
     """
     i = layer_idx
     B = x.shape[0]
@@ -181,14 +184,16 @@ def _decoder_layer_body(lp: Params, x, positions, segment_ids, cross_k,
             y = attn.gqa_forward(lp["attn"], cfg, h, positions, i,
                                  segment_ids=segment_ids)
     elif kind == "mamba":
-        y, _ = ssm.mamba_forward(lp["mamba"], cfg, h)
+        y, _ = ssm.mamba_forward(lp["mamba"], cfg, h,
+                                 segment_ids=segment_ids)
     elif kind == "rwkv":
         zero_shift = jnp.zeros((B, cfg.d_model), h.dtype)
         zero_wkv = jnp.zeros(
             (B, cfg.d_model // cfg.rwkv.head_dim, cfg.rwkv.head_dim,
              cfg.rwkv.head_dim), jnp.float32)
         y, _ = ssm.rwkv6_time_mix(lp["rwkv"], cfg, h,
-                                  {"wkv": zero_wkv, "shift": zero_shift})
+                                  {"wkv": zero_wkv, "shift": zero_shift},
+                                  segment_ids=segment_ids)
     x = x + y
     if cfg.encoder is not None:
         h = rmsnorm(lp["norm_cross"], x, cfg.norm_eps)
@@ -197,7 +202,8 @@ def _decoder_layer_body(lp: Params, x, positions, segment_ids, cross_k,
     h = rmsnorm(lp["norm2"], x, cfg.norm_eps)
     if kind == "rwkv":
         y, _ = ssm.rwkv6_channel_mix(lp["ffn"], h,
-                                     jnp.zeros((B, cfg.d_model), h.dtype))
+                                     jnp.zeros((B, cfg.d_model), h.dtype),
+                                     segment_ids=segment_ids)
         aux = jnp.float32(0.0)
     else:
         y, aux = _ffn_apply(lp, cfg, h)
@@ -216,10 +222,13 @@ def forward(params, cfg: ModelConfig, tokens, *,
 
     ``prefix_embeds``: (B, P, d) modality prefix (vlm/audio stub) prepended
     before token embeddings; logits cover the full combined sequence.
-    ``positions``: (B, S_total) RoPE positions (default: 0..S_total-1) —
-    sequence-packed rows pass per-segment-reset positions here.
-    ``segment_ids``: (B, S_total) int32 packing labels (-1 = pad); when
-    given, attention layers mask out cross-segment pairs.
+    ``positions``: (B, S_total) RoPE/sinusoidal positions (default:
+    0..S_total-1) — sequence-packed rows pass per-segment-reset positions
+    here (encoder archs gather their sinusoidal table by these too).
+    ``segment_ids``: (B, S_total) int32 packing labels (-1 = pad,
+    ``SHARED_SEGMENT_ID`` = per-row prefix every segment may attend);
+    when given, attention masks out cross-segment pairs and SSM/RWKV
+    layers reset their recurrent state at segment starts.
     ``remat``: checkpoint each decoder layer (training memory).
     """
     B, S = tokens.shape
@@ -236,7 +245,10 @@ def forward(params, cfg: ModelConfig, tokens, *,
         enc_out = encode(params, cfg, frames)
         cross_kv = [attn.cross_attn_kv(lp["cross"], cfg, enc_out)
                     for lp in params["layers"]]
-        x = x + sinusoidal_positions(S_tot, cfg.d_model).astype(x.dtype)[None]
+        # gather by the (possibly per-segment-reset) positions so packed
+        # segments see the same embeddings their own row would
+        x = x + sinusoidal_positions(S_tot, cfg.d_model)[positions].astype(
+            x.dtype)
     aux_total = jnp.float32(0.0)
     dummy_kv = jnp.zeros((B, 1, 1), x.dtype)
     for i, lp in enumerate(params["layers"]):

@@ -4,6 +4,12 @@ mix (Finch, data-dependent decay).
 Branch-state contract for the tree sampler: both layers expose a compact
 recurrent state (``*_state_shape``) that is snapshotted/copied when a search
 path branches — there is no KV cache to share (DESIGN.md §4).
+
+Sequence-packing contract: every stateful input (mamba conv window + SSM
+scan, rwkv token-shift + wkv recurrence) accepts ``segment_ids`` and
+resets its carried state at packed-segment starts, so a packed segment
+computes exactly what it would in its own row (the same guarantee the
+attention layers get from the segment mask).
 """
 from __future__ import annotations
 
@@ -14,6 +20,7 @@ import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
 from repro.kernels import ops as kops
+from repro.kernels.ref import segment_reset_mask
 from repro.models.layers import _dense_init, rmsnorm, rmsnorm_init
 
 
@@ -66,13 +73,18 @@ def _mamba_ssm_scan(u, dt, B_, C_, A, D, h0):
 
 
 def mamba_forward(params, cfg: ModelConfig, x, state=None, mask=None,
-                  last_idx=None):
+                  last_idx=None, segment_ids=None):
     """x: (B,T,d). state: {"conv": (B,d_conv-1,d_in), "ssm": (B,d_in,N)}.
     Returns (y, new_state).
 
     ``mask`` (B,T): right-padding mask.  Padded steps freeze the SSM state
     (dt -> 0 makes dA=I, dBu=0); ``last_idx`` (B,) selects the conv context
     ending at the last *real* token so new_state matches the unpadded run.
+
+    ``segment_ids`` (B,T): sequence-packed rows.  The SSM state is zeroed
+    at each segment start (inside the scan kernel) and the depthwise conv
+    windows are masked to same-segment taps — a packed segment sees
+    exactly the zero conv context + zero h0 a fresh row would.
     """
     mc = cfg.mamba
     B, T, d = x.shape
@@ -89,6 +101,15 @@ def mamba_forward(params, cfg: ModelConfig, x, state=None, mask=None,
     u_pad = jnp.concatenate([conv_ctx, u], axis=1)  # (B, T+dc-1, d_in)
     idx = jnp.arange(T)[:, None] + jnp.arange(mc.d_conv)[None, :]
     windows = u_pad[:, idx]                          # (B,T,dc,d_in)
+    if segment_ids is not None:
+        # prepended conv context belongs to token 0's stream; a window
+        # tap from another segment is zeroed (== fresh-row conv context)
+        seg = segment_ids.astype(jnp.int32)
+        seg_pad = jnp.concatenate(
+            [jnp.broadcast_to(seg[:, :1], (B, mc.d_conv - 1)), seg], axis=1)
+        win_seg = seg_pad[:, idx]                    # (B,T,dc)
+        windows = windows * (win_seg == seg[:, :, None]
+                             )[..., None].astype(windows.dtype)
     u_conv = jax.nn.silu(jnp.einsum("btcd,cd->btd", windows, params["conv_w"])
                          + params["conv_b"])
     xp = u_conv @ params["w_x"]
@@ -101,7 +122,8 @@ def mamba_forward(params, cfg: ModelConfig, x, state=None, mask=None,
                                  dt.astype(jnp.float32),
                                  B_.astype(jnp.float32),
                                  C_.astype(jnp.float32), A,
-                                 params["D"].astype(jnp.float32), h0)
+                                 params["D"].astype(jnp.float32), h0,
+                                 segment_ids=segment_ids)
     y = (y.astype(x.dtype) * jax.nn.silu(z)) @ params["w_out"]
     if last_idx is not None:
         # conv context ending at the last real token: u_pad rows
@@ -154,18 +176,26 @@ def rwkv6_init(key, cfg: ModelConfig, dtype=jnp.float32):
 
 
 def rwkv6_time_mix(params, cfg: ModelConfig, x, state, mask=None,
-                   last_idx=None):
+                   last_idx=None, segment_ids=None):
     """RWKV6 time-mix. x: (B,T,d); state {"wkv": (B,H,D,D) f32,
     "shift": (B,d)}. Returns (y, new_state).
 
     ``mask`` (B,T): padded steps freeze the wkv state (w -> 1, k -> 0);
     ``last_idx`` picks the token-shift state at the last real token.
+
+    ``segment_ids`` (B,T): sequence-packed rows.  The wkv state is zeroed
+    at each segment start (inside the recurrence kernel) and the
+    token-shift input at a segment start is zeroed — a packed segment
+    sees exactly the zero shift/wkv state a fresh row would.
     """
     rc = cfg.rwkv
     B, T, d = x.shape
     H, D = d // rc.head_dim, rc.head_dim
     x_prev = jnp.concatenate([state["shift"][:, None, :].astype(x.dtype),
                               x[:, :-1]], axis=1)
+    if segment_ids is not None:
+        x_prev = x_prev * (1.0 - segment_reset_mask(segment_ids)
+                           )[..., None].astype(x_prev.dtype)
     dx = x_prev - x
     # data-dependent token-shift mix per target (r,k,v,w,g)
     lora = jnp.tanh(x @ params["mix_lora_a"])  # (B,T,L)
@@ -184,7 +214,7 @@ def rwkv6_time_mix(params, cfg: ModelConfig, x, state, mask=None,
         w = w * m + (1.0 - m)   # identity decay on pads
         k = k * m.astype(k.dtype)  # no kv contribution from pads
     out, wkv_new = kops.wkv6(r, k, v, w.astype(r.dtype), params["bonus_u"],
-                             state["wkv"])
+                             state["wkv"], segment_ids=segment_ids)
     out = rmsnorm(params["ln_x"], out.reshape(B, T, d), cfg.norm_eps)
     y = (out * g) @ params["w_o"]
     if last_idx is not None:
@@ -205,10 +235,17 @@ def rwkv6_channel_mix_init(key, cfg: ModelConfig, dtype=jnp.float32):
     }
 
 
-def rwkv6_channel_mix(params, x, shift_state, last_idx=None):
-    """x: (B,T,d); shift_state: (B,d). Returns (y, new_shift)."""
+def rwkv6_channel_mix(params, x, shift_state, last_idx=None,
+                      segment_ids=None):
+    """x: (B,T,d); shift_state: (B,d). Returns (y, new_shift).
+
+    ``segment_ids`` (B,T): packed rows — the token-shift input at a
+    segment start is zeroed (fresh-row shift state)."""
     x_prev = jnp.concatenate([shift_state[:, None, :].astype(x.dtype),
                               x[:, :-1]], axis=1)
+    if segment_ids is not None:
+        x_prev = x_prev * (1.0 - segment_reset_mask(segment_ids)
+                           )[..., None].astype(x_prev.dtype)
     xk = x + (x_prev - x) * params["mix_k"]
     kk = jnp.square(jax.nn.relu(xk @ params["w_k"]))
     rr = jax.nn.sigmoid(x @ params["w_r"])

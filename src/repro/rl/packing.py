@@ -30,12 +30,13 @@ The unpacked path (``RolloutBatch`` + ``RLTrainer.update``) stays as
 the parity oracle: a packed batch must produce the same loss and the
 same parameter update as its unpacked twin (tests/test_train_hotpath).
 
-Known limitation: segment isolation relies on the attention mask, so
-packing is exact for attention-only architectures
-(:func:`packing_supported`).  SSM/RWKV layers carry recurrent state
-across intra-row boundaries, and encoder / modality-prefix archs would
-make every packed segment share one per-row conditioning signal; those
-archs train unpacked (documented in docs/architecture.md).
+Packing is exact for ALL architectures (:func:`packing_supported`):
+attention layers mask cross-segment pairs, SSM/RWKV layers zero their
+carried recurrent/token-shift state at segment starts (the
+``segment_ids`` argument of the scan kernels), a modality prefix is a
+``SHARED_SEGMENT_ID`` kv block every segment may attend, and encoder
+cross-attention conditions all of a row's segments on the row's
+encoder output by convention (documented in docs/architecture.md).
 """
 from __future__ import annotations
 
@@ -48,14 +49,24 @@ import numpy as np
 def packing_supported(cfg) -> bool:
     """Whether sequence packing is *exact* for this architecture.
 
-    Two conditions: every layer is attention (segment-maskable —
-    Mamba/RWKV recurrent state crosses intra-row boundaries), and there
-    is no shared per-row conditioning (encoder cross-attention or a
-    modality prefix) that every packed segment would jointly attend.
-    Archs failing either must train on the unpacked layout."""
-    if cfg.encoder is not None or cfg.frontend is not None:
-        return False
-    return all(cfg.layer_kind(i) == "attn" for i in range(cfg.num_layers))
+    True for every architecture since the segment-reset kernels landed:
+    attention layers are segment-masked, Mamba/RWKV scan kernels zero
+    their carried state at packed-segment starts, a modality prefix
+    rides along as a shared kv segment, and encoder cross-attention
+    shares the row's conditioning across its segments by convention.
+    That convention is a CALLER contract for conditioned batches:
+    modality tensors are per-row, so whoever packs trajectories that
+    carry ``enc_frames`` / ``prefix_embeds`` must co-bin
+    same-conditioning trajectories into each row
+    (:func:`first_fit_decreasing` bins by length only; the trainer's
+    own batches are text-only, and the pjit specs ship one conditioning
+    tensor per row by construction).
+    Kept as the single gate the trainer, the pjit ``train_4k`` input
+    specs and the step function all consult, so a future layer kind
+    without a reset path can fall back to the dense layout in one
+    place."""
+    del cfg
+    return True
 
 
 def first_fit_decreasing(lengths: Sequence[int], capacity: int
@@ -82,6 +93,36 @@ def first_fit_decreasing(lengths: Sequence[int], capacity: int
             rows.append([i])
             space.append(max(capacity - n, 0))
     return rows
+
+
+def fill_packed_rows(prompts: Sequence, responses: Sequence,
+                     packing_rows: Sequence[Sequence[int]], length: int, *,
+                     num_rows: int, seg_slots: int, pad_token: int
+                     ) -> Tuple:
+    """Lay FFD rows out contiguously from column 0 — the ONE fill loop
+    shared by ``RLTrainer.build_batch_packed`` and the packed BC warmup.
+
+    ``prompts[j]`` / ``responses[j]`` are the j-th item's token
+    sequences; ``packing_rows`` is ``first_fit_decreasing``'s output.
+    Returns (tokens (num_rows, length), seg_prompt_lens,
+    seg_resp_lens (num_rows, seg_slots), placements) where placements
+    lists ``(row, slot, item_index, column_offset)`` so callers can
+    scatter per-item extras (rollout logprobs, advantages, rewards)
+    into the same layout."""
+    tokens = np.full((num_rows, length), pad_token, np.int32)
+    seg_p = np.zeros((num_rows, seg_slots), np.int32)
+    seg_r = np.zeros((num_rows, seg_slots), np.int32)
+    placements = []
+    for i, members in enumerate(packing_rows):
+        off = 0
+        for s, j in enumerate(members):
+            p, r = prompts[j], responses[j]
+            tokens[i, off: off + len(p)] = p
+            tokens[i, off + len(p): off + len(p) + len(r)] = r
+            seg_p[i, s], seg_r[i, s] = len(p), len(r)
+            placements.append((i, s, j, off))
+            off += len(p) + len(r)
+    return tokens, seg_p, seg_r, placements
 
 
 def bucket_segments(n: int, quantum: int = 2) -> int:

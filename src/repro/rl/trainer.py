@@ -28,9 +28,15 @@ device-resident decode loop):
   (``repro.rl.packing``): multiple short trajectories share one (N, L)
   row (first-fit-decreasing), the host ships only (N, L) tokens +
   logprobs and three (N, S) per-segment tables, and the jitted update
-  derives segment-masked attention, per-segment RoPE resets, masks and
-  advantages on device — shrinking the pad-token fraction the tree's
-  mixed-depth trajectories otherwise burn.
+  derives segment-masked attention, per-segment RoPE resets (and
+  SSM/RWKV state resets — packing is exact for every arch, hybrids
+  included), masks and advantages on device — shrinking the pad-token
+  fraction the tree's mixed-depth trajectories otherwise burn;
+* the rollout-logprobs plane is donated per (N, L) bucket alongside
+  params/opt-state, so the largest f32 batch input is reused in place
+  instead of staying live next to the update's scratch (the returned
+  alias is dropped immediately — only ``_donated_lp_buckets`` records
+  which buckets donate, for tests/observability).
 
 The previous per-tree / per-epoch host loop is kept as
 ``build_batch_legacy`` / ``update_legacy`` — the parity reference for
@@ -74,7 +80,9 @@ from repro.optim import (
 from repro.rl.packing import (
     PackedRolloutBatch,
     bucket_segments,
+    fill_packed_rows,
     first_fit_decreasing,
+    packed_row_tensors,
     packing_supported,
 )
 from repro.rl.update import make_pg_loss, make_ppo_update
@@ -200,11 +208,11 @@ class RLTrainer:
         if cfg.vocab_size < self.tok.vocab_size:
             raise ValueError("model vocab too small for the byte tokenizer")
         if train_cfg.pack_sequences and not packing_supported(cfg):
+            # the gate is universally true today (segment-reset kernels);
+            # kept so a future non-resettable layer kind fails loudly
             raise ValueError(
-                f"pack_sequences is not exact for {cfg.name}: SSM/RWKV "
-                "recurrent state (or encoder/prefix conditioning) crosses "
-                "packed segment boundaries — train unpacked "
-                "(repro.rl.packing.packing_supported)")
+                f"pack_sequences is not exact for {cfg.name} "
+                "(repro.rl.packing.packing_supported) — train unpacked")
         key = jax.random.PRNGKey(seed)
         self.params = init_params(key, cfg)
         self.opt_state = adamw_init(self.params)
@@ -216,6 +224,11 @@ class RLTrainer:
         self._update_fns: Dict[Tuple[int, int], Any] = {}
         self._packed_update_fns: Dict[Tuple[int, int, int], Any] = {}
         self._legacy_update_fns: Dict[Tuple[int, int], Any] = {}
+        # buckets whose jitted update donated the rollout-logprobs plane
+        # (keys only — retaining the returned alias would pin one
+        # (Nb, L) f32 buffer per bucket and undo the donation's point;
+        # in-place reuse is proven by the compile-time aliasing tests)
+        self._donated_lp_buckets: set = set()
         self.step = 0
         self.metrics_log: List[Dict[str, float]] = []
         self._rng = np.random.default_rng(seed)
@@ -379,25 +392,18 @@ class RLTrainer:
         packing_rows = first_fit_decreasing(totals, L)
         N = len(packing_rows)
         S = bucket_segments(max(len(r) for r in packing_rows))
-        tokens = np.full((N, L), ByteTokenizer.PAD, np.int32)
+        tokens, seg_plens, seg_rlens, placements = fill_packed_rows(
+            [pr for pr, *_ in rows], [t for _, t, *_ in rows],
+            packing_rows, L, num_rows=N, seg_slots=S,
+            pad_token=ByteTokenizer.PAD)
         lp_old = np.zeros((N, L), np.float32)
-        seg_plens = np.zeros((N, S), np.int32)
-        seg_rlens = np.zeros((N, S), np.int32)
         seg_adv = np.zeros((N, S), np.float32)
         seg_rew = np.zeros((N, S), np.float32)
-        for i, members in enumerate(packing_rows):
-            off = 0
-            for s, j in enumerate(members):
-                prompt, resp, lps, r, a = rows[j]
-                n_p, n_r = len(prompt), len(resp)
-                tokens[i, off: off + n_p] = prompt
-                tokens[i, off + n_p: off + n_p + n_r] = resp
-                lp_old[i, off + n_p: off + n_p + n_r] = lps
-                seg_plens[i, s] = n_p
-                seg_rlens[i, s] = n_r
-                seg_adv[i, s] = a
-                seg_rew[i, s] = r
-                off += n_p + n_r
+        for i, s, j, off in placements:
+            prompt, _, lps, r, a = rows[j]
+            lp_old[i, off + len(prompt): off + len(prompt) + len(lps)] = lps
+            seg_adv[i, s] = a
+            seg_rew[i, s] = r
         n_leaves = sum(t.num_leaves for t, _ in kept)
         # what update_packed() will actually ship: the ROW-PADDED (Nb, ·)
         # buffers, not the unpadded pack built here
@@ -420,11 +426,13 @@ class RLTrainer:
     def _get_update_fn(self, N: int, L: int):
         """One jitted K-epoch update per (N, L) bucket: derives the dense
         mask/advantages on device, runs global normalization there, scans
-        the ppo epochs, and donates the params/opt-state buffers."""
+        the ppo epochs, and donates the params/opt-state buffers plus the
+        rollout-logprobs plane (aliased back out as the 3rd result)."""
         key = (N, L)
         if key not in self._update_fns:
             base_update = make_ppo_update(self.cfg, self.train_cfg,
-                                          lr_fn=self.lr_fn)
+                                          lr_fn=self.lr_fn,
+                                          donate_logprobs=True)
             apply_global = self._use_global_norm
 
             def update(params, opt_state, tokens, prompt_lens, resp_lens,
@@ -438,7 +446,8 @@ class RLTrainer:
                          "logprobs_old": lp_old, "advantages": advs}
                 return base_update(params, opt_state, batch, step)
 
-            self._update_fns[key] = jax.jit(update, donate_argnums=(0, 1))
+            self._update_fns[key] = jax.jit(update,
+                                            donate_argnums=(0, 1, 5))
         return self._update_fns[key]
 
     def update(self, batch: RolloutBatch) -> Dict[str, float]:
@@ -459,25 +468,37 @@ class RLTrainer:
         adv_traj = np.zeros((Nb,), np.float32)
         adv_traj[:N] = batch.adv_traj
         fn = self._get_update_fn(Nb, L)
-        self.params, self.opt_state, m = fn(
+        self.params, self.opt_state, _, m = fn(
             self.params, self.opt_state,
             jnp.asarray(tokens), jnp.asarray(prompt_lens),
             jnp.asarray(resp_lens), jnp.asarray(lp_old),
             jnp.asarray(adv_traj), jnp.asarray(self.step, jnp.int32))
+        self._donated_lp_buckets.add((Nb, L))
         return {k: float(v) for k, v in m.items()}
 
     def _get_packed_update_fn(self, N: int, L: int, S: int):
         """One jitted K-epoch update per (N, L, S) bucket over the
         sequence-packed compact layout: segment-ids / RoPE positions /
         masks / advantages (+ optional global norm) all derived on
-        device by ``repro.rl.update`` with ``packed=True``."""
+        device by ``repro.rl.update`` with ``packed=True``.  Flat
+        arguments so exactly params / opt-state / rollout logprobs are
+        donated (a donated dict would drag the int32 tables along)."""
         key = (N, L, S)
         if key not in self._packed_update_fns:
-            fn = make_ppo_update(self.cfg, self.train_cfg,
-                                 lr_fn=self.lr_fn, packed=True,
-                                 use_global_norm=self._use_global_norm)
-            self._packed_update_fns[key] = jax.jit(fn,
-                                                   donate_argnums=(0, 1))
+            base = make_ppo_update(self.cfg, self.train_cfg,
+                                   lr_fn=self.lr_fn, packed=True,
+                                   use_global_norm=self._use_global_norm,
+                                   donate_logprobs=True)
+
+            def update(params, opt_state, tokens, lp_old, seg_plens,
+                       seg_rlens, seg_adv, step):
+                batch = {"tokens": tokens, "logprobs_old": lp_old,
+                         "seg_prompt_lens": seg_plens,
+                         "seg_resp_lens": seg_rlens, "seg_adv": seg_adv}
+                return base(params, opt_state, batch, step)
+
+            self._packed_update_fns[key] = jax.jit(
+                update, donate_argnums=(0, 1, 3))
         return self._packed_update_fns[key]
 
     def update_packed(self, batch: PackedRolloutBatch) -> Dict[str, float]:
@@ -501,14 +522,12 @@ class RLTrainer:
         seg_adv = np.zeros((Nb, S), np.float32)
         seg_adv[:N] = batch.seg_adv
         fn = self._get_packed_update_fn(Nb, L, S)
-        dev_batch = {"tokens": jnp.asarray(tokens),
-                     "logprobs_old": jnp.asarray(lp_old),
-                     "seg_prompt_lens": jnp.asarray(seg_plens),
-                     "seg_resp_lens": jnp.asarray(seg_rlens),
-                     "seg_adv": jnp.asarray(seg_adv)}
-        self.params, self.opt_state, m = fn(
-            self.params, self.opt_state, dev_batch,
-            jnp.asarray(self.step, jnp.int32))
+        self.params, self.opt_state, _, m = fn(
+            self.params, self.opt_state,
+            jnp.asarray(tokens), jnp.asarray(lp_old),
+            jnp.asarray(seg_plens), jnp.asarray(seg_rlens),
+            jnp.asarray(seg_adv), jnp.asarray(self.step, jnp.int32))
+        self._donated_lp_buckets.add((Nb, L, S))
         return {k: float(v) for k, v in m.items()}
 
     # -- legacy reference path ---------------------------------------------------
@@ -679,25 +698,49 @@ class RLTrainer:
     # checkpoint — still no *RL* signal is used here.
 
     def bc_warmup(self, steps: int = 100, batch_size: int = 16,
-                  lr: float = 3e-3) -> Dict[str, float]:
+                  lr: float = 3e-3,
+                  packed: Optional[bool] = None) -> Dict[str, float]:
+        """Supervised CoT warmup.  ``packed=None`` follows
+        ``TrainConfig.pack_sequences``: with packing on, the (query, cot)
+        rows are FFD-binned into shared (N, L) rows and the CE loss runs
+        over segment-masked attention + per-segment resets — the same
+        token set and normalization as the dense layout, on fewer rows."""
         cfg = self.cfg
+        packed = self.train_cfg.pack_sequences if packed is None else packed
 
-        def ce_loss(params, tokens, mask):
-            logits, aux = forward(params, cfg, tokens)
-            lp = token_logprobs_from_logits(logits[:, :-1], tokens[:, 1:])
-            m = mask[:, 1:]
+        def ce_from(lp, m, aux):
             loss = -(lp * m).sum() / jnp.maximum(m.sum(), 1.0)
             if cfg.moe is not None:
                 loss = loss + cfg.moe.aux_loss_coef * aux
             return loss
 
-        @jax.jit
-        def bc_step(params, opt_state, tokens, mask):
-            loss, grads = jax.value_and_grad(ce_loss)(params, tokens, mask)
-            grads, _ = clip_by_global_norm(grads, 1.0)
-            new_params, new_opt = adamw_update(params, grads, opt_state,
-                                               lr=lr)
-            return new_params, new_opt, loss
+        def ce_loss(params, tokens, mask):
+            logits, aux = forward(params, cfg, tokens)
+            lp = token_logprobs_from_logits(logits[:, :-1], tokens[:, 1:])
+            return ce_from(lp, mask[:, 1:], aux)
+
+        def ce_loss_packed(params, tokens, seg_plens, seg_rlens):
+            sid, pos, rmask = packed_row_tensors(
+                seg_plens, seg_rlens, tokens.shape[1], xp=jnp)
+            logits, aux = forward(params, cfg, tokens, positions=pos,
+                                  segment_ids=sid)
+            lp = token_logprobs_from_logits(logits[:, :-1], tokens[:, 1:])
+            # boundary guard: never score a token against another
+            # segment's last token (mirrors the packed PG loss)
+            m = rmask[:, 1:] * (sid[:, 1:] == sid[:, :-1]).astype(
+                jnp.float32)
+            return ce_from(lp, m, aux)
+
+        def _step(loss_fn):
+            def run(params, opt_state, *batch):
+                loss, grads = jax.value_and_grad(loss_fn)(params, *batch)
+                grads, _ = clip_by_global_norm(grads, 1.0)
+                new_params, new_opt = adamw_update(params, grads,
+                                                   opt_state, lr=lr)
+                return new_params, new_opt, loss
+            return jax.jit(run)
+
+        bc_step = _step(ce_loss_packed if packed else ce_loss)
 
         L = None
         last = 0.0
@@ -711,19 +754,35 @@ class RLTrainer:
             maxlen = max(len(a) + len(b) for a, b in rows)
             if L is None or maxlen > L:
                 L = _bucket_len(maxlen)
-            toks = np.full((batch_size, L), ByteTokenizer.PAD, np.int32)
-            mask = np.zeros((batch_size, L), np.float32)
-            for i, (q, c) in enumerate(rows):
-                toks[i, : len(q)] = q
-                toks[i, len(q): len(q) + len(c)] = c
-                mask[i, len(q): len(q) + len(c)] = 1.0
-            self.params, self.opt_state, loss = bc_step(
-                self.params, self.opt_state, jnp.asarray(toks),
-                jnp.asarray(mask))
+            if packed:
+                lens = [len(q) + len(c) for q, c in rows]
+                packing_rows = first_fit_decreasing(lens, L)
+                toks, seg_plens, seg_rlens, _ = fill_packed_rows(
+                    [q for q, _ in rows], [c for _, c in rows],
+                    packing_rows, L,
+                    num_rows=_bucket_rows(len(packing_rows)),
+                    seg_slots=bucket_segments(
+                        max(len(r) for r in packing_rows)),
+                    pad_token=ByteTokenizer.PAD)
+                self.params, self.opt_state, loss = bc_step(
+                    self.params, self.opt_state, jnp.asarray(toks),
+                    jnp.asarray(seg_plens), jnp.asarray(seg_rlens))
+            else:
+                toks = np.full((batch_size, L), ByteTokenizer.PAD,
+                               np.int32)
+                mask = np.zeros((batch_size, L), np.float32)
+                for i, (q, c) in enumerate(rows):
+                    toks[i, : len(q)] = q
+                    toks[i, len(q): len(q) + len(c)] = c
+                    mask[i, len(q): len(q) + len(c)] = 1.0
+                self.params, self.opt_state, loss = bc_step(
+                    self.params, self.opt_state, jnp.asarray(toks),
+                    jnp.asarray(mask))
             last = float(loss)
         # reset optimizer state for the RL phase (fresh moments)
         self.opt_state = adamw_init(self.params)
-        return {"bc_loss": last, "bc_steps": float(steps)}
+        return {"bc_loss": last, "bc_steps": float(steps),
+                "bc_packed": float(packed)}
 
     # -- evaluation ----------------------------------------------------------------
 

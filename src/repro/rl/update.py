@@ -24,9 +24,17 @@ Two batch layouts are supported, selected by ``packed``:
   advantage tensors and the optional REINFORCE++ global norm are all
   derived on device (``repro.rl.packing.packed_batch_tensors``), the
   forward pass gets segment-masked attention + per-segment-reset
-  positions, and the loss mask drops any token whose predecessor lies
-  in a different segment — a segment's first scored token is never
-  aligned against the previous segment's last token.
+  positions (and, through ``model.forward``, per-segment state resets
+  in SSM/RWKV layers), and the loss mask drops any token whose
+  predecessor lies in a different segment — a segment's first scored
+  token is never aligned against the previous segment's last token.
+  A modality prefix is labeled ``SHARED_SEGMENT_ID`` so every packed
+  segment attends it, exactly as each trajectory would in its own row.
+
+``donate_logprobs=True`` additionally threads the rollout-logprobs
+plane — the largest float32 batch input — through to an extra output,
+so callers can donate its buffer per (N, L) bucket (XLA aliases it in
+place instead of keeping a second copy live across the K-epoch scan).
 """
 from __future__ import annotations
 
@@ -37,6 +45,7 @@ import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig, TrainConfig
 from repro.core.advantage import global_normalize
+from repro.kernels.ref import SHARED_SEGMENT_ID
 from repro.core.loss import dapo_pg_loss, entropy_from_logits, \
     token_logprobs_from_logits
 from repro.models.model import forward
@@ -73,6 +82,13 @@ def make_pg_loss(cfg: ModelConfig, tc: TrainConfig, *,
     ``use_global_norm`` (packed only): apply the REINFORCE++ global
     normalization to the derived token advantages on device; the dense
     layout receives already-normalized advantages from the caller.
+
+    Packed + modality contract: ``prefix_embeds`` / ``enc_frames`` are
+    per-ROW — every segment of a packed row conditions on that row's
+    tensor.  A caller that packs conditioned trajectories must co-bin
+    same-conditioning trajectories into each row (FFD bins by length
+    only; the trainer's own batches carry no conditioning, so this
+    binds only hand-assembled batches — see packing_supported).
     """
     if packed:
         return _make_packed_pg_loss(cfg, tc, remat=remat,
@@ -119,18 +135,18 @@ def _make_packed_pg_loss(cfg: ModelConfig, tc: TrainConfig, *,
         kwargs = _modality_kwargs(cfg, batch)
         pos_full, sid_full = pos, sid
         if "prefix_embeds" in batch and cfg.encoder is None:
-            # Frontend archs are excluded from the default packed paths
-            # (``packing_supported``: segments would share the prefix);
-            # this keeps direct make_ppo_update(packed=True) callers
-            # shape-correct: the prefix occupies positions [0, P), every
-            # segment's positions shift up by P, and the prefix joins
-            # the row's first segment.
+            # The modality prefix occupies positions [0, P) and carries
+            # the SHARED segment label: every packed segment attends it
+            # (it is the row's conditioning signal), each segment's own
+            # positions shift up by P — exactly what each trajectory
+            # would see in its own unpacked row behind the same prefix.
             P = batch["prefix_embeds"].shape[1]
             pos_full = jnp.concatenate(
                 [jnp.broadcast_to(jnp.arange(P, dtype=jnp.int32), (B, P)),
                  pos + P], axis=1)
             sid_full = jnp.concatenate(
-                [jnp.zeros((B, P), jnp.int32), sid], axis=1)
+                [jnp.full((B, P), SHARED_SEGMENT_ID, jnp.int32), sid],
+                axis=1)
         logits, aux = forward(params, cfg, tokens, remat=remat,
                               positions=pos_full, segment_ids=sid_full,
                               **kwargs)
@@ -164,7 +180,8 @@ def make_ppo_update(cfg: ModelConfig, tc: TrainConfig, *,
                     lr_fn: Optional[Callable] = None,
                     with_entropy: bool = True,
                     packed: bool = False,
-                    use_global_norm: bool = False) -> Callable:
+                    use_global_norm: bool = False,
+                    donate_logprobs: bool = False) -> Callable:
     """Build ``update(params, opt_state, batch, step) -> (params,
     opt_state, metrics)`` running all K ppo epochs in one traced scan.
 
@@ -173,6 +190,13 @@ def make_ppo_update(cfg: ModelConfig, tc: TrainConfig, *,
     sequence-packed compact batch layout (see module docstring).  The
     returned function is pure — callers jit/pjit it with their own
     shardings and donation.
+
+    ``donate_logprobs=True`` changes the return to ``(params, opt_state,
+    logprobs_old, metrics)``: the rollout-logprobs plane is passed
+    through to an output so a caller that donates its buffer gets an
+    exact input-output alias — the (N, L) float32 buffer is reused in
+    place per bucket instead of staying live alongside the update's
+    scratch (the per-bucket twin of the params/opt-state donation).
     """
     K = int(ppo_epochs if ppo_epochs is not None else tc.ppo_epochs)
     K = max(K, 1)
@@ -198,6 +222,8 @@ def make_ppo_update(cfg: ModelConfig, tc: TrainConfig, *,
         (params, opt_state), ms = jax.lax.scan(
             epoch, (params, opt_state), None, length=K)
         metrics = {k: v[-1] for k, v in ms.items()}
+        if donate_logprobs:
+            return params, opt_state, batch["logprobs_old"], metrics
         return params, opt_state, metrics
 
     return update

@@ -8,6 +8,7 @@ from numpy.testing import assert_allclose
 
 from repro.kernels import ref
 from repro.kernels.flash_attention import flash_attention_pallas
+from repro.kernels.mamba_scan import mamba_scan_pallas
 from repro.kernels.paged_attention import (
     mla_paged_attention_pallas,
     paged_attention_pallas,
@@ -93,6 +94,41 @@ def test_flash_attention_segment_ids(causal, window):
     # sanity: the segment mask actually changed the result
     plain = ref.attention_ref(q, k, v, causal=causal, window=window)
     assert not np.allclose(np.asarray(want), np.asarray(plain))
+
+
+@pytest.mark.parametrize("causal,window", [(True, 0), (True, 12)])
+def test_flash_attention_segment_ids_chunked_prefill(causal, window):
+    """Chunked prefill packs too: segment_ids label the KV axis and the
+    q chunk's labels are the slice at q_offset.  A SHARED (-2) prefix
+    block is attendable by every segment."""
+    B, Sq, Skv, Hq, Hkv, D = 2, 16, 48, 4, 2, 32
+    ks = jax.random.split(jax.random.PRNGKey(11), 3)
+    q = jax.random.normal(ks[0], (B, Sq, Hq, D))
+    k = jax.random.normal(ks[1], (B, Skv, Hkv, D))
+    v = jax.random.normal(ks[2], (B, Skv, Hkv, D))
+    seg = np.full((B, Skv), -1, np.int32)
+    seg[0, :6] = ref.SHARED_SEGMENT_ID          # shared modality prefix
+    seg[0, 6:24], seg[0, 24:44] = 0, 1
+    seg[1, :30], seg[1, 30:48] = 0, 1
+    seg = jnp.asarray(seg)
+    q_off = Skv - Sq
+    got = flash_attention_pallas(q, k, v, causal=causal, window=window,
+                                 q_offset=q_off, segment_ids=seg,
+                                 blk_q=16, blk_k=16, interpret=True)
+    want = ref.attention_ref(q, k, v, causal=causal, window=window,
+                             q_offset=q_off, segment_ids=seg)
+    assert_allclose(np.asarray(got), np.asarray(want), rtol=3e-5, atol=3e-5)
+    # the segment mask binds, and the shared prefix really is attended:
+    # scrubbing it changes row 0's output
+    plain = ref.attention_ref(q, k, v, causal=causal, window=window,
+                              q_offset=q_off)
+    assert not np.allclose(np.asarray(want), np.asarray(plain))
+    if window == 0:  # a binding window already hides the distant prefix
+        seg_noshare = seg.at[0, :6].set(-1)
+        scrubbed = ref.attention_ref(q, k, v, causal=causal, window=window,
+                                     q_offset=q_off,
+                                     segment_ids=seg_noshare)
+        assert not np.allclose(np.asarray(want)[0], np.asarray(scrubbed)[0])
 
 
 @pytest.mark.parametrize("dtype", [jnp.bfloat16])
@@ -234,6 +270,102 @@ def test_wkv6(B, T, H, D):
     s0 = jax.random.normal(ks[5], (B, H, D, D))
     got_o, got_s = wkv6_pallas(r, k, v, w, u, s0, interpret=True)
     want_o, want_s = ref.wkv6_ref(r, k, v, w, u, s0)
+    assert_allclose(np.asarray(got_o), np.asarray(want_o),
+                    rtol=5e-4, atol=5e-4)
+    assert_allclose(np.asarray(got_s), np.asarray(want_s),
+                    rtol=5e-4, atol=5e-4)
+
+
+def _segment_layout(B, T, seed=0):
+    """Ragged per-row segment labels with a tail pad, plus the column
+    span of one interior segment per row (for leak checks)."""
+    seg = np.full((B, T), -1, np.int32)
+    spans = []
+    cuts = [0, T // 3, 2 * T // 3, T - 2]
+    for b in range(B):
+        for s in range(len(cuts) - 1):
+            seg[b, cuts[s]: cuts[s + 1]] = s
+        spans.append((cuts[1], cuts[2]))
+    return jnp.asarray(seg), spans
+
+
+@pytest.mark.parametrize("B,T,d_in,N", [(2, 24, 8, 4), (1, 33, 16, 8)])
+def test_mamba_scan_segment_reset(B, T, d_in, N):
+    """Segment-reset parity (Pallas vs ref), per-segment equivalence to a
+    fresh scan, and the leak case: without the reset, state from the
+    previous segment would contaminate the next one."""
+    ks = jax.random.split(jax.random.PRNGKey(12), 5)
+    u = jax.random.normal(ks[0], (B, T, d_in))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B, T, d_in)))
+    B_ = jax.random.normal(ks[2], (B, T, N))
+    C_ = jax.random.normal(ks[3], (B, T, N))
+    A = -jnp.exp(jax.random.normal(ks[4], (d_in, N)) * 0.3)
+    D = jnp.ones((d_in,))
+    h0 = jnp.zeros((B, d_in, N))
+    seg, spans = _segment_layout(B, T)
+    got_y, got_h = mamba_scan_pallas(u, dt, B_, C_, A, D, h0, seg,
+                                     blk_d=d_in, interpret=True)
+    want_y, want_h = ref.mamba_scan_ref(u, dt, B_, C_, A, D, h0,
+                                        segment_ids=seg)
+    assert_allclose(np.asarray(got_y), np.asarray(want_y),
+                    rtol=2e-5, atol=2e-5)
+    assert_allclose(np.asarray(got_h), np.asarray(want_h),
+                    rtol=2e-5, atol=2e-5)
+    lo, hi = spans[0]
+    # the interior segment scans exactly as it would in its own row
+    solo_y, _ = ref.mamba_scan_ref(u[:, lo:hi], dt[:, lo:hi], B_[:, lo:hi],
+                                   C_[:, lo:hi], A, D, h0)
+    assert_allclose(np.asarray(want_y[:, lo:hi]), np.asarray(solo_y),
+                    rtol=1e-5, atol=1e-5)
+    # leak case: dropping the reset changes that segment's output
+    leak_y, _ = ref.mamba_scan_ref(u, dt, B_, C_, A, D, h0)
+    assert not np.allclose(np.asarray(leak_y[:, lo:hi]),
+                           np.asarray(solo_y))
+
+
+@pytest.mark.parametrize("B,T,H,D", [(2, 24, 2, 8), (1, 33, 1, 16)])
+def test_wkv6_segment_reset(B, T, H, D):
+    """Segment-reset parity (Pallas vs ref), per-segment equivalence to a
+    fresh recurrence, and the leak case without the reset."""
+    ks = jax.random.split(jax.random.PRNGKey(13), 5)
+    r, k, v = (jax.random.normal(ks[i], (B, T, H, D)) for i in range(3))
+    w = jax.nn.sigmoid(jax.random.normal(ks[3], (B, T, H, D)) + 2.0)
+    u = jax.random.normal(ks[4], (H, D))
+    s0 = jnp.zeros((B, H, D, D))
+    seg, spans = _segment_layout(B, T)
+    got_o, got_s = wkv6_pallas(r, k, v, w, u, s0, seg, interpret=True)
+    want_o, want_s = ref.wkv6_ref(r, k, v, w, u, s0, segment_ids=seg)
+    assert_allclose(np.asarray(got_o), np.asarray(want_o),
+                    rtol=5e-4, atol=5e-4)
+    assert_allclose(np.asarray(got_s), np.asarray(want_s),
+                    rtol=5e-4, atol=5e-4)
+    lo, hi = spans[0]
+    solo_o, _ = ref.wkv6_ref(r[:, lo:hi], k[:, lo:hi], v[:, lo:hi],
+                             w[:, lo:hi], u, s0)
+    assert_allclose(np.asarray(want_o[:, lo:hi]), np.asarray(solo_o),
+                    rtol=1e-5, atol=1e-5)
+    leak_o, _ = ref.wkv6_ref(r, k, v, w, u, s0)
+    assert not np.allclose(np.asarray(leak_o[:, lo:hi]),
+                           np.asarray(solo_o))
+
+
+def test_recurrent_segment_dispatch_interpret(monkeypatch):
+    """REPRO_PALLAS_INTERPRET=1 routes the segment-reset kops through the
+    interpreted kernels; parity with the forced-reference path."""
+    from repro.kernels import ops as kops
+
+    B, T, H, D = 1, 12, 2, 8
+    ks = jax.random.split(jax.random.PRNGKey(14), 5)
+    r, k, v = (jax.random.normal(ks[i], (B, T, H, D)) for i in range(3))
+    w = jax.nn.sigmoid(jax.random.normal(ks[3], (B, T, H, D)))
+    u = jax.random.normal(ks[4], (H, D))
+    s0 = jnp.zeros((B, H, D, D))
+    seg = jnp.asarray(np.repeat([[0, 1, 2]], 4, axis=1).reshape(1, 12))
+    monkeypatch.setenv("REPRO_PALLAS_INTERPRET", "1")
+    got_o, got_s = kops.wkv6(r, k, v, w, u, s0, segment_ids=seg)
+    monkeypatch.setenv("REPRO_PALLAS_INTERPRET", "0")
+    monkeypatch.setenv("REPRO_FORCE_REF", "1")
+    want_o, want_s = kops.wkv6(r, k, v, w, u, s0, segment_ids=seg)
     assert_allclose(np.asarray(got_o), np.asarray(want_o),
                     rtol=5e-4, atol=5e-4)
     assert_allclose(np.asarray(got_s), np.asarray(want_s),

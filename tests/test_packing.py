@@ -51,33 +51,40 @@ def test_ffd_first_fit_order_and_capacity():
     assert len(rows) == 3  # [16], [10, 6], [4, 2]
 
 
-def test_packing_supported_gates_archs_and_pjit_specs():
-    """Packing is exact only for attention-only archs with no shared
-    per-row conditioning; the pjit train specs and train step must
-    agree on the same predicate (dense layout for SSM/RWKV hybrids and
-    encoder/prefix archs, packed tables otherwise), and the trainer
-    must refuse a pack_sequences config it cannot honor."""
+def test_packing_supported_universal_and_pjit_specs_packed():
+    """Since the segment-reset kernels, packing is exact for EVERY arch
+    (SSM/RWKV state resets, shared-prefix segment, per-row encoder
+    conditioning) — the gate is universally true and the pjit train_4k
+    specs ship the packed compact layout (segment tables, no dense
+    mask/advantage planes) for all 11 archs."""
+    from repro.configs import ALL_ARCHS
     from repro.launch.steps import input_specs
     from repro.rl.packing import packing_supported
 
-    for arch, want in (("qwen2.5-7b", True), ("deepseek-v3-671b", True),
-                       ("jamba-v0.1-52b", False), ("rwkv6-7b", False),
-                       ("whisper-tiny", False), ("llava-next-34b", False)):
+    assert len(ALL_ARCHS) == 11
+    for arch in ALL_ARCHS:
         cfg = get_config(arch)
-        assert packing_supported(cfg) is want
+        assert packing_supported(cfg) is True, arch
         specs = input_specs(cfg, "train_4k")
-        assert ("seg_adv" in specs) == want
-        assert ("response_mask" in specs) == (not want)
+        assert "seg_adv" in specs, arch
+        assert "seg_prompt_lens" in specs and "seg_resp_lens" in specs
+        assert "response_mask" not in specs and "advantages" not in specs
 
 
-def test_trainer_rejects_pack_sequences_on_unsupported_arch():
+def test_trainer_accepts_pack_sequences_on_hybrid_archs():
+    """The old attention-only guard is retired: hybrid (SSM/RWKV) and
+    encoder/prefix configs construct with pack_sequences=True."""
     from repro.configs.base import TreeConfig
     from repro.rl.trainer import RLTrainer, TrainerMode
 
-    cfg = get_config("jamba-v0.1-52b", smoke=True)
-    with pytest.raises(ValueError, match="pack_sequences"):
-        RLTrainer(cfg, TrainConfig(pack_sequences=True), TreeConfig(),
-                  TrainerMode.TREEPO)
+    for arch in ("jamba-v0.1-52b", "rwkv6-7b"):
+        cfg = get_config(arch, smoke=True)
+        tr = RLTrainer(cfg, TrainConfig(pack_sequences=True), TreeConfig(),
+                       TrainerMode.TREEPO,
+                       engine_kwargs=dict(num_pages=64, page_size=16,
+                                          max_slots=8, max_queries=4,
+                                          max_prompt_len=64))
+        assert tr.train_cfg.pack_sequences
 
 
 def test_bucket_segments_quantum():

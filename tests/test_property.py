@@ -188,6 +188,99 @@ def test_top_p_mask_keeps_nucleus(logits, p):
 
 
 # ---------------------------------------------------------------------------
+# sequence packing (repro.rl.packing)
+# ---------------------------------------------------------------------------
+
+@st.composite
+def _packing_case(draw):
+    """Random trajectory (prompt_len, resp_len) pairs + a row capacity.
+
+    Lengths may exceed the capacity (oversized trajectories get dedicated
+    rows) and prompts may be empty (fallback-style segments)."""
+    n = draw(st.integers(1, 20))
+    plens = draw(st.lists(st.integers(0, 12), min_size=n, max_size=n))
+    rlens = draw(st.lists(st.integers(1, 24), min_size=n, max_size=n))
+    capacity = draw(st.integers(4, 48))
+    return plens, rlens, capacity
+
+
+@SETTINGS
+@given(_packing_case())
+def test_ffd_places_each_item_once_and_never_overflows(case):
+    from repro.rl.packing import first_fit_decreasing
+
+    plens, rlens, capacity = case
+    lengths = [p + r for p, r in zip(plens, rlens)]
+    rows = first_fit_decreasing(lengths, capacity)
+    placed = sorted(i for row in rows for i in row)
+    assert placed == list(range(len(lengths)))     # exactly once
+    for row in rows:
+        total = sum(lengths[i] for i in row)
+        # a row only exceeds capacity when a single oversized item owns it
+        assert total <= capacity or len(row) == 1
+    assert len(rows) <= len(lengths)
+
+
+@SETTINGS
+@given(_packing_case())
+def test_segment_tables_roundtrip_through_packed_row_tensors(case):
+    """Tables built from an FFD pack must decode (via the ONE shared
+    derivation) back to exactly the packed layout: per-segment column
+    counts, within-segment positions, response spans, -1 pads — and no
+    row overflows the bucket length."""
+    from repro.rl.packing import first_fit_decreasing, packed_row_tensors
+
+    plens, rlens, capacity = case
+    lengths = [p + r for p, r in zip(plens, rlens)]
+    L = max([capacity] + lengths)                  # bucket covers oversize
+    rows = first_fit_decreasing(lengths, L)
+    N, S = len(rows), max(len(r) for r in rows)
+    seg_p = np.zeros((N, S), np.int32)
+    seg_r = np.zeros((N, S), np.int32)
+    for i, row in enumerate(rows):
+        for s, j in enumerate(row):
+            seg_p[i, s] = plens[j]
+            seg_r[i, s] = rlens[j]
+    tot = seg_p + seg_r
+    assert (tot.sum(axis=1) <= L).all()            # no row overflow
+    sid, pos, rmask = packed_row_tensors(seg_p, seg_r, L)
+    for i in range(N):
+        off = 0
+        for s in range(S):
+            t = int(tot[i, s])
+            if t == 0:
+                continue
+            assert (sid[i, off: off + t] == s).all()
+            np.testing.assert_array_equal(pos[i, off: off + t],
+                                          np.arange(t))
+            np.testing.assert_array_equal(
+                rmask[i, off: off + t],
+                (np.arange(t) >= seg_p[i, s]).astype(np.float32))
+            off += t
+        assert (sid[i, off:] == -1).all()          # pads, nothing else
+        assert (rmask[i, off:] == 0).all()
+    # every trajectory's response is scored exactly once across the pack
+    assert int(rmask.sum()) == sum(rlens)
+
+
+@SETTINGS
+@given(_packing_case())
+def test_packed_pad_fraction_never_exceeds_unpacked(case):
+    """At the same bucket length, FFD packing can only reduce (or keep)
+    the padded-token fraction of the grid the update runs."""
+    from repro.rl.packing import first_fit_decreasing
+
+    plens, rlens, capacity = case
+    lengths = [p + r for p, r in zip(plens, rlens)]
+    L = max([capacity] + lengths)
+    rows = first_fit_decreasing(lengths, L)
+    used = sum(lengths)
+    unpacked = 1.0 - used / float(len(lengths) * L)
+    packed = 1.0 - used / float(len(rows) * L)
+    assert packed <= unpacked + 1e-12
+
+
+# ---------------------------------------------------------------------------
 # ancestor matrix
 # ---------------------------------------------------------------------------
 

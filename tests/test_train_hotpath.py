@@ -1,7 +1,11 @@
 """Training-side hot path: mixed-depth branching budgets, fallback
 segment-logprob inheritance, reward memoization, double-release
-idempotency, new-vs-legacy build/update parity, and
-packed-vs-unpacked (sequence packing) build/update parity."""
+idempotency, new-vs-legacy build/update parity, packed-vs-unpacked
+(sequence packing) build/update parity — including the seeded
+all-11-arch sweep and the hybrid (SSM/RWKV) full-pipeline parity the
+universal packer is gated on — and the donated rollout-logprobs buffer
+aliasing regression."""
+import dataclasses
 import random
 
 import jax
@@ -9,7 +13,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.configs import get_config
+from repro.configs import ALL_ARCHS, get_config
 from repro.configs.base import TrainConfig, TreeConfig
 from repro.core import advantage as adv_mod
 from repro.core.branching import depth_budget, mixed_depth_budgets
@@ -353,6 +357,275 @@ def test_packed_train_step_end_to_end():
     if "loss" in m:                        # batch may be starved
         assert np.isfinite(m["loss"])
         assert 0.0 <= m["padded_token_fraction"] < 1.0
+
+
+# ---------------------------------------------------------------------------
+# universal packing: seeded packed-vs-unpacked parity across ALL archs
+# ---------------------------------------------------------------------------
+
+def _synthetic_layouts(cfg, seed):
+    """One deterministic trajectory set in both layouts.
+
+    Mixed-depth-style lengths so FFD really bins (3 trajectories -> 2
+    packed rows at the same bucket length); identical per-row modality
+    stubs where the arch needs them (shared conditioning is the packed
+    convention).  Returns (dense_batch, packed_batch)."""
+    from repro.rl.packing import bucket_segments, first_fit_decreasing
+
+    rng = np.random.default_rng(seed)
+    trajs = [(3, 6), (2, 9), (4, 3)]            # (prompt_len, resp_len)
+    L = 16
+    N = len(trajs)
+    rows = []
+    for n_p, n_r in trajs:
+        toks = rng.integers(1, cfg.vocab_size, n_p + n_r).astype(np.int32)
+        lps = (-rng.uniform(0.1, 2.0, n_r)).astype(np.float32)
+        adv = float(rng.normal())
+        rows.append((toks, n_p, n_r, lps, adv))
+
+    tokens = np.zeros((N, L), np.int32)
+    rmask = np.zeros((N, L), np.float32)
+    lp_old = np.zeros((N, L), np.float32)
+    advs = np.zeros((N, L), np.float32)
+    for i, (toks, n_p, n_r, lps, adv) in enumerate(rows):
+        tokens[i, : n_p + n_r] = toks
+        rmask[i, n_p: n_p + n_r] = 1.0
+        lp_old[i, n_p: n_p + n_r] = lps
+        advs[i, n_p: n_p + n_r] = adv
+    dense = {"tokens": jnp.asarray(tokens),
+             "response_mask": jnp.asarray(rmask),
+             "logprobs_old": jnp.asarray(lp_old),
+             "advantages": jnp.asarray(advs)}
+
+    totals = [n_p + n_r for _, n_p, n_r, _, _ in rows]
+    packing_rows = first_fit_decreasing(totals, L)
+    assert len(packing_rows) < N                # FFD really binned
+    Np = len(packing_rows)
+    S = bucket_segments(max(len(r) for r in packing_rows))
+    ptoks = np.zeros((Np, L), np.int32)
+    plp = np.zeros((Np, L), np.float32)
+    seg_p = np.zeros((Np, S), np.int32)
+    seg_r = np.zeros((Np, S), np.int32)
+    seg_a = np.zeros((Np, S), np.float32)
+    for i, members in enumerate(packing_rows):
+        off = 0
+        for s, j in enumerate(members):
+            toks, n_p, n_r, lps, adv = rows[j]
+            ptoks[i, off: off + n_p + n_r] = toks
+            plp[i, off + n_p: off + n_p + n_r] = lps
+            seg_p[i, s], seg_r[i, s], seg_a[i, s] = n_p, n_r, adv
+            off += n_p + n_r
+    packed = {"tokens": jnp.asarray(ptoks),
+              "logprobs_old": jnp.asarray(plp),
+              "seg_prompt_lens": jnp.asarray(seg_p),
+              "seg_resp_lens": jnp.asarray(seg_r),
+              "seg_adv": jnp.asarray(seg_a)}
+
+    if cfg.frontend is not None and cfg.frontend.kind == "vision":
+        pre = rng.normal(size=(1, cfg.frontend.num_prefix_tokens,
+                               cfg.frontend.embed_dim)).astype(np.float32)
+        dense["prefix_embeds"] = jnp.asarray(np.repeat(pre, N, axis=0))
+        packed["prefix_embeds"] = jnp.asarray(np.repeat(pre, Np, axis=0))
+    if cfg.encoder is not None:
+        frames = rng.normal(size=(1, 8, cfg.encoder.d_model)).astype(
+            np.float32)
+        dense["enc_frames"] = jnp.asarray(np.repeat(frames, N, axis=0))
+        packed["enc_frames"] = jnp.asarray(np.repeat(frames, Np, axis=0))
+    return dense, packed
+
+
+@pytest.mark.parametrize("arch", ALL_ARCHS)
+def test_packed_vs_unpacked_update_parity_all_archs(arch):
+    """One seeded PG update (the train_step's update half, shared with
+    the pjit train_4k case) in both layouts for every architecture —
+    attention, MLA, MoE, sliding-window, SSM/RWKV hybrids, encoder and
+    vision-prefix — must land on the same loss and the same parameters
+    (<= 1e-3): segment-masked attention + per-segment position and
+    recurrent-state resets make packing exact everywhere.
+
+    The MoE aux loss is zeroed: it is batch-composition-dependent by
+    construction (pad tokens route too), so it legitimately differs
+    between layouts; routing itself still runs in fwd+bwd."""
+    from repro.models.model import init_params
+    from repro.optim import adamw_init
+    from repro.rl.update import make_ppo_update
+
+    cfg = get_config(arch, smoke=True)
+    if cfg.moe is not None:
+        cfg = dataclasses.replace(
+            cfg, moe=dataclasses.replace(cfg.moe, aux_loss_coef=0.0))
+    tc = TrainConfig(ppo_epochs=1, learning_rate=1e-3)
+    dense, packed = _synthetic_layouts(cfg, seed=17)
+    params = init_params(jax.random.PRNGKey(2), cfg)
+    opt = adamw_init(params)
+
+    upd_dense = make_ppo_update(cfg, tc)
+    upd_packed = make_ppo_update(cfg, tc, packed=True)
+    step = jnp.asarray(0, jnp.int32)
+    p1, _, m1 = upd_dense(params, opt, dense, step)
+    p2, _, m2 = upd_packed(params, opt, packed, step)
+
+    assert np.isfinite(float(m1["loss"]))
+    np.testing.assert_allclose(float(m2["loss"]), float(m1["loss"]),
+                               rtol=1e-4, atol=1e-6)
+    for key in ("pg_loss", "ratio_mean", "adv_mean"):
+        np.testing.assert_allclose(float(m2[key]), float(m1[key]),
+                                   rtol=1e-4, atol=1e-6)
+    for a, b in zip(jax.tree.leaves(p2), jax.tree.leaves(p1)):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32),
+                                   rtol=1e-3, atol=1e-5)
+
+
+@pytest.mark.parametrize("arch", ["jamba-v0.1-52b", "rwkv6-7b"])
+def test_full_train_pipeline_packed_vs_unpacked_hybrid(arch):
+    """The full trainer pipeline (one shared seeded rollout through the
+    real engine -> memoized rewards -> DAPO filter -> batched advantage
+    -> pack -> jitted K-epoch update) must land on the same loss and
+    params (<= 1e-3, the packing acceptance bound) in both layouts for
+    the SSM/RWKV hybrids — the archs the dense layout previously gated.
+    Rewards are injected (seeded) so the untrained policy still yields
+    non-degenerate groups.  One ppo epoch (the K-epoch scan is pinned by
+    the qwen parity tests) so the reported loss is computed from
+    identical params; params still get atol 1e-3 rather than the
+    synthetic sweep's 1e-5 — FFD reorders rows, and Adam amplifies the
+    resulting f32 reduction-order noise on near-zero gradient entries
+    to O(lr) regardless of layout correctness (the multi-segment
+    content itself is pinned by the all-arch sweep and the packing unit
+    tests).  The MoE aux loss (jamba) is zeroed for the same reason as
+    in the sweep: pad tokens route too, so the aux term is
+    batch-composition-dependent by construction."""
+    cfg = get_config(arch, smoke=True)
+    if cfg.moe is not None:
+        cfg = dataclasses.replace(
+            cfg, moe=dataclasses.replace(cfg.moe, aux_loss_coef=0.0))
+    tc = TreeConfig(max_depth=3, segment_len=8, max_width=4,
+                    branch_factor=2, init_divergence_low=2,
+                    init_divergence_high=2, temperature=0.9)
+    trc = TrainConfig(batch_size=2, group_size=4, oversample_factor=1,
+                      max_resample_rounds=0, learning_rate=5e-4,
+                      ppo_epochs=1, pack_sequences=True)
+    tr = RLTrainer(cfg, trc, tc, TrainerMode.TREEPO, seed=11,
+                   engine_kwargs=dict(num_pages=256, page_size=8,
+                                      max_slots=16, max_queries=8,
+                                      max_prompt_len=128),
+                   min_difficulty=1, max_difficulty=1)
+    trees, _ = tr.rollout(2)
+    rng = np.random.default_rng(11)
+    for t in trees:
+        for p in t.finished:
+            p.reward = round(float(rng.uniform()), 3)   # seeded memo
+    batch = tr.build_batch(trees)
+    assert batch.tokens.shape[0] > 0
+    packed = tr.build_batch_packed(trees)
+    assert packed.num_trajectories == batch.tokens.shape[0]
+    assert packed.tokens.shape[0] <= batch.tokens.shape[0]
+    snap = jax.tree.map(np.array, (tr.params, tr.opt_state))
+
+    m_unpacked = tr.update(batch)
+    unpacked_params = jax.tree.map(np.array, tr.params)
+
+    tr.params, tr.opt_state = jax.tree.map(jnp.asarray, snap)
+    m_packed = tr.update_packed(packed)
+    packed_params = jax.tree.map(np.array, tr.params)
+
+    assert np.isfinite(m_packed["loss"])
+    np.testing.assert_allclose(m_packed["loss"], m_unpacked["loss"],
+                               rtol=1e-4, atol=1e-5)
+    for a, b in zip(jax.tree.leaves(packed_params),
+                    jax.tree.leaves(unpacked_params)):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32),
+                                   rtol=1e-3, atol=1e-3)
+    # both bucketed updates donated their rollout-logprobs plane
+    assert len(tr._donated_lp_buckets) == 2
+
+
+def test_packed_bc_warmup_matches_dense():
+    """The packed BC warmup scores the same token set with the same
+    normalization as the dense one: from identical init, one step of
+    each lands on the same loss (the generator is re-seeded)."""
+    tr1 = _trainer(TrainerMode.TREEPO, seed=9)
+    m1 = tr1.bc_warmup(steps=3, batch_size=8, lr=1e-3, packed=False)
+    tr2 = _trainer(TrainerMode.TREEPO, seed=9)
+    m2 = tr2.bc_warmup(steps=3, batch_size=8, lr=1e-3, packed=True)
+    assert m2["bc_packed"] == 1.0
+    np.testing.assert_allclose(m2["bc_loss"], m1["bc_loss"],
+                               rtol=1e-4, atol=1e-6)
+    for a, b in zip(jax.tree.leaves(tr2.params),
+                    jax.tree.leaves(tr1.params)):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32),
+                                   rtol=1e-3, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# per-bucket donation of the rollout logprobs buffer
+# ---------------------------------------------------------------------------
+
+def _assert_aliases_logprobs(tr, lowered, lp_bytes):
+    """alias_size_in_bytes must cover params + opt-state + the donated
+    rollout-logprobs plane — the compile-time proof the executable
+    reuses the buffer in place (runtime pointer identity is an
+    allocator detail and is deliberately not asserted)."""
+    ma = lowered.compile().memory_analysis()
+    if ma is None or not hasattr(ma, "alias_size_in_bytes"):
+        pytest.skip("backend exposes no memory analysis")
+    params_bytes = sum(a.nbytes for a in jax.tree.leaves(tr.params))
+    opt_bytes = sum(a.nbytes for a in jax.tree.leaves(tr.opt_state))
+    assert ma.alias_size_in_bytes >= params_bytes + opt_bytes + lp_bytes
+
+
+def test_update_donates_rollout_logprobs_buffer():
+    """Mirror of the PR 3 params/opt aliasing check, extended to the
+    rollout-logprobs plane: the compiled (N, L) bucket update aliases
+    the donated f32 plane into its output, and calling it consumes
+    (deletes) the donated input."""
+    tr = _trainer(TrainerMode.TREEPO, seed=1)
+    Nb, L = 4, 64
+    fn = tr._get_update_fn(Nb, L)
+    rng = np.random.default_rng(0)
+    tokens = jnp.asarray(rng.integers(1, tr.cfg.vocab_size, (Nb, L)),
+                         jnp.int32)
+    plens = jnp.asarray(np.full((Nb,), 4), jnp.int32)
+    rlens = jnp.asarray(np.full((Nb,), 8), jnp.int32)
+    lp = jnp.asarray(rng.normal(size=(Nb, L)).astype(np.float32))
+    adv = jnp.asarray(rng.normal(size=(Nb,)).astype(np.float32))
+    step = jnp.asarray(0, jnp.int32)
+
+    lowered = fn.lower(tr.params, tr.opt_state, tokens, plens, rlens,
+                       np.zeros((Nb, L), np.float32), adv, step)
+    _assert_aliases_logprobs(tr, lowered, Nb * L * 4)
+
+    tr.params, tr.opt_state, lp_out, _ = fn(
+        tr.params, tr.opt_state, tokens, plens, rlens, lp, adv, step)
+    assert lp.is_deleted()                       # donation consumed
+    assert lp_out.shape == (Nb, L) and lp_out.dtype == jnp.float32
+
+
+def test_packed_update_donates_rollout_logprobs_buffer():
+    """Same aliasing contract for the packed (N, L, S) bucket update."""
+    tr = _trainer(TrainerMode.TREEPO, seed=1)
+    Nb, L, S = 4, 64, 2
+    fn = tr._get_packed_update_fn(Nb, L, S)
+    rng = np.random.default_rng(0)
+    tokens = jnp.asarray(rng.integers(1, tr.cfg.vocab_size, (Nb, L)),
+                         jnp.int32)
+    seg_p = jnp.asarray(np.tile([4, 3], (Nb, 1)), jnp.int32)
+    seg_r = jnp.asarray(np.tile([8, 6], (Nb, 1)), jnp.int32)
+    seg_a = jnp.asarray(rng.normal(size=(Nb, S)).astype(np.float32))
+    lp = jnp.asarray(rng.normal(size=(Nb, L)).astype(np.float32))
+    step = jnp.asarray(0, jnp.int32)
+
+    lowered = fn.lower(tr.params, tr.opt_state, tokens,
+                       np.zeros((Nb, L), np.float32), seg_p, seg_r,
+                       seg_a, step)
+    _assert_aliases_logprobs(tr, lowered, Nb * L * 4)
+
+    tr.params, tr.opt_state, lp_out, _ = fn(
+        tr.params, tr.opt_state, tokens, lp, seg_p, seg_r, seg_a, step)
+    assert lp.is_deleted()
+    assert lp_out.shape == (Nb, L) and lp_out.dtype == jnp.float32
 
 
 def test_update_pads_batch_rows_without_changing_loss():
