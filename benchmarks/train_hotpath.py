@@ -18,9 +18,12 @@ through both training paths:
   attention and per-segment RoPE resets derived on device.
 
 Reported per mode: host-pack bytes per step, build (reward → advantage
-→ pack) wall time, steady-state (post-compile) update wall time, and —
-for the unpacked-vs-packed comparison — the padded-token fraction of
-the (N, L) grid (the fwd/bwd FLOP waste packing exists to shrink).
+→ pack) wall time, steady-state (post-compile) update wall time, a
+``recompiles`` counter (XLA compilations observed during the
+steady-state timing reps — the one-compile-per-bucket invariant says
+0; counted via ``repro.core.guard.compile_delta``), and — for the
+unpacked-vs-packed comparison — the padded-token fraction of the
+(N, L) grid (the fwd/bwd FLOP waste packing exists to shrink).
 Wall-clock on this container is relative, not TPU; the byte counts and
 pad fractions are exact.  Emits ``results/BENCH_train.json``.
 
@@ -42,6 +45,7 @@ import numpy as np
 
 from benchmarks.common import fmt_row, warmed_trainer
 from repro.configs.base import TrainConfig, TreeConfig
+from repro.core.guard import compile_delta
 from repro.rl.trainer import TrainerMode
 
 OUT_PATH = os.path.join(os.path.dirname(__file__), "..", "results",
@@ -129,15 +133,20 @@ def run(quick: bool = True, out_path: str = OUT_PATH) -> dict:
         snap = _snapshot(tr)
         tr.update(batch)            # compile the scanned K-epoch update
         _restore(tr, snap)
-        upd_s = _time_best(lambda: tr.update(batch), reps)
-        _restore(tr, snap)
         tr.update_legacy(legacy)    # compile the per-epoch legacy update
-        _restore(tr, snap)
-        legacy_upd_s = _time_best(lambda: tr.update_legacy(legacy), reps)
         _restore(tr, snap)
         tr.update_packed(packed)    # compile the packed K-epoch update
         _restore(tr, snap)
-        packed_upd_s = _time_best(lambda: tr.update_packed(packed), reps)
+        # steady state: every timed rep below must hit the warm per-
+        # bucket caches — `recompiles` records any that didn't
+        with compile_delta() as recompiles:
+            upd_s = _time_best(lambda: tr.update(batch), reps)
+            _restore(tr, snap)
+            legacy_upd_s = _time_best(
+                lambda: tr.update_legacy(legacy), reps)
+            _restore(tr, snap)
+            packed_upd_s = _time_best(
+                lambda: tr.update_packed(packed), reps)
 
         N, L = batch.tokens.shape
         Np = packed.tokens.shape[0]
@@ -156,6 +165,7 @@ def run(quick: bool = True, out_path: str = OUT_PATH) -> dict:
             "legacy_update_s": round(legacy_upd_s, 4),
             "update_dispatches_per_step": 1,
             "legacy_update_dispatches_per_step": ppo_epochs,
+            "recompiles": int(recompiles()),
             "padded_token_fraction": round(
                 batch.padded_token_fraction, 4),
             "packed": {

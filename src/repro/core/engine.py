@@ -46,6 +46,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig, TreeConfig
+from repro.core.guard import annotated_transfer
 from repro.kernels import ops as kops
 from repro.kv.cache import PagedKVState, bucket_pow2
 from repro.models import attention as attn
@@ -304,13 +305,15 @@ class TreeEngine:
         for buf, ps in groups.values():
             F = len(ps)
             Fb = _bucket(F)
-            rows = jnp.asarray([p.logits_row for p in ps] + [0] * (Fb - F),
-                               jnp.int32)
+            rows = annotated_transfer(
+                np.asarray([p.logits_row for p in ps] + [0] * (Fb - F),
+                           np.int32),
+                to="device", reason="fork-rows")
             tok, lp = fork_sample(buf, rows, self._next_key(),
                                   temperature=tc.temperature,
                                   top_p=tc.top_p)
-            tok = np.asarray(tok)
-            lp = np.asarray(lp)
+            # one batched pull for the round's divergence draws
+            tok, lp = annotated_transfer((tok, lp), reason="fork-draws")
             self.stats.host_bytes += tok.nbytes + lp.nbytes
             self.stats.fork_dispatches += 1
             for j, p in enumerate(ps):
@@ -387,18 +390,23 @@ class TreeEngine:
             pe = np.zeros((Qb,) + prefix_embeds.shape[1:],
                           prefix_embeds.dtype)
             pe[:Q] = prefix_embeds
-            prefix_embeds = jnp.asarray(pe)
+            prefix_embeds = pe
         if enc_frames is not None:
             ef = np.zeros((Qb,) + enc_frames.shape[1:], enc_frames.dtype)
             ef[:Q] = enc_frames
-            enc_frames = jnp.asarray(ef)
+            enc_frames = ef
 
         fn = self._get_prefill_fn(Qb, Sp, prefix_embeds is not None,
                                   enc_frames is not None)
+        # one batched h2d push for the whole prefill pack
+        (tokens, lengths, tables, slots, qslots, prefix_embeds,
+         enc_frames) = annotated_transfer(
+            (tokens, lengths, tables, slots, qslots, prefix_embeds,
+             enc_frames), to="device", reason="prefill-pack")
         pools, rec, cross, logits = fn(
             self.params, self.kv.kv_pools, self.kv.rec_state,
-            self.cross_pool, jnp.asarray(tokens), jnp.asarray(lengths),
-            jnp.asarray(tables), jnp.asarray(slots), jnp.asarray(qslots),
+            self.cross_pool, tokens, lengths,
+            tables, slots, qslots,
             prefix_embeds, enc_frames)
         self.kv.kv_pools = pools
         self.kv.rec_state = rec
@@ -522,10 +530,12 @@ class TreeEngine:
                             else self.scratch_slot], np.int32)
         qslots = np.asarray([max(child.qslot, 0)], np.int32)
         fn = self._get_prefill_fn(1, Sp, False, False)
+        toks, lengths, tables, slots, qslots = annotated_transfer(
+            (toks, lengths, tables, slots, qslots), to="device",
+            reason="replay-pack")
         pools, rec, cross, logits = fn(
             self.params, self.kv.kv_pools, self.kv.rec_state,
-            self.cross_pool, jnp.asarray(toks), jnp.asarray(lengths),
-            jnp.asarray(tables), jnp.asarray(slots), jnp.asarray(qslots),
+            self.cross_pool, toks, lengths, tables, slots, qslots,
             None, None)
         self.kv.kv_pools, self.kv.rec_state = pools, rec
         child.logits_buf = logits.astype(jnp.float32)   # stays on device
@@ -573,20 +583,20 @@ class TreeEngine:
         tables[R:, 0] = self.garbage_page
 
         fn = self._get_decode_fn(Rb, l)
+        tok0, lp0, pos0, tables, slots, qslots = annotated_transfer(
+            (tok0, lp0, pos0, tables, slots, qslots), to="device",
+            reason="decode-pack")
         pools, rec, toks, lps, pend_tok, pend_lp, last_logits = fn(
             self.params, self.kv.kv_pools, self.kv.rec_state,
-            self.cross_pool, jnp.asarray(tok0), jnp.asarray(lp0),
-            jnp.asarray(pos0), jnp.asarray(tables), jnp.asarray(slots),
-            jnp.asarray(qslots), self._next_key())
+            self.cross_pool, tok0, lp0, pos0, tables, slots,
+            qslots, self._next_key())
         self.kv.kv_pools = pools
         self.kv.rec_state = rec
         # steady-state host transfer: O(R*l) tokens/logprobs + O(R) pending
-        # scalars.  The (Rb, V) boundary logits stay on device — forks
-        # sample from them via fork_sample.
-        toks = np.asarray(toks)           # (Rb, l)
-        lps = np.asarray(lps)
-        pend_tok = np.asarray(pend_tok)
-        pend_lp = np.asarray(pend_lp)
+        # scalars, pulled in ONE batched device_get.  The (Rb, V) boundary
+        # logits stay on device — forks sample from them via fork_sample.
+        toks, lps, pend_tok, pend_lp = annotated_transfer(
+            (toks, lps, pend_tok, pend_lp), reason="decode-segment")
         self.stats.host_bytes += (toks.nbytes + lps.nbytes
                                   + pend_tok.nbytes + pend_lp.nbytes)
 

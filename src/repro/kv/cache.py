@@ -175,14 +175,21 @@ class PagedKVState:
         duplicate scatter updates to one index are order-unspecified in
         JAX, but duplicates of the *same* (src, dst) write identical bytes,
         so the result stays deterministic whatever rows the caller uses."""
+        # imported late: repro.core's __init__ pulls in engine, which
+        # imports this module — at call time the cycle has resolved
+        from repro.core.guard import annotated_transfer
+
         n = len(src)
         if n == 0:
             return (jnp.zeros((0,), jnp.int32), jnp.zeros((0,), jnp.int32),
                     0)
         nb = bucket_pow2(n)
         pad = nb - n
-        return (jnp.asarray(list(src) + [src[0]] * pad, jnp.int32),
-                jnp.asarray(list(dst) + [dst[0]] * pad, jnp.int32), nb)
+        src_d, dst_d = annotated_transfer(
+            (np.asarray(list(src) + [src[0]] * pad, np.int32),
+             np.asarray(list(dst) + [dst[0]] * pad, np.int32)),
+            to="device", reason="fork-tables")
+        return (src_d, dst_d, nb)
 
     def _get_fork_fn(self, n_pages: int, n_slots: int):
         """Jitted multi-layer copy, shaped by which state kinds fork this

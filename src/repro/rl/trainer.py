@@ -58,6 +58,7 @@ import numpy as np
 from repro.configs.base import ModelConfig, TrainConfig, TreeConfig
 from repro.core import advantage as adv_mod
 from repro.core.engine import TreeEngine
+from repro.core.guard import annotated_transfer
 from repro.core.loss import token_logprobs_from_logits
 from repro.core.sampler import sample_sequential, sample_trees
 from repro.core.tree import (
@@ -324,9 +325,12 @@ class RLTrainer:
             [t for t, _ in kept], self.tree_cfg.max_depth,
             group_pad=self.tree_cfg.max_width,
             query_pad=_bucket_rows(len(kept)))
-        adv_qg = np.asarray(adv_mod.batch_treepo_advantage(
-            jnp.asarray(rew_qg), jnp.asarray(anc), jnp.asarray(gmask),
-            variant=self._advantage_variant, use_global_norm=False))
+        rew_qg, anc, gmask = annotated_transfer(
+            (rew_qg, anc, gmask), to="device", reason="advantage-pack")
+        adv_qg = annotated_transfer(adv_mod.batch_treepo_advantage(
+            rew_qg, anc, gmask,
+            variant=self._advantage_variant, use_global_norm=False),
+            reason="advantage-rows")
 
         rows = []
         for qi, (tree, rewards) in enumerate(kept):
@@ -468,12 +472,14 @@ class RLTrainer:
         adv_traj = np.zeros((Nb,), np.float32)
         adv_traj[:N] = batch.adv_traj
         fn = self._get_update_fn(Nb, L)
+        pack = annotated_transfer(
+            (tokens, prompt_lens, resp_lens, lp_old, adv_traj,
+             np.asarray(self.step, np.int32)),
+            to="device", reason="update-pack")
         self.params, self.opt_state, _, m = fn(
-            self.params, self.opt_state,
-            jnp.asarray(tokens), jnp.asarray(prompt_lens),
-            jnp.asarray(resp_lens), jnp.asarray(lp_old),
-            jnp.asarray(adv_traj), jnp.asarray(self.step, jnp.int32))
+            self.params, self.opt_state, *pack)
         self._donated_lp_buckets.add((Nb, L))
+        m = annotated_transfer(m, reason="update-metrics")
         return {k: float(v) for k, v in m.items()}
 
     def _get_packed_update_fn(self, N: int, L: int, S: int):
@@ -522,12 +528,14 @@ class RLTrainer:
         seg_adv = np.zeros((Nb, S), np.float32)
         seg_adv[:N] = batch.seg_adv
         fn = self._get_packed_update_fn(Nb, L, S)
+        pack = annotated_transfer(
+            (tokens, lp_old, seg_plens, seg_rlens, seg_adv,
+             np.asarray(self.step, np.int32)),
+            to="device", reason="update-pack")
         self.params, self.opt_state, _, m = fn(
-            self.params, self.opt_state,
-            jnp.asarray(tokens), jnp.asarray(lp_old),
-            jnp.asarray(seg_plens), jnp.asarray(seg_rlens),
-            jnp.asarray(seg_adv), jnp.asarray(self.step, jnp.int32))
+            self.params, self.opt_state, *pack)
         self._donated_lp_buckets.add((Nb, L, S))
+        m = annotated_transfer(m, reason="update-metrics")
         return {k: float(v) for k, v in m.items()}
 
     # -- legacy reference path ---------------------------------------------------
@@ -542,10 +550,16 @@ class RLTrainer:
                                 rewards: np.ndarray) -> np.ndarray:
         variant = self._advantage_variant
         if variant == "grpo":
-            return np.asarray(adv_mod.grpo_advantage(jnp.asarray(rewards)))
+            r_dev = annotated_transfer(rewards, to="device",
+                                       reason="legacy-advantage")
+            return annotated_transfer(adv_mod.grpo_advantage(r_dev),
+                                      reason="legacy-advantage")
         anc = ancestor_matrix(tree.finished, self.tree_cfg.max_depth)
-        return np.asarray(adv_mod.treepo_advantage(
-            jnp.asarray(rewards), jnp.asarray(anc), variant=variant))
+        r_dev, anc_dev = annotated_transfer(
+            (rewards, anc), to="device", reason="legacy-advantage")
+        return annotated_transfer(
+            adv_mod.treepo_advantage(r_dev, anc_dev, variant=variant),
+            reason="legacy-advantage")
 
     def build_batch_legacy(self, trees: List[QueryTree]
                            ) -> LegacyRolloutBatch:
@@ -579,8 +593,11 @@ class RLTrainer:
             advsb[i, n_p: n_p + n_r] = a
             rew[i] = r
         if self._use_global_norm:
-            advsb = np.asarray(adv_mod.global_normalize(
-                jnp.asarray(advsb), jnp.asarray(rmask)))
+            advs_dev, rmask_dev = annotated_transfer(
+                (advsb, rmask), to="device", reason="legacy-globalnorm")
+            advsb = annotated_transfer(
+                adv_mod.global_normalize(advs_dev, rmask_dev),
+                reason="legacy-globalnorm")
         pack_bytes = (tokens.nbytes + rmask.nbytes + lp_old.nbytes +
                       advsb.nbytes)
         return LegacyRolloutBatch(
@@ -622,13 +639,15 @@ class RLTrainer:
         fn = self._get_legacy_update_fn(N, L)
         metrics: Dict[str, float] = {}
         for _ in range(self.train_cfg.ppo_epochs):
+            # the legacy inefficiency under measurement is the re-ship
+            # per epoch — annotated so the guard can tally its cost
+            pack = annotated_transfer(
+                (batch.tokens, batch.response_mask, batch.logprobs_old,
+                 batch.advantages, np.asarray(self.step, np.int32)),
+                to="device", reason="legacy-epoch-pack")
             self.params, self.opt_state, m = fn(
-                self.params, self.opt_state,
-                jnp.asarray(batch.tokens),
-                jnp.asarray(batch.response_mask),
-                jnp.asarray(batch.logprobs_old),
-                jnp.asarray(batch.advantages),
-                jnp.asarray(self.step, jnp.int32))
+                self.params, self.opt_state, *pack)
+            m = annotated_transfer(m, reason="update-metrics")
             metrics = {k: float(v) for k, v in m.items()}
         return metrics
 
@@ -738,7 +757,7 @@ class RLTrainer:
                 new_params, new_opt = adamw_update(params, grads,
                                                    opt_state, lr=lr)
                 return new_params, new_opt, loss
-            return jax.jit(run)
+            return jax.jit(run, donate_argnums=(0, 1))
 
         bc_step = _step(ce_loss_packed if packed else ce_loss)
 
@@ -764,9 +783,11 @@ class RLTrainer:
                     seg_slots=bucket_segments(
                         max(len(r) for r in packing_rows)),
                     pad_token=ByteTokenizer.PAD)
+                pack = annotated_transfer(
+                    (toks, seg_plens, seg_rlens), to="device",
+                    reason="bc-pack")
                 self.params, self.opt_state, loss = bc_step(
-                    self.params, self.opt_state, jnp.asarray(toks),
-                    jnp.asarray(seg_plens), jnp.asarray(seg_rlens))
+                    self.params, self.opt_state, *pack)
             else:
                 toks = np.full((batch_size, L), ByteTokenizer.PAD,
                                np.int32)
@@ -775,10 +796,11 @@ class RLTrainer:
                     toks[i, : len(q)] = q
                     toks[i, len(q): len(q) + len(c)] = c
                     mask[i, len(q): len(q) + len(c)] = 1.0
+                pack = annotated_transfer((toks, mask), to="device",
+                                          reason="bc-pack")
                 self.params, self.opt_state, loss = bc_step(
-                    self.params, self.opt_state, jnp.asarray(toks),
-                    jnp.asarray(mask))
-            last = float(loss)
+                    self.params, self.opt_state, *pack)
+            last = float(annotated_transfer(loss, reason="bc-loss"))
         # reset optimizer state for the RL phase (fresh moments)
         self.opt_state = adamw_init(self.params)
         return {"bc_loss": last, "bc_steps": float(steps),

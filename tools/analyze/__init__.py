@@ -1,0 +1,34 @@
+"""repro-lint: the repo-specific hot-path static analyzer.
+
+Usage::
+
+    python -m tools.analyze src/repro          # CI entry (baseline-gated)
+    python -m tools.analyze --explain R1       # rule rationale + doc anchor
+    python -m tools.analyze --write-baseline   # regenerate the ledger
+
+Rules (see ``docs/static_analysis.md``): R1 host-sync, R2 donation
+hygiene, R3 recompile hazards, R4 kernel-surface parity.  The runtime
+half of the enforcement layer is ``repro.core.guard``.
+"""
+from .baseline import (DEFAULT_BASELINE, apply_baseline, load_baseline,
+                       write_baseline)
+from .core import Index, index_sources, load_index
+from .rules import RULES, Finding, run_rules
+
+__all__ = [
+    "Index", "index_sources", "load_index",
+    "Finding", "RULES", "run_rules",
+    "DEFAULT_BASELINE", "load_baseline", "write_baseline",
+    "apply_baseline",
+    "analyze_paths", "analyze_sources",
+]
+
+
+def analyze_sources(sources):
+    """Run all rules over {repo-relative-path: source} (fixture entry)."""
+    return run_rules(index_sources(sources))
+
+
+def analyze_paths(root, paths):
+    """Run all rules over files/dirs under ``root``."""
+    return run_rules(load_index(root, list(paths)))

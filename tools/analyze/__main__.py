@@ -1,0 +1,100 @@
+"""CLI for repro-lint: ``python -m tools.analyze [paths...]``.
+
+Exit status: 0 = clean (every finding baselined, no stale entries),
+1 = new findings and/or stale baseline entries, 2 = usage error.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+from typing import List
+
+from . import (DEFAULT_BASELINE, analyze_paths, apply_baseline,
+               load_baseline, write_baseline)
+from .rules import RULES
+
+
+def _repo_root() -> str:
+    return os.path.dirname(os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))))
+
+
+def _explain(rule_id: str) -> int:
+    doc = RULES.get(rule_id.upper())
+    if doc is None:
+        print(f"unknown rule {rule_id!r}; known: "
+              f"{', '.join(sorted(RULES))}", file=sys.stderr)
+        return 2
+    print(f"{doc.rule_id} — {doc.title}\n")
+    print(doc.rationale)
+    print(f"\nSee: {doc.doc_anchor}")
+    return 0
+
+
+def main(argv: List[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m tools.analyze",
+        description="repro-lint: hot-path static analyzer (R1 host-sync, "
+                    "R2 donation, R3 recompile, R4 kernel parity)")
+    ap.add_argument("paths", nargs="*", default=None,
+                    help="files/dirs to analyze (default: src/repro)")
+    ap.add_argument("--root", default=None,
+                    help="tree root the paths are relative to "
+                         "(default: this repo's root)")
+    ap.add_argument("--baseline", default=DEFAULT_BASELINE,
+                    help="baseline JSON (default: tools/analyze/"
+                         "baseline.json)")
+    ap.add_argument("--no-baseline", action="store_true",
+                    help="report every finding, ignore the baseline")
+    ap.add_argument("--write-baseline", action="store_true",
+                    help="regenerate the baseline from current findings")
+    ap.add_argument("--explain", metavar="RULE_ID",
+                    help="print a rule's rationale and doc anchor")
+    ap.add_argument("--list-rules", action="store_true",
+                    help="list rule ids and titles")
+    args = ap.parse_args(argv)
+
+    if args.explain:
+        return _explain(args.explain)
+    if args.list_rules:
+        for doc in RULES.values():
+            print(f"{doc.rule_id}  {doc.title}")
+        return 0
+
+    root = os.path.abspath(args.root) if args.root else _repo_root()
+    paths = args.paths or ["src/repro"]
+    findings = analyze_paths(root, paths)
+
+    if args.write_baseline:
+        prev = load_baseline(args.baseline)
+        write_baseline(args.baseline, findings, prev)
+        print(f"wrote {len(findings)} finding(s) to {args.baseline}")
+        return 0
+
+    baseline = {} if args.no_baseline else load_baseline(args.baseline)
+    new, stale = apply_baseline(findings, baseline)
+
+    for f in new:
+        print(f.render())
+    if new:
+        rules_hit = sorted({f.rule for f in new})
+        print(f"\n{len(new)} new finding(s) "
+              f"[{', '.join(rules_hit)}] — run "
+              f"`python -m tools.analyze --explain <rule>` for rationale,"
+              " fix or (justified) add to the baseline with"
+              " --write-baseline")
+    if stale:
+        print(f"\n{len(stale)} stale baseline entr"
+              f"{'y' if len(stale) == 1 else 'ies'} (violation fixed but"
+              " still listed — regenerate with --write-baseline):")
+        for k in stale:
+            print(f"  {k}")
+    if not new and not stale:
+        print(f"repro-lint: clean ({len(findings)} baselined finding(s),"
+              f" {len(RULES)} rules)")
+    return 1 if (new or stale) else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

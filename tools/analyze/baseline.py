@@ -1,0 +1,70 @@
+"""Baseline file handling for repro-lint.
+
+The baseline is the *accepted-findings ledger*: findings whose keys
+appear in it are known and intentional (e.g. the legacy un-donated
+update jit kept as a parity oracle, shape-dispatch branches in
+``kernels/ops.py`` that bucketing makes deliberate).  Two failure
+modes are symmetric and both fatal:
+
+* a finding NOT in the baseline → new violation, fix it or (with a
+  written justification) ``--write-baseline``;
+* a baseline entry with NO matching finding → stale entry, the
+  violation was fixed but the ledger lies — regenerate it.
+
+Keys carry no line numbers, so unrelated edits don't churn the file.
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Dict, List, Sequence, Tuple
+
+from .rules import Finding
+
+BASELINE_VERSION = 1
+DEFAULT_BASELINE = os.path.join(os.path.dirname(__file__),
+                                "baseline.json")
+
+
+def load_baseline(path: str) -> Dict[str, str]:
+    """key -> justification. Missing file = empty baseline."""
+    if not os.path.exists(path):
+        return {}
+    with open(path, encoding="utf-8") as f:
+        data = json.load(f)
+    if data.get("version") != BASELINE_VERSION:
+        raise ValueError(
+            f"baseline {path}: unsupported version {data.get('version')!r}"
+            f" (expected {BASELINE_VERSION})")
+    entries = data.get("entries")
+    if not isinstance(entries, dict) or not all(
+            isinstance(k, str) and isinstance(v, str)
+            for k, v in entries.items()):
+        raise ValueError(f"baseline {path}: 'entries' must map "
+                         "finding keys to justification strings")
+    return dict(entries)
+
+
+def write_baseline(path: str, findings: Sequence[Finding],
+                   previous: Dict[str, str]) -> None:
+    """Regenerate the baseline from current findings, keeping the
+    justification text of entries that survive."""
+    entries = {
+        f.key: previous.get(f.key, f.message)
+        for f in findings
+    }
+    data = {"version": BASELINE_VERSION,
+            "entries": dict(sorted(entries.items()))}
+    with open(path, "w", encoding="utf-8") as f:
+        json.dump(data, f, indent=2, sort_keys=False)
+        f.write("\n")
+
+
+def apply_baseline(findings: Sequence[Finding],
+                   baseline: Dict[str, str]
+                   ) -> Tuple[List[Finding], List[str]]:
+    """Split findings into (new, stale-baseline-keys)."""
+    keys = {f.key for f in findings}
+    new = [f for f in findings if f.key not in baseline]
+    stale = sorted(k for k in baseline if k not in keys)
+    return new, stale

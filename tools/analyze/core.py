@@ -1,0 +1,647 @@
+"""AST core for ``repro-lint``: module index, cross-module call graph,
+traced-region reachability and tracer-taint dataflow.
+
+The analyzer is repo-specific by design: it resolves the idioms this
+codebase actually uses (factory functions returning closures that get
+jitted, per-bucket jit caches assigned through ``self._cache[key]``,
+``from repro.kernels import ops as kops`` aliasing) instead of trying
+to be a general-purpose type checker.  Everything is stdlib ``ast`` —
+no imports of the analyzed code, no third-party deps.
+
+Vocabulary:
+
+* **jit root** — a function object handed to a tracing entry point
+  (``jax.jit``, ``lax.scan``/``cond``/``while_loop``, ``pl.pallas_call``,
+  ``jax.grad`` / ``value_and_grad``, ``vmap``, ``shard_map``, ...) either
+  by name, decorator, or ``functools.partial(jax.jit, ...)``.
+* **traced region** — the call-graph closure of the jit roots: any
+  function reachable from a root (cross-module, via the import map and
+  factory-return resolution) executes under tracing, so host-sync
+  operations inside it are R1 findings.
+* **taint** — "this value derives from a traced function's runtime
+  arguments" (i.e. it is a tracer at trace time).  Static jit args,
+  closure constants and shape/dtype attributes are untainted.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import os
+from typing import Dict, Iterable, List, Optional, Sequence, Set, Tuple
+
+FuncId = Tuple[str, str]        # (module dotted name, qualified func name)
+
+# tracing entry points: canonical dotted name -> indices of positional
+# args that are traced callables
+TRACE_ENTRIES: Dict[str, Tuple[int, ...]] = {
+    "jax.jit": (0,),
+    "jax.pjit": (0,),
+    "jax.experimental.pjit.pjit": (0,),
+    "jax.lax.scan": (0,),
+    "jax.lax.while_loop": (0, 1),
+    "jax.lax.fori_loop": (2,),
+    "jax.lax.cond": (1, 2),
+    "jax.lax.switch": (1,),     # list of branches, handled specially
+    "jax.lax.map": (0,),
+    "jax.lax.associative_scan": (0,),
+    "jax.vmap": (0,),
+    "jax.grad": (0,),
+    "jax.value_and_grad": (0,),
+    "jax.checkpoint": (0,),
+    "jax.remat": (0,),
+    "jax.experimental.shard_map.shard_map": (0,),
+    "jax.experimental.pallas.pallas_call": (0,),
+}
+
+# import roots we canonicalize even without seeing their definition
+_WELL_KNOWN = {
+    "jnp": "jax.numpy",
+    "np": "numpy",
+    "onp": "numpy",
+    "lax": "jax.lax",
+    "pl": "jax.experimental.pallas",
+    "pltpu": "jax.experimental.pallas.tpu",
+}
+
+_BUILTINS = set(dir(__builtins__)) if not isinstance(__builtins__, dict) \
+    else set(__builtins__)
+
+
+def _arg_names(node: ast.FunctionDef) -> List[str]:
+    a = node.args
+    names = [x.arg for x in a.posonlyargs] + [x.arg for x in a.args] + \
+        [x.arg for x in a.kwonlyargs]
+    return names
+
+
+def _param_defaults(node: ast.FunctionDef) -> Dict[str, ast.AST]:
+    """param name -> default expr (positional + kwonly)."""
+    a = node.args
+    out: Dict[str, ast.AST] = {}
+    pos = a.posonlyargs + a.args
+    for name, default in zip([p.arg for p in pos[len(pos)
+                                                 - len(a.defaults):]],
+                             a.defaults):
+        out[name] = default
+    for p, d in zip(a.kwonlyargs, a.kw_defaults):
+        if d is not None:
+            out[p.arg] = d
+    return out
+
+
+@dataclasses.dataclass
+class JitSite:
+    """One ``jax.jit(...)`` (or partial/decorator) creation site."""
+
+    module: str
+    lineno: int
+    target: Optional[FuncId]            # the jitted function, if resolved
+    in_function: Optional[str]          # qualname of the enclosing function
+    in_loop: bool                       # lexically inside a for/while body
+    static_argnums: Optional[Tuple[int, ...]] = None
+    static_argnames: Optional[Tuple[str, ...]] = None
+    donate_argnums: Optional[Tuple[int, ...]] = None
+    donate_argnames: Optional[Tuple[str, ...]] = None
+    call_node: Optional[ast.Call] = None
+    entry: str = "jax.jit"              # which tracing entry created it
+
+
+@dataclasses.dataclass
+class FuncInfo:
+    module: str
+    qualname: str
+    node: ast.FunctionDef
+    parent: Optional[str]               # enclosing *function* qualname
+    params: List[str] = dataclasses.field(default_factory=list)
+    calls: Set[FuncId] = dataclasses.field(default_factory=set)
+    returns_funcs: Set[FuncId] = dataclasses.field(default_factory=set)
+    returns_jit: List[JitSite] = dataclasses.field(default_factory=list)
+    is_root: bool = False
+    traced: bool = False
+    static_params: Set[str] = dataclasses.field(default_factory=set)
+    jit_sites: List[JitSite] = dataclasses.field(default_factory=list)
+    # params whose default is a Python literal (config flags like
+    # ``causal=True`` — by convention passed as constants, not tracers)
+    literal_defaults: Set[str] = dataclasses.field(default_factory=set)
+
+    @property
+    def fid(self) -> FuncId:
+        return (self.module, self.qualname)
+
+
+@dataclasses.dataclass
+class ModuleInfo:
+    name: str                           # dotted module name
+    path: str                           # repo-relative path
+    tree: ast.Module
+    imports: Dict[str, str] = dataclasses.field(default_factory=dict)
+    # local name -> (module, attr) for from-imports of module members
+    from_imports: Dict[str, Tuple[str, str]] = dataclasses.field(
+        default_factory=dict)
+    functions: Dict[str, FuncInfo] = dataclasses.field(default_factory=dict)
+
+
+def shallow_walk(nodes) -> Iterable[ast.AST]:
+    """Like ``ast.walk`` over a statement list, but does NOT descend
+    into nested function/class definitions — their bodies belong to
+    their own :class:`FuncInfo` and double-recording them duplicates
+    call edges and jit sites."""
+    stack = list(nodes)
+    while stack:
+        node = stack.pop()
+        yield node
+        for child in ast.iter_child_nodes(node):
+            if isinstance(child, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                  ast.ClassDef, ast.Lambda)):
+                continue
+            stack.append(child)
+
+
+def module_name_for(path: str) -> str:
+    """repo-relative path -> dotted module name (src/ stripped)."""
+    rel = path.replace(os.sep, "/")
+    if rel.startswith("src/"):
+        rel = rel[len("src/"):]
+    rel = rel[:-3] if rel.endswith(".py") else rel
+    if rel.endswith("/__init__"):
+        rel = rel[: -len("/__init__")]
+    return rel.replace("/", ".")
+
+
+# ---------------------------------------------------------------------------
+# per-module indexing
+# ---------------------------------------------------------------------------
+
+class _Indexer(ast.NodeVisitor):
+    def __init__(self, mod: ModuleInfo):
+        self.mod = mod
+        self.stack: List[str] = []          # qualname parts (class + func)
+        self.func_stack: List[FuncInfo] = []
+        self.loop_depth = 0
+
+    # imports -----------------------------------------------------------------
+    def visit_Import(self, node: ast.Import) -> None:
+        for alias in node.names:
+            local = alias.asname or alias.name.split(".")[0]
+            target = alias.name if alias.asname else \
+                alias.name.split(".")[0]
+            self.mod.imports[local] = target
+
+    def visit_ImportFrom(self, node: ast.ImportFrom) -> None:
+        if node.module is None:
+            return
+        base = node.module
+        if node.level:          # relative import: resolve against module
+            parts = self.mod.name.split(".")
+            parts = parts[: len(parts) - node.level]
+            base = ".".join(parts + ([node.module] if node.module else []))
+        for alias in node.names:
+            local = alias.asname or alias.name
+            self.mod.from_imports[local] = (base, alias.name)
+
+    # defs --------------------------------------------------------------------
+    def _qual(self, name: str) -> str:
+        return ".".join(self.stack + [name])
+
+    def visit_ClassDef(self, node: ast.ClassDef) -> None:
+        self.stack.append(node.name)
+        self.generic_visit(node)
+        self.stack.pop()
+
+    def _visit_func(self, node: ast.FunctionDef) -> None:
+        qual = self._qual(node.name)
+        parent = self.func_stack[-1].qualname if self.func_stack else None
+        fi = FuncInfo(module=self.mod.name, qualname=qual, node=node,
+                      parent=parent, params=_arg_names(node),
+                      literal_defaults={
+                          name for name, d in _param_defaults(node).items()
+                          if isinstance(d, ast.Constant)})
+        self.mod.functions[qual] = fi
+        self.stack.append(node.name)
+        self.func_stack.append(fi)
+        self.generic_visit(node)
+        self.func_stack.pop()
+        self.stack.pop()
+
+    visit_FunctionDef = _visit_func
+    visit_AsyncFunctionDef = _visit_func
+
+    def visit_For(self, node: ast.For) -> None:
+        self.loop_depth += 1
+        self.generic_visit(node)
+        self.loop_depth -= 1
+
+    visit_While = visit_For
+    visit_AsyncFor = visit_For
+
+
+def index_module(name: str, path: str, source: str) -> ModuleInfo:
+    tree = ast.parse(source, filename=path)
+    mod = ModuleInfo(name=name, path=path, tree=tree)
+    _Indexer(mod).visit(tree)
+    return mod
+
+
+# ---------------------------------------------------------------------------
+# name / call resolution
+# ---------------------------------------------------------------------------
+
+class Index:
+    """Whole-analysis view over the indexed modules."""
+
+    def __init__(self, modules: Dict[str, ModuleInfo]):
+        self.modules = modules
+        self.jit_sites: List[JitSite] = []
+        self._resolve_all()
+        self._compute_returns_fixpoint()
+        self._mark_traced()
+
+    # -- helpers ---------------------------------------------------------------
+
+    def func(self, fid: FuncId) -> Optional[FuncInfo]:
+        mod = self.modules.get(fid[0])
+        return mod.functions.get(fid[1]) if mod else None
+
+    def all_functions(self) -> Iterable[FuncInfo]:
+        for mod in self.modules.values():
+            yield from mod.functions.values()
+
+    def dotted_name(self, mod: ModuleInfo, node: ast.AST
+                    ) -> Optional[str]:
+        """Canonical dotted name of an expression like ``jax.lax.scan``,
+        ``kops.paged_attention`` or ``partial`` — import aliases at the
+        root are expanded (well-known jax/numpy aliases too)."""
+        parts: List[str] = []
+        while isinstance(node, ast.Attribute):
+            parts.append(node.attr)
+            node = node.value
+        if not isinstance(node, ast.Name):
+            return None
+        root = node.id
+        parts.append(root)
+        parts.reverse()
+        if root in mod.imports:
+            parts[0] = mod.imports[root]
+        elif root in mod.from_imports:
+            base, attr = mod.from_imports[root]
+            full = f"{base}.{attr}"
+            parts[0] = full
+        elif root in _WELL_KNOWN:
+            parts[0] = _WELL_KNOWN[root]
+        name = ".".join(parts)
+        # normalize second-level well-knowns (from jax import lax, numpy..)
+        for alias, full in _WELL_KNOWN.items():
+            if name == alias or name.startswith(alias + "."):
+                name = full + name[len(alias):]
+        if name == "functools.partial":
+            return name
+        if name == "partial":
+            return "functools.partial"
+        if name in ("jit", "pjit"):
+            return "jax.jit"
+        return name
+
+    def resolve_callable(self, mod: ModuleInfo, scope: Optional[FuncInfo],
+                         node: ast.AST, *, _env: Optional[Dict] = None
+                         ) -> Set[FuncId]:
+        """Best-effort: which function defs may ``node`` (a callable
+        expression) denote?  Handles local defs (walking the enclosing
+        function chain), module-level defs, imported names, ``self.X``
+        methods, module-alias attributes, and local variables assigned
+        from factory calls (via ``returns_funcs``)."""
+        out: Set[FuncId] = set()
+        if isinstance(node, ast.Name):
+            name = node.id
+            # nested defs / enclosing chain
+            chain: List[Optional[FuncInfo]] = []
+            cur = scope
+            while cur is not None:
+                chain.append(cur)
+                cur = mod.functions.get(cur.parent) if cur.parent else None
+            for fi in chain:
+                cand = mod.functions.get(fi.qualname + "." + name)
+                if cand:
+                    return {cand.fid}
+            if name in mod.functions:
+                return {(mod.name, name)}
+            if name in mod.from_imports:
+                base, attr = mod.from_imports[name]
+                target = self.modules.get(base)
+                if target and attr in target.functions:
+                    return {(base, attr)}
+                # from a import b where a.b is a module
+                sub = self.modules.get(f"{base}.{attr}")
+                if sub:
+                    return set()
+            # local variable assigned from a factory call, resolved by
+            # the scan in _resolve_all via per-function env
+            if _env and name in _env:
+                return set(_env[name])
+            return out
+        if isinstance(node, ast.Attribute):
+            # self.method / cls.method
+            if isinstance(node.value, ast.Name) and \
+                    node.value.id in ("self", "cls") and scope is not None:
+                cls_prefix = scope.qualname.rsplit(".", 1)[0] \
+                    if "." in scope.qualname else None
+                if cls_prefix:
+                    cand = mod.functions.get(
+                        f"{cls_prefix}.{node.attr}")
+                    if cand:
+                        return {cand.fid}
+                return out
+            dotted = self.dotted_name(mod, node)
+            if dotted and "." in dotted:
+                mod_part, attr = dotted.rsplit(".", 1)
+                target = self.modules.get(mod_part)
+                if target and attr in target.functions:
+                    return {(mod_part, attr)}
+        return out
+
+    # -- pass: calls, jit sites, factory returns ------------------------------
+
+    def _jit_kwargs(self, call: ast.Call) -> Dict[str, Optional[tuple]]:
+        def lit_tuple(node):
+            if isinstance(node, ast.Constant):
+                return (node.value,)
+            if isinstance(node, (ast.Tuple, ast.List)):
+                vals = []
+                for e in node.elts:
+                    if not isinstance(e, ast.Constant):
+                        return None
+                    vals.append(e.value)
+                return tuple(vals)
+            return None
+
+        out: Dict[str, Optional[tuple]] = {}
+        for kw in call.keywords:
+            if kw.arg in ("static_argnums", "static_argnames",
+                          "donate_argnums", "donate_argnames"):
+                out[kw.arg] = lit_tuple(kw.value)
+        return out
+
+    def _record_jit_site(self, mod: ModuleInfo, scope: Optional[FuncInfo],
+                         call: ast.Call, fn_node: Optional[ast.AST],
+                         in_loop: bool, env: Dict,
+                         entry: str = "jax.jit") -> JitSite:
+        target: Optional[FuncId] = None
+        if fn_node is not None:
+            cands = self.resolve_callable(mod, scope, fn_node, _env=env)
+            if len(cands) == 1:
+                target = next(iter(cands))
+        kw = self._jit_kwargs(call)
+        site = JitSite(
+            module=mod.name, lineno=call.lineno, target=target,
+            in_function=scope.qualname if scope else None,
+            in_loop=in_loop,
+            static_argnums=kw.get("static_argnums"),
+            static_argnames=kw.get("static_argnames"),
+            donate_argnums=kw.get("donate_argnums"),
+            donate_argnames=kw.get("donate_argnames"),
+            call_node=call, entry=entry)
+        self.jit_sites.append(site)
+        if scope is not None:
+            scope.jit_sites.append(site)
+        if target is not None:
+            fi = self.func(target)
+            if fi is not None:
+                fi.is_root = True
+                if site.static_argnames:
+                    fi.static_params |= set(site.static_argnames)
+                if site.static_argnums:
+                    for i in site.static_argnums:
+                        if isinstance(i, int) and i < len(fi.params):
+                            fi.static_params.add(fi.params[i])
+        return site
+
+    def _resolve_all(self) -> None:
+        for mod in self.modules.values():
+            for fi in mod.functions.values():
+                self._resolve_function(mod, fi)
+            # module-level trace entries (decorless top-level jit calls)
+            self._scan_body(mod, None, mod.tree.body, {}, 0)
+
+    def _resolve_function(self, mod: ModuleInfo, fi: FuncInfo) -> None:
+        # decorators
+        for dec in fi.node.decorator_list:
+            dec_call = dec if isinstance(dec, ast.Call) else None
+            name = self.dotted_name(
+                mod, dec_call.func if dec_call else dec)
+            if name == "functools.partial" and dec_call and dec_call.args:
+                inner = self.dotted_name(mod, dec_call.args[0])
+                if inner in TRACE_ENTRIES:
+                    fi.is_root = True
+                    kw = self._jit_kwargs(dec_call)
+                    site = JitSite(
+                        module=mod.name, lineno=dec.lineno, target=fi.fid,
+                        in_function=fi.parent, in_loop=False,
+                        static_argnums=kw.get("static_argnums"),
+                        static_argnames=kw.get("static_argnames"),
+                        donate_argnums=kw.get("donate_argnums"),
+                        donate_argnames=kw.get("donate_argnames"),
+                        call_node=dec_call, entry=inner)
+                    self.jit_sites.append(site)
+                    if site.static_argnames:
+                        fi.static_params |= set(site.static_argnames)
+                    if site.static_argnums:
+                        for i in site.static_argnums:
+                            if isinstance(i, int) and i < len(fi.params):
+                                fi.static_params.add(fi.params[i])
+            elif name in TRACE_ENTRIES:
+                fi.is_root = True
+                if dec_call is not None:
+                    self._record_jit_site(mod, mod.functions.get(fi.parent)
+                                          if fi.parent else None,
+                                          dec_call, None, False, {})
+        self._scan_body(mod, fi, fi.node.body, {}, 0)
+
+    def _scan_body(self, mod: ModuleInfo, scope: Optional[FuncInfo],
+                   body: Sequence[ast.stmt], env: Dict, loop_depth: int
+                   ) -> None:
+        """Walk one function body (not descending into nested defs —
+        they are scanned as their own FuncInfo) recording calls, jit
+        sites and factory-return assignments."""
+        for stmt in body:
+            for node in shallow_walk([stmt]):
+                if isinstance(node, ast.Call):
+                    self._handle_call(mod, scope, node, env,
+                                      in_loop=loop_depth > 0 or
+                                      self._in_loop(stmt, node))
+                elif scope is not None and isinstance(node, ast.Return) \
+                        and node.value is not None:
+                    self._handle_return(mod, scope, node.value, env)
+                elif isinstance(node, ast.Assign) and scope is not None:
+                    self._handle_assign(mod, scope, node, env)
+
+    @staticmethod
+    def _in_loop(stmt: ast.stmt, node: ast.AST) -> bool:
+        """Is ``node`` inside a loop contained in ``stmt``?"""
+        for outer in ast.walk(stmt):
+            if isinstance(outer, (ast.For, ast.While, ast.AsyncFor)):
+                for inner in ast.walk(outer):
+                    if inner is node:
+                        return True
+        return False
+
+    def _handle_call(self, mod: ModuleInfo, scope: Optional[FuncInfo],
+                     call: ast.Call, env: Dict, in_loop: bool) -> None:
+        name = self.dotted_name(mod, call.func)
+        if name == "functools.partial" and call.args:
+            inner = self.dotted_name(mod, call.args[0])
+            if inner in TRACE_ENTRIES and len(call.args) > 1:
+                self._record_jit_site(mod, scope, call, call.args[1],
+                                      in_loop, env, entry=inner)
+                return
+        if name in TRACE_ENTRIES:
+            idxs = TRACE_ENTRIES[name]
+            for i in idxs:
+                if i < len(call.args):
+                    arg = call.args[i]
+                    if name == "jax.lax.switch" and isinstance(
+                            arg, (ast.List, ast.Tuple)):
+                        for el in arg.elts:
+                            self._record_jit_site(mod, scope, call, el,
+                                                  in_loop, env,
+                                                  entry=name)
+                    else:
+                        self._record_jit_site(mod, scope, call, arg,
+                                              in_loop, env, entry=name)
+            return
+        # plain call: call-graph edge
+        if scope is not None:
+            for fid in self.resolve_callable(mod, scope, call.func,
+                                             _env=env):
+                scope.calls.add(fid)
+
+    def _handle_assign(self, mod: ModuleInfo, scope: FuncInfo,
+                       stmt: ast.Assign, env: Dict) -> None:
+        """``v = factory(...)`` binds v to the factory's returned funcs
+        so later ``v(...)`` / ``jax.jit(v)`` resolve."""
+        if not isinstance(stmt.value, ast.Call):
+            return
+        cands = self.resolve_callable(mod, scope, stmt.value.func,
+                                      _env=env)
+        rets: Set[FuncId] = set()
+        for fid in cands:
+            fi = self.func(fid)
+            if fi is not None:
+                rets |= fi.returns_funcs
+        if not rets:
+            return
+        for tgt in stmt.targets:
+            if isinstance(tgt, ast.Name):
+                env[tgt.id] = rets
+
+    def _handle_return(self, mod: ModuleInfo, scope: FuncInfo,
+                       value: ast.AST, env: Dict) -> None:
+        if isinstance(value, ast.IfExp):
+            self._handle_return(mod, scope, value.body, env)
+            self._handle_return(mod, scope, value.orelse, env)
+            return
+        if isinstance(value, ast.Call):
+            # return other_factory(...) -> union of its returns (fixpoint)
+            for fid in self.resolve_callable(mod, scope, value.func,
+                                             _env=env):
+                scope.returns_funcs.add(("__factory__",) + fid)  # marker
+            return
+        for fid in self.resolve_callable(mod, scope, value, _env=env):
+            scope.returns_funcs.add(fid)
+
+    def _compute_returns_fixpoint(self) -> None:
+        # expand ("__factory__", mod, qual) markers until stable
+        changed = True
+        while changed:
+            changed = False
+            for fi in self.all_functions():
+                new: Set[FuncId] = set()
+                for entry in fi.returns_funcs:
+                    if len(entry) == 3 and entry[0] == "__factory__":
+                        inner = self.func((entry[1], entry[2]))
+                        if inner is not None:
+                            new |= {e for e in inner.returns_funcs
+                                    if len(e) == 2}
+                            new |= {e for e in inner.returns_funcs
+                                    if len(e) == 3}
+                    else:
+                        new.add(entry)
+                if new != fi.returns_funcs:
+                    fi.returns_funcs = new
+                    changed = True
+        for fi in self.all_functions():
+            fi.returns_funcs = {e for e in fi.returns_funcs
+                                if len(e) == 2}
+            # a cache-getter that creates exactly one jit site and does
+            # not return a plain local def is assumed to return that jit
+            if fi.jit_sites and not fi.returns_funcs:
+                jits = [s for s in fi.jit_sites if s.target is not None]
+                if len(jits) == 1:
+                    fi.returns_jit = jits
+
+    # -- traced closure --------------------------------------------------------
+
+    def _mark_traced(self) -> None:
+        # re-run call/factory resolution now that returns_funcs are
+        # known (assignments scanned before fixpoint missed some)
+        for mod in self.modules.values():
+            for fi in mod.functions.values():
+                env: Dict = {}
+                for node in shallow_walk(fi.node.body):
+                    if isinstance(node, ast.Assign):
+                        self._handle_assign(mod, fi, node, env)
+                    elif isinstance(node, ast.Call):
+                        if self.dotted_name(mod, node.func) not in \
+                                TRACE_ENTRIES:
+                            for fid in self.resolve_callable(
+                                    mod, fi, node.func, _env=env):
+                                fi.calls.add(fid)
+        work = [fi for fi in self.all_functions() if fi.is_root]
+        seen: Set[FuncId] = set()
+        while work:
+            fi = work.pop()
+            if fi.fid in seen:
+                continue
+            seen.add(fi.fid)
+            fi.traced = True
+            for callee in list(fi.calls):
+                cfi = self.func(callee)
+                if cfi is not None and cfi.fid not in seen:
+                    work.append(cfi)
+                # calling a factory from traced code means its returned
+                # closures run traced too
+                if cfi is not None:
+                    for rid in cfi.returns_funcs:
+                        rfi = self.func(rid)
+                        if rfi is not None and rfi.fid not in seen:
+                            work.append(rfi)
+
+
+# ---------------------------------------------------------------------------
+# file loading
+# ---------------------------------------------------------------------------
+
+def load_index(root: str, paths: Sequence[str]) -> Index:
+    """Index every ``.py`` under the given repo-relative paths."""
+    sources: Dict[str, str] = {}
+    for p in paths:
+        absp = os.path.join(root, p)
+        if os.path.isfile(absp) and absp.endswith(".py"):
+            sources[os.path.relpath(absp, root)] = open(
+                absp, encoding="utf-8").read()
+        elif os.path.isdir(absp):
+            for dirpath, _dirnames, filenames in os.walk(absp):
+                for fn in sorted(filenames):
+                    if fn.endswith(".py"):
+                        fp = os.path.join(dirpath, fn)
+                        sources[os.path.relpath(fp, root)] = open(
+                            fp, encoding="utf-8").read()
+    return index_sources(sources)
+
+
+def index_sources(sources: Dict[str, str]) -> Index:
+    """Index an in-memory {repo-relative-path: source} mapping (the
+    fixture entry point — rules tests feed synthetic trees here)."""
+    modules: Dict[str, ModuleInfo] = {}
+    for path, src in sorted(sources.items()):
+        name = module_name_for(path)
+        modules[name] = index_module(name, path, src)
+    return Index(modules)

@@ -1,0 +1,928 @@
+"""repro-lint rules R1–R4.
+
+Each rule emits :class:`Finding` records with a *stable key*
+(``rule:module:function:detail`` — no line numbers) so the checked-in
+baseline survives unrelated edits.  Rationale text lives in ``RULES``
+and is printed by ``python -m tools.analyze --explain R<n>``; the long
+form is ``docs/static_analysis.md``.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+from typing import Callable, Dict, List, Optional, Sequence, Set, Tuple
+
+from .core import FuncId, FuncInfo, Index, JitSite, ModuleInfo
+
+# ---------------------------------------------------------------------------
+# rule metadata (--explain)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class RuleDoc:
+    rule_id: str
+    title: str
+    rationale: str
+    doc_anchor: str
+
+
+RULES: Dict[str, RuleDoc] = {
+    "R1": RuleDoc(
+        "R1", "host-sync on the hot path",
+        "A `.item()` / `float()` / `np.asarray()` / tracer-bool branch "
+        "inside traced code forces a device sync per call (on real "
+        "accelerators: a blocking d2h copy), and in host-side hot-path "
+        "modules a raw per-array pull forfeits the batched "
+        "annotated_transfer() door the runtime guard allowlists. "
+        "TreePO's amortized-prefix efficiency claim dies by a thousand "
+        "of these.",
+        "docs/static_analysis.md#r1-host-sync"),
+    "R2": RuleDoc(
+        "R2", "donation hygiene",
+        "An update-style jit (takes `params` + `opt_state`) that does "
+        "not donate them doubles peak parameter memory and forfeits "
+        "buffer aliasing; reading a donated buffer after the call "
+        "returns garbage. Donation is the contract PR 2 built the "
+        "bucketed update around.",
+        "docs/static_analysis.md#r2-donation-hygiene"),
+    "R3": RuleDoc(
+        "R3", "recompile hazards",
+        "A jit created inside a loop, an unhashable static argument, a "
+        "mutable Python container captured by a jit closure, or a "
+        "shape-dependent Python branch in traced code each silently "
+        "multiply compilations — the one-compile-per-(N,L,S)-bucket "
+        "invariant the compile counter asserts at runtime.",
+        "docs/static_analysis.md#r3-recompile-hazards"),
+    "R4": RuleDoc(
+        "R4", "kernel-surface parity",
+        "Every kernel must expose the same logical signature across the "
+        "Pallas implementation, the `ref.py` reference, and the "
+        "`ops.py` dispatch (Pallas-only tuning knobs excepted). A "
+        "desynced `segment_ids` is exactly the packing bug class PR 5 "
+        "fixed by hand; this rule makes it unrepresentable.",
+        "docs/static_analysis.md#r4-kernel-surface-parity"),
+}
+
+
+@dataclasses.dataclass
+class Finding:
+    rule: str
+    module: str          # dotted module name
+    path: str            # repo-relative file path
+    lineno: int
+    func: str            # qualified function name ("<module>" if top level)
+    detail: str          # stable slug (baseline key component)
+    message: str
+
+    @property
+    def key(self) -> str:
+        return f"{self.rule}:{self.module}:{self.func}:{self.detail}"
+
+    def render(self) -> str:
+        return (f"{self.path}:{self.lineno}: {self.rule} [{self.func}] "
+                f"{self.message}")
+
+
+# modules whose *untraced* host code is still a hot path: raw transfer
+# calls there must route through repro.core.guard.annotated_transfer
+HOT_PATH_MODULES: Set[str] = {
+    "repro.core.engine",
+    "repro.rl.trainer",
+    "repro.kv.cache",
+}
+
+# attributes of device values that are concrete at trace time
+STATIC_ATTRS = {"shape", "dtype", "ndim", "size", "itemsize", "nbytes",
+                "sharding", "weak_type", "aval"}
+
+# calls that launder taint away (concrete results even on tracers)
+UNTAINT_CALLS = {"len", "isinstance", "type", "id", "repr", "str",
+                 "hash", "range", "getattr", "hasattr"}
+
+# methods whose receiver is array-like — used as *evidence* that a
+# value is an array (vs. a Python config flag that happens to be a
+# parameter of traced code); R1 traced-half findings require evidence
+ARRAY_METHODS = {"astype", "reshape", "transpose", "sum", "mean", "max",
+                 "min", "any", "all", "item", "tolist", "squeeze",
+                 "ravel", "flatten", "take", "dot", "clip", "argmax",
+                 "argmin", "cumsum", "round", "std", "var", "prod",
+                 "block_until_ready"}
+
+# d2h sync entry points: canonical dotted callable names
+D2H_CALLS = {"numpy.asarray", "numpy.array", "numpy.asanyarray",
+             "jax.device_get"}
+H2D_CALLS = {"jax.numpy.asarray", "jax.numpy.array", "jax.device_put"}
+SYNC_BUILTINS = {"float", "int", "bool", "complex"}
+SYNC_METHODS = {"item", "tolist", "block_until_ready"}
+
+# params that only the Pallas side of a kernel may have (tuning knobs)
+_PALLAS_ONLY_PREFIXES = ("blk", "block", "grid", "num_warps",
+                        "num_stages", "debug")
+
+
+def _is_pallas_only(param: str) -> bool:
+    return param == "interpret" or param.startswith(_PALLAS_ONLY_PREFIXES)
+
+
+def _expr_slug(node: ast.AST) -> str:
+    """Short stable description of an expression for baseline keys."""
+    if isinstance(node, ast.Name):
+        return node.id
+    if isinstance(node, ast.Attribute):
+        return f"{_expr_slug(node.value)}.{node.attr}"
+    if isinstance(node, ast.Call):
+        return _expr_slug(node.func)
+    if isinstance(node, ast.Subscript):
+        return f"{_expr_slug(node.value)}[]"
+    if isinstance(node, ast.Constant):
+        return repr(node.value)
+    return type(node).__name__.lower()
+
+
+# ---------------------------------------------------------------------------
+# taint / device-value dataflow (shared by R1 traced + R1 host halves)
+# ---------------------------------------------------------------------------
+
+class TaintScan:
+    """Forward dataflow over one function body: which local names hold
+    tracer (traced half) or device-array (host half) values.
+
+    ``seed`` taints parameters; ``call_taints(call)`` lets the host half
+    declare "calls resolving to a jitted function return device values".
+    Two forward passes approximate loop back-edges.
+    """
+
+    def __init__(self, index: Index, mod: ModuleInfo, fi: FuncInfo,
+                 seed: Set[str],
+                 call_taints: Optional[Callable[[ast.Call], bool]] = None):
+        self.index = index
+        self.mod = mod
+        self.fi = fi
+        self.tainted: Set[str] = set(seed)
+        self.call_taints = call_taints or (lambda call: False)
+        # evidence: slugs whose array-ness the function itself attests
+        # (receiver of a shape/dtype access or an array method call)
+        self.arrayish: Set[str] = set()
+        for node in ast.walk(fi.node):
+            if isinstance(node, ast.Attribute) and (
+                    node.attr in STATIC_ATTRS or
+                    node.attr in ARRAY_METHODS):
+                self.arrayish.add(_expr_slug(node.value))
+        for _ in range(2):
+            for stmt in fi.node.body:
+                self._scan_stmt(stmt)
+
+    def has_array_evidence(self, node: ast.AST) -> bool:
+        """Does the expression (or any sub-expression) refer to a value
+        this function demonstrably treats as an array — or call into
+        jax/jnp/lax (whose results are arrays by construction)?"""
+        for n in ast.walk(node):
+            if isinstance(n, (ast.Name, ast.Attribute)) and \
+                    _expr_slug(n) in self.arrayish:
+                return True
+            if isinstance(n, ast.Call):
+                name = self.index.dotted_name(self.mod, n.func)
+                if name and (name.startswith("jax.") or name == "jax"):
+                    return True
+        return False
+
+    # -- expression taint ------------------------------------------------------
+
+    def is_tainted(self, node: ast.AST) -> bool:
+        if isinstance(node, ast.Name):
+            return node.id in self.tainted
+        if isinstance(node, ast.Attribute):
+            if node.attr in STATIC_ATTRS:
+                return False
+            return self.is_tainted(node.value)
+        if isinstance(node, ast.Subscript):
+            return self.is_tainted(node.value)
+        if isinstance(node, ast.Call):
+            return self._call_tainted(node)
+        if isinstance(node, ast.Compare):
+            if all(isinstance(op, (ast.Is, ast.IsNot, ast.In, ast.NotIn))
+                   for op in node.ops):
+                return False        # identity / membership on pytrees
+            return self.is_tainted(node.left) or any(
+                self.is_tainted(c) for c in node.comparators)
+        if isinstance(node, (ast.BinOp,)):
+            return self.is_tainted(node.left) or self.is_tainted(node.right)
+        if isinstance(node, ast.BoolOp):
+            return any(self.is_tainted(v) for v in node.values)
+        if isinstance(node, ast.UnaryOp):
+            return self.is_tainted(node.operand)
+        if isinstance(node, (ast.Tuple, ast.List)):
+            return any(self.is_tainted(e) for e in node.elts)
+        if isinstance(node, ast.IfExp):
+            return self.is_tainted(node.body) or self.is_tainted(node.orelse)
+        if isinstance(node, ast.Starred):
+            return self.is_tainted(node.value)
+        if isinstance(node, ast.NamedExpr):
+            return self.is_tainted(node.value)
+        return False
+
+    def _call_tainted(self, call: ast.Call) -> bool:
+        name = self.index.dotted_name(self.mod, call.func)
+        if name in UNTAINT_CALLS:
+            return False
+        if name and name.split(".")[-1] == "annotated_transfer":
+            # the sanctioned door: its results are host values (or an
+            # intended, tallied device push) — taint stops here
+            return False
+        if name in SYNC_BUILTINS or name in D2H_CALLS:
+            return False        # result is host-side (the call gets flagged)
+        if isinstance(call.func, ast.Attribute) and \
+                call.func.attr in SYNC_METHODS:
+            return False
+        if self.call_taints(call):
+            return True
+        # method on a tainted object, or any tainted argument
+        if isinstance(call.func, ast.Attribute) and \
+                self.is_tainted(call.func.value):
+            return True
+        return any(self.is_tainted(a) for a in call.args) or any(
+            self.is_tainted(k.value) for k in call.keywords)
+
+    # -- statement propagation -------------------------------------------------
+
+    def _bind(self, target: ast.AST, tainted: bool) -> None:
+        if isinstance(target, ast.Name):
+            if tainted:
+                self.tainted.add(target.id)
+            else:
+                self.tainted.discard(target.id)
+        elif isinstance(target, (ast.Tuple, ast.List)):
+            for el in target.elts:
+                self._bind(el, tainted)
+        elif isinstance(target, ast.Starred):
+            self._bind(target.value, tainted)
+        # attribute/subscript stores: no tracked name
+
+    def _bind_for(self, target: ast.AST, it: ast.AST) -> None:
+        # enumerate(xs): index untainted, element follows xs
+        if isinstance(it, ast.Call):
+            name = self.index.dotted_name(self.mod, it.func)
+            if name == "enumerate" and it.args and \
+                    isinstance(target, (ast.Tuple, ast.List)) and \
+                    len(target.elts) == 2:
+                self._bind(target.elts[0], False)
+                self._bind(target.elts[1], self.is_tainted(it.args[0]))
+                return
+            if isinstance(it.func, ast.Attribute) and \
+                    it.func.attr == "items" and \
+                    isinstance(target, (ast.Tuple, ast.List)) and \
+                    len(target.elts) == 2:
+                self._bind(target.elts[0], False)   # dict key
+                self._bind(target.elts[1],
+                           self.is_tainted(it.func.value))
+                return
+            if name == "zip":
+                t = any(self.is_tainted(a) for a in it.args)
+                self._bind(target, t)
+                return
+        self._bind(target, self.is_tainted(it))
+
+    def _bind_arrayish(self, target: ast.AST) -> None:
+        if isinstance(target, (ast.Name, ast.Attribute)):
+            self.arrayish.add(_expr_slug(target))
+        elif isinstance(target, (ast.Tuple, ast.List)):
+            for el in target.elts:
+                self._bind_arrayish(el)
+        elif isinstance(target, ast.Starred):
+            self._bind_arrayish(target.value)
+
+    def _scan_stmt(self, stmt: ast.stmt) -> None:
+        if isinstance(stmt, ast.Assign):
+            t = self.is_tainted(stmt.value)
+            for tgt in stmt.targets:
+                self._bind(tgt, t)
+            if self.has_array_evidence(stmt.value):
+                for tgt in stmt.targets:
+                    self._bind_arrayish(tgt)
+        elif isinstance(stmt, ast.AnnAssign) and stmt.value is not None:
+            self._bind(stmt.target, self.is_tainted(stmt.value))
+        elif isinstance(stmt, ast.AugAssign):
+            if self.is_tainted(stmt.value):
+                self._bind(stmt.target, True)
+        elif isinstance(stmt, ast.For):
+            self._bind_for(stmt.target, stmt.iter)
+            for s in stmt.body + stmt.orelse:
+                self._scan_stmt(s)
+        elif isinstance(stmt, (ast.While, ast.If)):
+            for s in stmt.body + stmt.orelse:
+                self._scan_stmt(s)
+        elif isinstance(stmt, ast.With):
+            for item in stmt.items:
+                if item.optional_vars is not None:
+                    self._bind(item.optional_vars,
+                               self.is_tainted(item.context_expr))
+            for s in stmt.body:
+                self._scan_stmt(s)
+        elif isinstance(stmt, ast.Try):
+            for s in stmt.body + stmt.orelse + stmt.finalbody:
+                self._scan_stmt(s)
+            for h in stmt.handlers:
+                for s in h.body:
+                    self._scan_stmt(s)
+        # comprehension targets
+        for node in ast.walk(stmt):
+            if isinstance(node, (ast.ListComp, ast.SetComp, ast.DictComp,
+                                 ast.GeneratorExp)):
+                for gen in node.generators:
+                    self._bind_for(gen.target, gen.iter)
+
+
+# ---------------------------------------------------------------------------
+# R1 — host-sync
+# ---------------------------------------------------------------------------
+
+def _jit_result_call(index: Index, mod: ModuleInfo, fi: FuncInfo,
+                     call: ast.Call, jit_vars: Set[str]) -> bool:
+    """Does this call return device values? — a direct call to a jit
+    root / traced fn, a call through a var bound to a cached jit
+    (``fn = self._get_update_fn(...)``), or a call to a factory whose
+    returns are jitted."""
+    if isinstance(call.func, ast.Name) and call.func.id in jit_vars:
+        return True
+    for fid in index.resolve_callable(mod, fi, call.func):
+        cfi = index.func(fid)
+        if cfi is None:
+            continue
+        if cfi.is_root or cfi.traced:
+            return True
+        if cfi.returns_jit:
+            return True
+        for rid in cfi.returns_funcs:
+            rfi = index.func(rid)
+            if rfi is not None and (rfi.is_root or rfi.traced):
+                return True
+        # a thin wrapper that itself calls a jit root returns device
+        # values (e.g. ``batch_treepo_advantage`` over its jitted core)
+        for cid in cfi.calls:
+            ccfi = index.func(cid)
+            if ccfi is not None and ccfi.is_root:
+                return True
+    return False
+
+
+def _collect_jit_vars(index: Index, mod: ModuleInfo, fi: FuncInfo
+                      ) -> Set[str]:
+    """Local names bound to jitted callables (``fn = self._get_X(...)``
+    or ``fn = jax.jit(...)``)."""
+    out: Set[str] = set()
+    for stmt in ast.walk(fi.node):
+        if not isinstance(stmt, ast.Assign) or \
+                not isinstance(stmt.value, ast.Call):
+            continue
+        call = stmt.value
+        is_jit = False
+        name = index.dotted_name(mod, call.func)
+        if name == "jax.jit":
+            is_jit = True
+        else:
+            for fid in index.resolve_callable(mod, fi, call.func):
+                cfi = index.func(fid)
+                if cfi is not None and (cfi.returns_jit or any(
+                        index.func(r) is not None and
+                        index.func(r).is_root
+                        for r in cfi.returns_funcs)):
+                    is_jit = True
+        if is_jit:
+            for tgt in stmt.targets:
+                if isinstance(tgt, ast.Name):
+                    out.add(tgt.id)
+    return out
+
+
+def _r1_check_function(index: Index, mod: ModuleInfo, fi: FuncInfo,
+                       findings: List[Finding], *, traced: bool) -> None:
+    if traced:
+        # params with literal defaults are config flags by convention
+        # (``causal=True``): call sites pass constants, not tracers
+        seed = (set(fi.params) - fi.static_params - fi.literal_defaults
+                - {"self", "cls"})
+        scan = TaintScan(index, mod, fi, seed)
+        kind = "traced"
+    else:
+        jit_vars = _collect_jit_vars(index, mod, fi)
+        scan = TaintScan(
+            index, mod, fi, set(),
+            call_taints=lambda c: _jit_result_call(index, mod, fi, c,
+                                                   jit_vars))
+        kind = "hot-host"
+
+    def emit(node: ast.AST, detail: str, msg: str) -> None:
+        findings.append(Finding(
+            rule="R1", module=mod.name, path=mod.path,
+            lineno=getattr(node, "lineno", fi.node.lineno),
+            func=fi.qualname, detail=detail, message=msg))
+
+    own_nested = {f.node for f in mod.functions.values()
+                  if f.parent == fi.qualname}
+
+    def hot(node: ast.AST) -> bool:
+        """Is this tainted expression actually array-like?  The traced
+        half demands that some *single* subexpression is both tainted
+        and array-evidenced (a `.shape` access / array method on it, or
+        a jnp call over tainted args) so Python config scalars passed
+        as parameters don't fire; the host half's taint (jit-call
+        results) is already precise."""
+        if not scan.is_tainted(node):
+            return False
+        if not traced:
+            return True
+        for n in ast.walk(node):
+            if isinstance(n, (ast.Name, ast.Attribute)) and \
+                    _expr_slug(n) in scan.arrayish and \
+                    scan.is_tainted(n):
+                return True
+            if isinstance(n, ast.Call) and scan.is_tainted(n):
+                cname = index.dotted_name(mod, n.func)
+                if cname and cname.startswith("jax."):
+                    return True
+                if isinstance(n.func, ast.Attribute) and \
+                        n.func.attr in ARRAY_METHODS and \
+                        scan.is_tainted(n.func.value):
+                    return True
+        return False
+
+    for stmt in fi.node.body:
+        for node in ast.walk(stmt):
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)) \
+                    and node in own_nested:
+                continue        # nested defs analyzed as their own fns
+            if isinstance(node, ast.Call):
+                cname = index.dotted_name(mod, node.func)
+                arg0 = node.args[0] if node.args else None
+                if cname in SYNC_BUILTINS and arg0 is not None and \
+                        hot(arg0):
+                    emit(node, f"sync-builtin:{cname}:{_expr_slug(arg0)}",
+                         f"`{cname}()` on a "
+                         f"{'traced value' if traced else 'device value'}"
+                         f" `{_expr_slug(arg0)}` forces a host sync")
+                elif cname in D2H_CALLS and arg0 is not None and \
+                        hot(arg0):
+                    emit(node, f"d2h:{cname}:{_expr_slug(arg0)}",
+                         f"`{cname}()` pulls `{_expr_slug(arg0)}` to "
+                         "host — batch it through "
+                         "guard.annotated_transfer()")
+                elif isinstance(node.func, ast.Attribute) and \
+                        node.func.attr in SYNC_METHODS and \
+                        scan.is_tainted(node.func.value):
+                    # no evidence gate: calling .item()/.tolist() IS
+                    # array evidence in itself
+                    emit(node,
+                         f"sync-method:{node.func.attr}:"
+                         f"{_expr_slug(node.func.value)}",
+                         f"`.{node.func.attr}()` on "
+                         f"`{_expr_slug(node.func.value)}` forces a "
+                         "host sync")
+                elif not traced and cname in H2D_CALLS and \
+                        mod.name in HOT_PATH_MODULES:
+                    emit(node,
+                         f"h2d:{cname}:"
+                         f"{_expr_slug(arg0) if arg0 is not None else '?'}",
+                         f"raw `{cname}()` ships host data to device on "
+                         "a hot path — route through "
+                         "guard.annotated_transfer(to='device')")
+            elif traced and isinstance(node, (ast.If, ast.While)) and \
+                    hot(node.test):
+                emit(node, f"tracer-bool:{_expr_slug(node.test)}",
+                     "branching on a traced value "
+                     f"`{_expr_slug(node.test)}` forces a concretization "
+                     "sync (use lax.cond / jnp.where)")
+            elif traced and isinstance(node, ast.Assert) and \
+                    hot(node.test):
+                emit(node, f"tracer-assert:{_expr_slug(node.test)}",
+                     "assert on a traced value forces a host sync "
+                     "(use checkify or a debug callback)")
+    del kind
+
+
+def rule_r1(index: Index) -> List[Finding]:
+    findings: List[Finding] = []
+    for mod in index.modules.values():
+        for fi in mod.functions.values():
+            if fi.traced:
+                _r1_check_function(index, mod, fi, findings, traced=True)
+            elif mod.name in HOT_PATH_MODULES:
+                _r1_check_function(index, mod, fi, findings, traced=False)
+    return findings
+
+
+# ---------------------------------------------------------------------------
+# R2 — donation hygiene
+# ---------------------------------------------------------------------------
+
+DONATABLE_PARAMS = ("params", "opt_state")
+LOGPROB_PARAM_PREFIXES = ("lp", "logprob", "logp")
+
+
+def _donated_names(site: JitSite, target: FuncInfo) -> Set[str]:
+    names: Set[str] = set(site.donate_argnames or ())
+    for i in site.donate_argnums or ():
+        if isinstance(i, int) and i < len(target.params):
+            names.add(target.params[i])
+    return names
+
+
+def rule_r2(index: Index) -> List[Finding]:
+    findings: List[Finding] = []
+    # (a) update-style jits must donate params/opt_state/logprob planes
+    for site in index.jit_sites:
+        if site.target is None:
+            continue
+        fi = index.func(site.target)
+        if fi is None or "opt_state" not in fi.params:
+            continue    # donation contract applies to update-style jits
+        donated = _donated_names(site, fi)
+        mod = index.modules[site.module]
+        for p in fi.params:
+            is_plane = p.startswith(LOGPROB_PARAM_PREFIXES)
+            if (p in DONATABLE_PARAMS or is_plane) and p not in donated:
+                findings.append(Finding(
+                    rule="R2", module=site.module, path=mod.path,
+                    lineno=site.lineno,
+                    func=site.in_function or "<module>",
+                    detail=f"no-donate:{fi.qualname}:{p}",
+                    message=f"jit of `{fi.qualname}` does not donate "
+                            f"`{p}` — doubles live buffers "
+                            "(add donate_argnums)"))
+    # (b) use-after-donate
+    for mod in index.modules.values():
+        for fi in mod.functions.values():
+            findings.extend(_use_after_donate(index, mod, fi))
+    return findings
+
+
+def _use_after_donate(index: Index, mod: ModuleInfo, fi: FuncInfo
+                      ) -> List[Finding]:
+    out: List[Finding] = []
+    jit_vars: Dict[str, JitSite] = {}
+    # bind local names to jit sites (direct or via cache getters)
+    for stmt in ast.walk(fi.node):
+        if not isinstance(stmt, ast.Assign) or \
+                not isinstance(stmt.value, ast.Call):
+            continue
+        call = stmt.value
+        site: Optional[JitSite] = None
+        if index.dotted_name(mod, call.func) == "jax.jit":
+            for s in fi.jit_sites:
+                if s.call_node is call:
+                    site = s
+        else:
+            for fid in index.resolve_callable(mod, fi, call.func):
+                cfi = index.func(fid)
+                if cfi is not None and cfi.returns_jit:
+                    site = cfi.returns_jit[0]
+        if site is not None and (site.donate_argnums or
+                                 site.donate_argnames):
+            for tgt in stmt.targets:
+                if isinstance(tgt, ast.Name):
+                    jit_vars[tgt.id] = site
+    if not jit_vars:
+        return out
+    # find calls through those names; mark donated positional args dead.
+    # Only named buffers (Name / dotted attribute) can be used later —
+    # temporaries built inline in the call can't be re-read.
+    dead: List[Tuple[str, int, int]] = []   # (slug, call start, call end)
+    for node in ast.walk(fi.node):
+        if isinstance(node, ast.Call) and \
+                isinstance(node.func, ast.Name) and \
+                node.func.id in jit_vars:
+            site = jit_vars[node.func.id]
+            target = index.func(site.target) if site.target else None
+            donated_idx = set(site.donate_argnums or ())
+            donated_names = set(site.donate_argnames or ())
+            end = getattr(node, "end_lineno", node.lineno) or node.lineno
+            for i, a in enumerate(node.args):
+                if not isinstance(a, (ast.Name, ast.Attribute)):
+                    continue
+                pname = target.params[i] if target and \
+                    i < len(target.params) else None
+                if i in donated_idx or (pname in donated_names):
+                    dead.append((_expr_slug(a), node.lineno, end))
+    for slug, call_line, call_end in dead:
+        # a rebind anywhere from the donating statement on revives the
+        # name (the idiomatic `self.params, ... = fn(self.params, ...)`
+        # rebinds on the very statement that donates)
+        def _flat_targets(n: ast.AST):
+            tgts = n.targets if isinstance(n, ast.Assign) else [n.target]
+            for t in tgts:
+                if isinstance(t, (ast.Tuple, ast.List)):
+                    yield from t.elts
+                else:
+                    yield t
+
+        rebinds = [n.lineno for n in ast.walk(fi.node)
+                   if isinstance(n, (ast.Assign, ast.AugAssign))
+                   and any(_expr_slug(t) == slug
+                           for t in _flat_targets(n))]
+        for node in ast.walk(fi.node):
+            if isinstance(node, (ast.Name, ast.Attribute)) and \
+                    isinstance(getattr(node, "ctx", None), ast.Load) and \
+                    _expr_slug(node) == slug and node.lineno > call_end:
+                if any(call_line <= rb <= node.lineno for rb in rebinds):
+                    continue    # re-bound between donation and use
+                out.append(Finding(
+                    rule="R2", module=mod.name, path=mod.path,
+                    lineno=node.lineno, func=fi.qualname,
+                    detail=f"use-after-donate:{slug}",
+                    message=f"`{slug}` is read after being donated at "
+                            f"line {call_line} — donated buffers are "
+                            "invalidated"))
+                break
+    return out
+
+
+# ---------------------------------------------------------------------------
+# R3 — recompile hazards
+# ---------------------------------------------------------------------------
+
+def rule_r3(index: Index) -> List[Finding]:
+    findings: List[Finding] = []
+    # (a) jit created inside a loop: fresh wrapper per iteration = no
+    # cache.  Only cache-bearing wrappers count — jax.checkpoint /
+    # vmap / grad inside a traced loop body are ordinary combinators.
+    for site in index.jit_sites:
+        if site.in_loop and site.entry in ("jax.jit", "jax.pjit"):
+            mod = index.modules[site.module]
+            tgt = site.target[1] if site.target else "<lambda>"
+            findings.append(Finding(
+                rule="R3", module=site.module, path=mod.path,
+                lineno=site.lineno, func=site.in_function or "<module>",
+                detail=f"jit-in-loop:{tgt}",
+                message=f"jax.jit(`{tgt}`) created inside a loop — each "
+                        "iteration makes a fresh wrapper with an empty "
+                        "trace cache (hoist it or memoize per bucket)"))
+    # (b) unhashable values passed for static args
+    findings.extend(_r3_unhashable_statics(index))
+    # (c) mutable containers / loop-rebound values captured by jit closures
+    findings.extend(_r3_closure_capture(index))
+    # (d) shape-dependent Python branches in traced code
+    findings.extend(_r3_shape_branches(index))
+    return findings
+
+
+def _r3_unhashable_statics(index: Index) -> List[Finding]:
+    out: List[Finding] = []
+    for mod in index.modules.values():
+        for fi in mod.functions.values():
+            jit_vars: Dict[str, FuncInfo] = {}
+            for stmt in ast.walk(fi.node):
+                if isinstance(stmt, ast.Assign) and \
+                        isinstance(stmt.value, ast.Call):
+                    for fid in index.resolve_callable(
+                            mod, fi, stmt.value.func):
+                        cfi = index.func(fid)
+                        if cfi is None:
+                            continue
+                        tfi = None
+                        if cfi.returns_jit and cfi.returns_jit[0].target:
+                            tfi = index.func(cfi.returns_jit[0].target)
+                        elif cfi.is_root:
+                            tfi = cfi
+                        if tfi is not None and tfi.static_params:
+                            for tgt in stmt.targets:
+                                if isinstance(tgt, ast.Name):
+                                    jit_vars[tgt.id] = tfi
+            for node in ast.walk(fi.node):
+                if not isinstance(node, ast.Call):
+                    continue
+                tfi = None
+                if isinstance(node.func, ast.Name) and \
+                        node.func.id in jit_vars:
+                    tfi = jit_vars[node.func.id]
+                else:
+                    for fid in index.resolve_callable(mod, fi, node.func):
+                        cfi = index.func(fid)
+                        if cfi is not None and cfi.is_root and \
+                                cfi.static_params:
+                            tfi = cfi
+                if tfi is None:
+                    continue
+                for kw in node.keywords:
+                    if kw.arg in tfi.static_params and isinstance(
+                            kw.value, (ast.List, ast.Dict, ast.Set)):
+                        out.append(Finding(
+                            rule="R3", module=mod.name, path=mod.path,
+                            lineno=node.lineno, func=fi.qualname,
+                            detail=f"unhashable-static:{tfi.qualname}:"
+                                   f"{kw.arg}",
+                            message=f"static arg `{kw.arg}` of "
+                                    f"`{tfi.qualname}` gets an unhashable "
+                                    f"{type(kw.value).__name__.lower()} "
+                                    "literal — jit statics must be "
+                                    "hashable (use a tuple)"))
+                for i, a in enumerate(node.args):
+                    tp = tfi.params[i] if i < len(tfi.params) else None
+                    if tp in tfi.static_params and isinstance(
+                            a, (ast.List, ast.Dict, ast.Set)):
+                        out.append(Finding(
+                            rule="R3", module=mod.name, path=mod.path,
+                            lineno=node.lineno, func=fi.qualname,
+                            detail=f"unhashable-static:{tfi.qualname}:"
+                                   f"{tp}",
+                            message=f"static arg `{tp}` of "
+                                    f"`{tfi.qualname}` gets an unhashable "
+                                    f"{type(a).__name__.lower()} literal"))
+    return out
+
+
+def _r3_closure_capture(index: Index) -> List[Finding]:
+    out: List[Finding] = []
+    for mod in index.modules.values():
+        for fi in mod.functions.values():
+            if not fi.is_root or fi.parent is None:
+                continue
+            parent = mod.functions.get(fi.parent)
+            if parent is None:
+                continue
+            bound = set(fi.params) | {"self", "cls"}
+            for node in ast.walk(fi.node):
+                if isinstance(node, (ast.Assign,)):
+                    for t in node.targets:
+                        for n in ast.walk(t):
+                            if isinstance(n, ast.Name):
+                                bound.add(n.id)
+                elif isinstance(node, (ast.For,)):
+                    for n in ast.walk(node.target):
+                        if isinstance(n, ast.Name):
+                            bound.add(n.id)
+                elif isinstance(node, ast.comprehension):
+                    for n in ast.walk(node.target):
+                        if isinstance(n, ast.Name):
+                            bound.add(n.id)
+            free = {n.id for n in ast.walk(fi.node)
+                    if isinstance(n, ast.Name)
+                    and isinstance(n.ctx, ast.Load)
+                    and n.id not in bound
+                    and n.id not in mod.imports
+                    and n.id not in mod.from_imports
+                    and n.id not in mod.functions}
+            # parent bindings of those free names
+            for name in sorted(free):
+                mutable_bind = None
+                loop_rebind = None
+                for stmt in ast.walk(parent.node):
+                    if isinstance(stmt, ast.Assign):
+                        for t in stmt.targets:
+                            if isinstance(t, ast.Name) and t.id == name:
+                                if isinstance(stmt.value,
+                                              (ast.List, ast.Dict,
+                                               ast.Set)):
+                                    mutable_bind = stmt
+                    if isinstance(stmt, (ast.For, ast.While)):
+                        for inner in ast.walk(stmt):
+                            if isinstance(inner, ast.Assign) and any(
+                                    isinstance(t, ast.Name) and
+                                    t.id == name
+                                    for t in inner.targets):
+                                loop_rebind = inner
+                            if isinstance(inner, ast.For) and any(
+                                    isinstance(n, ast.Name) and
+                                    n.id == name
+                                    for n in ast.walk(inner.target)):
+                                loop_rebind = inner
+                if mutable_bind is not None:
+                    out.append(Finding(
+                        rule="R3", module=mod.name, path=mod.path,
+                        lineno=fi.node.lineno, func=fi.qualname,
+                        detail=f"closure-mutable:{name}",
+                        message=f"jitted closure captures mutable "
+                                f"container `{name}` — mutations after "
+                                "trace are silently ignored (pass it as "
+                                "an argument or freeze it)"))
+                if loop_rebind is not None:
+                    out.append(Finding(
+                        rule="R3", module=mod.name, path=mod.path,
+                        lineno=fi.node.lineno, func=fi.qualname,
+                        detail=f"closure-loop-rebind:{name}",
+                        message=f"jitted closure captures `{name}` which "
+                                "the enclosing function rebinds in a "
+                                "loop — the jit traces the first value "
+                                "only (pass it as an argument)"))
+    return out
+
+
+def _r3_shape_branches(index: Index) -> List[Finding]:
+    out: List[Finding] = []
+    shape_attrs = {"shape", "ndim", "size"}
+    for mod in index.modules.values():
+        for fi in mod.functions.values():
+            if not fi.traced:
+                continue
+            own_nested = {f.node for f in mod.functions.values()
+                          if f.parent == fi.qualname}
+            for stmt in fi.node.body:
+                for node in ast.walk(stmt):
+                    if isinstance(node, (ast.FunctionDef,
+                                         ast.AsyncFunctionDef)) and \
+                            node in own_nested:
+                        continue
+                    if not isinstance(node, ast.If):
+                        continue
+                    hits = [n for n in ast.walk(node.test)
+                            if isinstance(n, ast.Attribute)
+                            and n.attr in shape_attrs]
+                    if hits:
+                        slug = _expr_slug(hits[0])
+                        out.append(Finding(
+                            rule="R3", module=mod.name, path=mod.path,
+                            lineno=node.lineno, func=fi.qualname,
+                            detail=f"shape-branch:{slug}",
+                            message=f"Python branch on `{slug}` in "
+                                    "traced code specializes the trace "
+                                    "per shape — intentional dispatch "
+                                    "belongs in the baseline, anything "
+                                    "else in bucketing"))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# R4 — kernel-surface parity
+# ---------------------------------------------------------------------------
+
+def _kernel_pairs(index: Index, ops_mod: ModuleInfo
+                  ) -> List[Tuple[FuncInfo, Optional[FuncInfo],
+                                  Optional[FuncInfo]]]:
+    """(ops dispatch fn, pallas kernel, ref kernel) triples, pairing
+    derived from the dispatch body itself (so the
+    ``flash_attention_pallas`` / ``attention_ref`` naming split is
+    handled by construction)."""
+    triples = []
+    for fi in ops_mod.functions.values():
+        if "." in fi.qualname or fi.qualname.startswith("_"):
+            continue
+        pallas: Optional[FuncInfo] = None
+        ref: Optional[FuncInfo] = None
+        for node in ast.walk(fi.node):
+            if not isinstance(node, ast.Call):
+                continue
+            for fid in index.resolve_callable(ops_mod, fi, node.func):
+                cfi = index.func(fid)
+                if cfi is None:
+                    continue
+                if cfi.qualname.endswith("_pallas"):
+                    pallas = cfi
+                elif cfi.qualname.endswith("_ref"):
+                    ref = cfi
+        if pallas is not None or ref is not None:
+            triples.append((fi, pallas, ref))
+    return triples
+
+
+def rule_r4(index: Index) -> List[Finding]:
+    findings: List[Finding] = []
+    ops_mods = [m for m in index.modules.values()
+                if m.name.endswith("kernels.ops")]
+    for ops_mod in ops_mods:
+        for disp, pallas, ref in _kernel_pairs(index, ops_mod):
+            if pallas is None or ref is None:
+                continue    # ref-only op (e.g. decode_attention): fine
+            p_set = {p for p in pallas.params if not _is_pallas_only(p)}
+            r_set = {p for p in ref.params if not _is_pallas_only(p)}
+            for missing in sorted(r_set - p_set):
+                findings.append(Finding(
+                    rule="R4", module=ops_mod.name, path=ops_mod.path,
+                    lineno=disp.node.lineno, func=disp.qualname,
+                    detail=f"pallas-missing:{pallas.qualname}:{missing}",
+                    message=f"`{ref.qualname}` accepts `{missing}` but "
+                            f"`{pallas.qualname}` does not — kernel "
+                            "surfaces drifted (the PR-5 bug class)"))
+            for extra in sorted(p_set - r_set):
+                findings.append(Finding(
+                    rule="R4", module=ops_mod.name, path=ops_mod.path,
+                    lineno=disp.node.lineno, func=disp.qualname,
+                    detail=f"ref-missing:{ref.qualname}:{extra}",
+                    message=f"`{pallas.qualname}` accepts `{extra}` but "
+                            f"`{ref.qualname}` does not — reference "
+                            "must cover the full kernel surface"))
+            # the dispatch itself must plumb segment_ids when kernels do
+            if "segment_ids" in (p_set & r_set) and \
+                    "segment_ids" not in disp.params:
+                findings.append(Finding(
+                    rule="R4", module=ops_mod.name, path=ops_mod.path,
+                    lineno=disp.node.lineno, func=disp.qualname,
+                    detail=f"dispatch-missing:{disp.qualname}:segment_ids",
+                    message=f"both kernels take `segment_ids` but the "
+                            f"`{disp.qualname}` dispatch does not expose "
+                            "it — packed sequences silently lose "
+                            "segment resets"))
+    return findings
+
+
+# ---------------------------------------------------------------------------
+# entry point
+# ---------------------------------------------------------------------------
+
+ALL_RULES: Sequence[Callable[[Index], List[Finding]]] = (
+    rule_r1, rule_r2, rule_r3, rule_r4)
+
+
+def run_rules(index: Index) -> List[Finding]:
+    findings: List[Finding] = []
+    for rule in ALL_RULES:
+        findings.extend(rule(index))
+    findings.sort(key=lambda f: (f.path, f.lineno, f.rule, f.detail))
+    return findings

@@ -16,6 +16,10 @@
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+# repro-lint first: the static half of the device-residency gate (R1-R4,
+# baseline-checked; see docs/static_analysis.md). Fails fast on any new
+# finding or stale baseline entry before the test suite spends minutes.
+python -m tools.analyze src/repro
 ARGS=(-x -q)
 if [[ "${REPRO_TIER1_SHORT:-0}" == "1" ]]; then
   ARGS+=(-m "not pallas_interpret" --ignore tests/test_dryrun_integration.py)
