@@ -1,0 +1,112 @@
+"""Robustness benchmark: graceful degradation under KV-pool pressure.
+
+Measures the fault-tolerance layer's core trade (docs/robustness.md):
+as the page pool shrinks to a fraction of the nominal run's measured
+peak, how many trajectories are still produced, at what TokenPS, with
+how much preemption/regeneration churn — and, the hard invariant, with
+ZERO escaped ``OutOfPages``.  Pool fractions {1.0, 0.75, 0.5} of the
+measured peak; each rollout is seeded, so rows are reproducible.
+
+Emits ``results/BENCH_robustness.json``.
+"""
+from __future__ import annotations
+
+import json
+import os
+import random
+import time
+
+from benchmarks.common import fmt_row, make_model, make_prompts
+from repro.configs.base import TreeConfig
+from repro.core.engine import TreeEngine
+from repro.core.sampler import sample_trees
+from repro.core.tree import Status
+from repro.kv.cache import OutOfPages
+
+OUT_PATH = os.path.join(os.path.dirname(__file__), "..", "results",
+                        "BENCH_robustness.json")
+
+# growth-dominated trees: the degradable memory (tree KV) must dwarf the
+# irreducible prefill footprint for sub-peak pools to be survivable
+ENGINE_KW = dict(num_pages=2048, page_size=16, max_slots=64,
+                 max_queries=16, max_prompt_len=256)
+FRACTIONS = (1.0, 0.75, 0.5)
+
+
+def _tree_cfg(quick: bool) -> TreeConfig:
+    return TreeConfig(max_depth=5 if quick else 6, segment_len=16,
+                      max_width=8, branch_factor=2,
+                      init_divergence_low=2, init_divergence_high=2,
+                      temperature=0.9)
+
+
+def _rollout(params, cfg, tree_cfg, prompts, targets, num_pages, seed=0):
+    eng = TreeEngine(params, cfg, tree_cfg, seed=seed,
+                     **dict(ENGINE_KW, num_pages=num_pages))
+    t0 = time.time()
+    escaped = 0
+    try:
+        trees, _ = sample_trees(eng, prompts, targets,
+                                rng=random.Random(seed))
+    except OutOfPages:
+        escaped, trees = 1, []
+    wall = time.time() - t0
+    kept = sum(len(t.finished) for t in trees)
+    leaves = sum(1 for t in trees for p in t.finished
+                 if p.status == Status.LEAF)
+    failed = kept - leaves
+    return {
+        "num_pages": num_pages,
+        "peak_pages": eng.kv.pool.peak_in_use,
+        "kept_trajectories": kept,
+        "leaves": leaves,
+        "failed": failed,
+        "preempted": eng.stats.preempted_paths,
+        "regenerated": eng.stats.regenerated_paths,
+        "pressure_events": eng.stats.pressure_events,
+        "model_tokens": eng.stats.model_tokens,
+        "wall_s": round(wall, 3),
+        "token_ps": round(eng.stats.model_tokens / max(wall, 1e-9), 1),
+        "escaped_oom": escaped,
+    }
+
+
+def run(quick: bool = True, out_path: str = OUT_PATH) -> dict:
+    n_queries = 2 if quick else 4
+    cfg, params = make_model("qwen2.5-7b")
+    tree_cfg = _tree_cfg(quick)
+    prompts, targets = make_prompts(n_queries, seed=1)
+
+    print("\n== Robustness: degradation under KV-pool pressure ==")
+    nominal = _rollout(params, cfg, tree_cfg, prompts, targets,
+                       ENGINE_KW["num_pages"])
+    peak = nominal["peak_pages"]
+    rows = []
+    hdr = ["pool_frac", "pages", "kept", "leaves", "preempted", "regen",
+           "tok/s", "escaped_oom"]
+    print(fmt_row(hdr, [9, 7, 6, 7, 9, 6, 10, 11]))
+    for frac in FRACTIONS:
+        pages = max(int(peak * frac), 1)
+        row = _rollout(params, cfg, tree_cfg, prompts, targets, pages)
+        row["pool_frac"] = frac
+        rows.append(row)
+        print(fmt_row([frac, pages, row["kept_trajectories"],
+                       row["leaves"], row["preempted"],
+                       row["regenerated"], row["token_ps"],
+                       row["escaped_oom"]],
+                      [9, 7, 6, 7, 9, 6, 10, 11]))
+        assert row["escaped_oom"] == 0, \
+            f"OutOfPages escaped at pool_frac={frac}"
+
+    out = {"benchmark": "robustness_degradation",
+           "arch": cfg.name, "num_queries": n_queries,
+           "nominal_peak_pages": peak, "rows": rows}
+    os.makedirs(os.path.dirname(out_path), exist_ok=True)
+    with open(out_path, "w") as f:
+        json.dump(out, f, indent=1)
+    print(f"wrote {os.path.relpath(out_path)}")
+    return out
+
+
+if __name__ == "__main__":
+    run()

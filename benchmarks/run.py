@@ -15,6 +15,7 @@ import traceback
 
 from benchmarks import (
     decode_hotpath,
+    robustness_degradation,
     train_hotpath,
     fig4_depth_segment,
     fig5_rollout_scaling,
@@ -30,6 +31,7 @@ from benchmarks import (
 BENCHES = [
     ("decode_hotpath", decode_hotpath),
     ("train_hotpath", train_hotpath),
+    ("robustness_degradation", robustness_degradation),
     ("table2_efficiency", table2_efficiency),
     ("fig4_depth_segment", fig4_depth_segment),
     ("fig5_rollout_scaling", fig5_rollout_scaling),

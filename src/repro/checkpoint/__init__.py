@@ -1,3 +1,10 @@
-from repro.checkpoint.store import save_checkpoint, load_checkpoint, latest_step
+from repro.checkpoint.store import (
+    latest_step,
+    list_steps,
+    load_checkpoint,
+    prune_checkpoints,
+    save_checkpoint,
+)
 
-__all__ = ["save_checkpoint", "load_checkpoint", "latest_step"]
+__all__ = ["save_checkpoint", "load_checkpoint", "latest_step",
+           "list_steps", "prune_checkpoints"]

@@ -1,15 +1,28 @@
-"""Step-indexed pytree checkpoints: msgpack + zstd.
+"""Step-indexed pytree checkpoints: msgpack + zstd/zlib.
 
-Arrays are serialized as (dtype, shape, raw bytes); the pytree structure is
-round-tripped via a nested (dict/list/tuple/scalar) skeleton.  Writes are
-atomic (tmp + rename) so an interrupted save never corrupts the latest
-checkpoint.  Save interval per the paper: every 50 steps.
+Arrays are serialized as (dtype, shape, raw bytes); the pytree structure
+is round-tripped via a nested (dict/list/tuple/scalar) skeleton.  Writes
+are crash-safe (tmp + fsync + rename + dir fsync) so an interruption at
+ANY point — mid-write, pre-rename, post-rename — leaves the latest
+*complete* checkpoint loadable (``latest_step`` only matches final
+``step_NNNNNNNN.ckpt`` names, never ``.tmp`` leftovers).  Save interval
+per the paper: every 50 steps.
+
+File format: 4-byte magic ``RPCK`` + 1 codec byte (``Z`` = zstd, ``z`` =
+zlib) + compressed msgpack payload.  zlib is the stdlib fallback used
+when the optional ``zstandard`` package is absent; a headerless file is
+a legacy zstd checkpoint from before the header existed.
+
+Low-precision dtypes (bfloat16, float8_*) resolve through ``ml_dtypes``
+— ``np.dtype("bfloat16")`` alone raises, so a bf16 checkpoint written on
+one host must not become unreadable on another (satellite fix, PR 7).
 """
 from __future__ import annotations
 
 import os
 import re
-from typing import Any, Optional
+import zlib
+from typing import Any, List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -21,17 +34,31 @@ try:  # optional dep: gate so importing repro.checkpoint never hard-fails
 except ImportError:  # pragma: no cover - environment-dependent
     zstandard = None
 
+try:  # jax ships it, but keep the store importable without
+    import ml_dtypes
+except ImportError:  # pragma: no cover - environment-dependent
+    ml_dtypes = None
 
-def _require_zstd():
-    if zstandard is None:
-        raise ImportError(
-            "checkpoint save/load needs the 'zstandard' package "
-            "(not installed in this environment)")
-    return zstandard
-
+_MAGIC = b"RPCK"
+_CODEC_ZSTD = b"Z"
+_CODEC_ZLIB = b"z"
 
 _ARR_KEY = "__nd__"
 _TUP_KEY = "__tuple__"
+
+
+def _resolve_dtype(name: str) -> np.dtype:
+    """``np.dtype`` with an ``ml_dtypes`` fallback: numpy alone rejects
+    'bfloat16' / 'float8_e4m3fn' / ... even though the arrays themselves
+    round-trip fine as raw bytes."""
+    try:
+        return np.dtype(name)
+    except TypeError:
+        if ml_dtypes is not None:
+            t = getattr(ml_dtypes, name, None)
+            if t is not None:
+                return np.dtype(t)
+        raise
 
 
 def _pack(obj: Any) -> Any:
@@ -51,7 +78,8 @@ def _pack(obj: Any) -> Any:
 def _unpack(obj: Any) -> Any:
     if isinstance(obj, dict):
         if obj.get(_ARR_KEY):
-            arr = np.frombuffer(obj["data"], dtype=np.dtype(obj["dtype"]))
+            arr = np.frombuffer(obj["data"],
+                                dtype=_resolve_dtype(obj["dtype"]))
             return jnp.asarray(arr.reshape(obj["shape"]))
         if _TUP_KEY in obj:
             return tuple(_unpack(v) for v in obj[_TUP_KEY])
@@ -61,25 +89,95 @@ def _unpack(obj: Any) -> Any:
     return obj
 
 
-def save_checkpoint(ckpt_dir: str, step: int, tree: Any) -> str:
+def _compress(payload: bytes) -> bytes:
+    if zstandard is not None:
+        body = zstandard.ZstdCompressor(level=3).compress(payload)
+        return _MAGIC + _CODEC_ZSTD + body
+    return _MAGIC + _CODEC_ZLIB + zlib.compress(payload, 3)
+
+
+def _decompress(blob: bytes) -> bytes:
+    if blob[:4] == _MAGIC:
+        codec, body = blob[4:5], blob[5:]
+        if codec == _CODEC_ZLIB:
+            return zlib.decompress(body)
+        if codec == _CODEC_ZSTD:
+            if zstandard is None:
+                raise ImportError(
+                    "zstd-compressed checkpoint needs the 'zstandard' "
+                    "package (not installed in this environment)")
+            return zstandard.ZstdDecompressor().decompress(body)
+        raise ValueError(f"unknown checkpoint codec byte {codec!r}")
+    # legacy headerless format: always zstd
+    if zstandard is None:
+        raise ImportError(
+            "legacy checkpoint needs the 'zstandard' package "
+            "(not installed in this environment)")
+    return zstandard.ZstdDecompressor().decompress(blob)
+
+
+def _ckpt_path(ckpt_dir: str, step: int) -> str:
+    return os.path.join(ckpt_dir, f"step_{step:08d}.ckpt")
+
+
+def _fsync_dir(path: str) -> None:
+    fd = os.open(path, os.O_RDONLY)
+    try:
+        os.fsync(fd)
+    finally:
+        os.close(fd)
+
+
+def save_checkpoint(ckpt_dir: str, step: int, tree: Any, *,
+                    keep_last: Optional[int] = None) -> str:
+    """Atomically write ``step_NNNNNNNN.ckpt``; with ``keep_last=N``,
+    prune older checkpoints (and any stale ``.tmp`` from a past crash)
+    down to the newest N after the rename lands."""
+    from repro.core import faults  # lazy: kill-point hooks, no-op inert
+
     os.makedirs(ckpt_dir, exist_ok=True)
     tree = jax.device_get(tree)
     payload = msgpack.packb(_pack(tree), use_bin_type=True)
-    compressed = _require_zstd().ZstdCompressor(level=3).compress(payload)
-    path = os.path.join(ckpt_dir, f"step_{step:08d}.ckpt")
+    blob = _compress(payload)
+    path = _ckpt_path(ckpt_dir, step)
     tmp = path + ".tmp"
+    faults.kill_point("ckpt.pre_write")
     with open(tmp, "wb") as f:
-        f.write(compressed)
+        f.write(blob)
+        f.flush()
+        os.fsync(f.fileno())
+    faults.kill_point("ckpt.pre_rename")
     os.replace(tmp, path)
+    _fsync_dir(ckpt_dir)
+    faults.kill_point("ckpt.post_rename")
+    if keep_last is not None:
+        prune_checkpoints(ckpt_dir, keep_last)
     return path
 
 
-def latest_step(ckpt_dir: str) -> Optional[int]:
+def list_steps(ckpt_dir: str) -> List[int]:
     if not os.path.isdir(ckpt_dir):
-        return None
-    steps = [int(m.group(1)) for fn in os.listdir(ckpt_dir)
-             if (m := re.fullmatch(r"step_(\d+)\.ckpt", fn))]
-    return max(steps) if steps else None
+        return []
+    return sorted(int(m.group(1)) for fn in os.listdir(ckpt_dir)
+                  if (m := re.fullmatch(r"step_(\d+)\.ckpt", fn)))
+
+
+def prune_checkpoints(ckpt_dir: str, keep_last: int) -> None:
+    """Delete all but the newest ``keep_last`` checkpoints, plus any
+    orphaned ``.tmp`` files left by an interrupted save."""
+    keep = set(list_steps(ckpt_dir)[-max(keep_last, 1):])
+    for fn in os.listdir(ckpt_dir):
+        full = os.path.join(ckpt_dir, fn)
+        if fn.endswith(".ckpt.tmp"):
+            os.remove(full)
+        elif (m := re.fullmatch(r"step_(\d+)\.ckpt", fn)) \
+                and int(m.group(1)) not in keep:
+            os.remove(full)
+
+
+def latest_step(ckpt_dir: str) -> Optional[int]:
+    steps = list_steps(ckpt_dir)
+    return steps[-1] if steps else None
 
 
 def load_checkpoint(ckpt_dir: str, step: Optional[int] = None) -> Any:
@@ -87,8 +185,6 @@ def load_checkpoint(ckpt_dir: str, step: Optional[int] = None) -> Any:
         step = latest_step(ckpt_dir)
         if step is None:
             raise FileNotFoundError(f"no checkpoints in {ckpt_dir}")
-    path = os.path.join(ckpt_dir, f"step_{step:08d}.ckpt")
-    with open(path, "rb") as f:
-        compressed = f.read()
-    payload = _require_zstd().ZstdDecompressor().decompress(compressed)
-    return _unpack(msgpack.unpackb(payload, raw=False))
+    with open(_ckpt_path(ckpt_dir, step), "rb") as f:
+        blob = f.read()
+    return _unpack(msgpack.unpackb(_decompress(blob), raw=False))

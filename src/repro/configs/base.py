@@ -246,6 +246,15 @@ class TreeConfig:
     repetition_count: int = 4
     temperature: float = 1.0
     top_p: float = 1.0
+    # KV-pressure graceful degradation (docs/robustness.md): above the
+    # soft watermark the branching budget's extra fan-out shrinks
+    # linearly, hitting zero (continuations only) at the hard watermark;
+    # engine-side preemption absorbs anything beyond that.  False
+    # restores pressure-blind budgets (preemption stays on — it is a
+    # correctness guard, not a heuristic).
+    pressure_aware: bool = True
+    kv_watermark_soft: float = 0.80
+    kv_watermark_hard: float = 0.95
 
     @property
     def max_response_len(self) -> int:
@@ -274,6 +283,11 @@ class TrainConfig:
     eps: float = 1e-8
     max_grad_norm: float = 1.0
     ppo_epochs: int = 1
+    # numeric quarantine (docs/robustness.md): jitted all-finite check on
+    # loss + grads inside the scanned update; a poisoned (N, L) bucket
+    # keeps params/opt-state bitwise-unchanged for that epoch and reports
+    # `skipped_nonfinite` instead of silently corrupting the run.
+    nonfinite_guard: bool = True
     # sequence packing: bin multiple short trajectories into each (N, L)
     # row of the update batch (repro.rl.packing) — attention is segment-
     # masked, RoPE positions reset per segment and SSM/RWKV recurrent

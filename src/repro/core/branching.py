@@ -145,3 +145,30 @@ def assign_branches(tree_cfg: TreeConfig, seg_logprobs: Sequence[float],
     for i in range(rem):
         forks[order[i % n]] += 1
     return forks
+
+
+def pressure_scale(tree_cfg: TreeConfig, pressure: float) -> float:
+    """Fraction of the *extra* (beyond-continuation) branching budget
+    kept at the given KV-pool pressure (``PagePool.watermark``).
+
+    1.0 below the soft watermark, linear to 0.0 at the hard watermark:
+    the tree stops minting new divergence before the pool exhausts, so
+    engine-side preemption is the exception, not the steady state."""
+    if not tree_cfg.pressure_aware:
+        return 1.0
+    soft, hard = tree_cfg.kv_watermark_soft, tree_cfg.kv_watermark_hard
+    if pressure <= soft:
+        return 1.0
+    if pressure >= hard:
+        return 0.0
+    return (hard - pressure) / max(hard - soft, 1e-9)
+
+
+def throttle_budget(tree_cfg: TreeConfig, budget: int, n_active: int,
+                    pressure: float) -> int:
+    """Pressure-aware term of the branching heuristic: every active path
+    keeps its continuation (the paper's guarantee is never throttled);
+    only the extra fan-out is scaled by :func:`pressure_scale`."""
+    keep = min(budget, n_active)
+    extra = max(budget - keep, 0)
+    return keep + int(extra * pressure_scale(tree_cfg, pressure))

@@ -46,9 +46,10 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig, TreeConfig
+from repro.core import faults
 from repro.core.guard import annotated_transfer
 from repro.kernels import ops as kops
-from repro.kv.cache import PagedKVState, bucket_pow2
+from repro.kv.cache import OutOfPages, PagedKVState, bucket_pow2
 from repro.models import attention as attn
 from repro.models import moe as moe_mod
 from repro.models import ssm
@@ -78,6 +79,8 @@ class EnginePath:
     logits_buf: Optional[jnp.ndarray] = None  # (Rb, V) device boundary
     logits_row: int = 0                       # logits, shared per round
     released: bool = False
+    numeric_bad: bool = False         # non-finite divergence draw detected
+                                      # (quarantined by the sampler)
 
     @property
     def last_logits(self) -> Optional[np.ndarray]:
@@ -100,6 +103,8 @@ class SegmentResult:
     tokens: List[int]
     logprobs: List[float]
     seg_logprob: float                # mean logprob (heuristic signal)
+    finite: bool = True               # False -> non-finite logprobs pulled
+                                      # for this row; quarantine the path
 
 
 @dataclasses.dataclass
@@ -116,6 +121,12 @@ class EngineStats:
                                       # pending scalars); debug
                                       # last_logits fetches are NOT counted
     fork_dispatches: int = 0          # jitted fork-sample/apply calls
+    # fault-tolerance counters (docs/robustness.md)
+    preempted_paths: int = 0          # active paths retracted under pressure
+    regenerated_paths: int = 0        # preempted paths replayed back in
+    quarantined_paths: int = 0        # paths with non-finite logits/logprobs
+    pressure_events: int = 0          # alloc failures absorbed by the
+                                      # preemption callback + retry
 
     @property
     def model_tokens(self) -> int:
@@ -241,6 +252,10 @@ class TreeEngine:
         self._prefill_fns: Dict[Tuple[int, int], Any] = {}
         self._key = jax.random.PRNGKey(seed)
         self.stats = EngineStats()
+        # pressure callback: called with the page deficit when an alloc
+        # fails; frees pages (retracting retained/active KV) and the
+        # allocation is retried once (docs/robustness.md)
+        self._pressure_cb: Optional[Any] = None
 
     # -- misc -----------------------------------------------------------------
 
@@ -258,12 +273,86 @@ class TreeEngine:
         self.stats.peak_pages = max(self.stats.peak_pages,
                                     self.kv.pool.pages_in_use)
 
+    # -- pressure / preemption ----------------------------------------------
+
+    def pressure(self) -> float:
+        """KV pool occupancy in [0, 1] — the branching throttle signal."""
+        return self.kv.pool.watermark
+
+    def pages_free(self) -> int:
+        return self.kv.pool.num_free
+
+    @property
+    def can_restore(self) -> bool:
+        """True when a preempted path is exactly reconstructable from its
+        token history alone — no retained modality prefix (VLM) and no
+        cross-KV conditioning (enc-dec), both of which live outside the
+        path's tokens."""
+        return self.n_prefix == 0 and not self.has_cross
+
+    def set_pressure_cb(self, cb) -> None:
+        """Install ``cb(page_deficit) -> pages_freed``, consulted when a
+        page/slot alloc fails before the allocation is retried once."""
+        self._pressure_cb = cb
+
+    def _alloc_page(self) -> int:
+        try:
+            return self.kv.pool.alloc()
+        except OutOfPages:
+            self.stats.pressure_events += 1
+            if self._pressure_cb is not None:
+                self._pressure_cb(1)
+            # retry once: an injected fault's spec is consumed and a real
+            # exhaustion either recovered via the callback or re-raises
+            # with full allocator diagnostics
+            return self.kv.pool.alloc()
+
+    def _alloc_slot(self) -> int:
+        try:
+            return self.kv.slots.alloc()
+        except OutOfPages:
+            self.stats.pressure_events += 1
+            if self._pressure_cb is not None:
+                self._pressure_cb(1)
+            return self.kv.slots.alloc()
+
+    def preempt_path(self, path: EnginePath) -> int:
+        """Retract an active path under KV pressure: free its pages/slot
+        and report how many pages actually returned to the pool (shared
+        prefix pages stay refcounted by siblings).  The caller keeps the
+        host-side tokens and re-admits via :meth:`restore_path` when the
+        budget recovers."""
+        before = self.kv.pool.pages_in_use
+        self.release_path(path)
+        self.stats.preempted_paths += 1
+        return before - self.kv.pool.pages_in_use
+
+    def restore_path(self, tokens: List[int]) -> EnginePath:
+        """Regenerate a preempted path by replaying its full token history
+        (prompt + generated) into fresh pages — the `_replay_prefix`
+        machinery DFS fallback already uses.  Returns a path with boundary
+        logits and a freshly drawn pending token (the preempted pending
+        draw is not retained; the continuation re-samples)."""
+        assert self.can_restore, \
+            "restore_path needs a token-complete context (no modality " \
+            "prefix / cross-KV)"
+        position = self.n_prefix + len(tokens)
+        child = EnginePath(table=[], slot=-1, qslot=-1, position=position,
+                           pending_token=0, pending_logprob=0.0)
+        self._ensure_capacity(child, position)
+        if self.has_rec:
+            child.slot = self._alloc_slot()
+        self._replay_prefix(child, list(tokens))
+        self.sample_pending_batch([child])
+        self.stats.regenerated_paths += 1
+        return child
+
     # -- page / slot lifecycle --------------------------------------------------
 
     def _ensure_capacity(self, path: EnginePath, new_len: int) -> None:
         needed = -(-new_len // self.page_size)
         while len(path.table) < needed:
-            path.table.append(self.kv.pool.alloc())
+            path.table.append(self._alloc_page())
         self._track_pages()
 
     def _cow_pages(self, path: EnginePath, page_idxs
@@ -279,7 +368,7 @@ class TreeEngine:
             src = path.table[page_idx]
             if self.kv.pool.refcount[src] == 1:
                 continue  # already private
-            dst = self.kv.pool.alloc()
+            dst = self._alloc_page()
             self.kv.pool.release(src)
             path.table[page_idx] = dst
             src_pages.append(src)
@@ -316,9 +405,15 @@ class TreeEngine:
             tok, lp = annotated_transfer((tok, lp), reason="fork-draws")
             self.stats.host_bytes += tok.nbytes + lp.nbytes
             self.stats.fork_dispatches += 1
+            lp = faults.corrupt_array("engine.fork_logprobs", lp)
             for j, p in enumerate(ps):
                 p.pending_token = int(tok[j])
                 p.pending_logprob = float(lp[j])
+                # non-finite divergence draw: the boundary logits are
+                # poisoned — mark for quarantine instead of decoding on
+                if not np.isfinite(lp[j]):
+                    p.numeric_bad = True
+                    self.stats.quarantined_paths += 1
 
     def release_path(self, path: EnginePath) -> None:
         if path.released:
@@ -372,7 +467,7 @@ class TreeEngine:
                                  pending_token=0, pending_logprob=0.0)
                 self._ensure_capacity(pth, int(lengths[i]))
                 if self.has_rec:
-                    pth.slot = self.kv.slots.alloc()
+                    pth.slot = self._alloc_slot()
                 if self.has_cross or n_pre:
                     pth.qslot = self.qslot_alloc.pop() \
                         if self.has_cross else -1
@@ -447,7 +542,7 @@ class TreeEngine:
                 page_src += ps
                 page_dst += pd
             if parent.slot >= 0:
-                child.slot = self.kv.slots.alloc()
+                child.slot = self._alloc_slot()
                 slot_src.append(parent.slot)
                 slot_dst.append(child.slot)
             children.append(child)
@@ -488,7 +583,7 @@ class TreeEngine:
                 len(replay_tokens) >= prefix_position - self.n_prefix, \
                 "fork_from_prefix on a recurrent arch needs the full " \
                 "prompt+prefix token sequence in replay_tokens"
-            child.slot = self.kv.slots.alloc()
+            child.slot = self._alloc_slot()
             # replay rewrites every position it will ever read, so COW here
             # is bookkeeping only: retarget the table to fresh pages and
             # skip the device copy of bytes the prefill immediately clobbers
@@ -599,6 +694,7 @@ class TreeEngine:
             (toks, lps, pend_tok, pend_lp), reason="decode-segment")
         self.stats.host_bytes += (toks.nbytes + lps.nbytes
                                   + pend_tok.nbytes + pend_lp.nbytes)
+        lps = faults.corrupt_array("engine.decode_logprobs", lps)
 
         results = []
         for i, p in enumerate(paths):
@@ -609,9 +705,17 @@ class TreeEngine:
             p.logits_row = i
             seg_t = [int(t) for t in toks[i]]
             seg_l = [float(v) for v in lps[i]]
+            # numeric quarantine: a non-finite logprob in this row means
+            # the model emitted non-finite logits for this path — flag the
+            # segment so the sampler retires the path instead of training
+            # on poisoned signal (docs/robustness.md)
+            finite = bool(np.isfinite(lps[i]).all()
+                          and np.isfinite(pend_lp[i]))
+            if not finite:
+                self.stats.quarantined_paths += 1
             results.append(SegmentResult(
                 tokens=seg_t, logprobs=seg_l,
-                seg_logprob=float(np.mean(seg_l))))
+                seg_logprob=float(np.mean(seg_l)), finite=finite))
         self.stats.decode_tokens += R * l
         self.stats.segments += R
         return results

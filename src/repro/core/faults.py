@@ -1,0 +1,185 @@
+"""Deterministic fault injection for the rollout/training stack.
+
+Every robustness behavior in this repo (KV-pressure degradation, numeric
+quarantine, crash-safe resume) is provable in tests because faults are
+*injected*, not hoped for.  A :class:`FaultInjector` is a context manager
+armed with specs that fire at the *n*-th occurrence of a named site:
+
+    with FaultInjector(seed=0) as fi:
+        fi.page_exhaustion(at_alloc=5)            # 5th page alloc raises
+        fi.nan_logits(at_round=2, rows=(0,))      # NaN decode row, round 2
+        fi.nan_grads(at_step=1)                   # poison one update batch
+        fi.kill("ckpt.pre_rename")                # simulate kill -9
+        ...  # run the system under test
+
+Sites are plain strings checked by cheap module-level helpers (`fires`,
+`corrupt_array`, `kill_point`) that are no-ops when no injector is
+active, so production paths pay one global read.  Counters are per-site
+and deterministic: the k-th event of a site fires iff a spec covers k,
+independent of timing.  The seeded RNG backs optional probabilistic
+specs (``prob=``), keeping even randomized campaigns reproducible.
+
+Instrumented sites:
+
+==========================  ================================================
+``page_pool.alloc``         :meth:`repro.kv.cache.PagePool.alloc` raises
+                            ``OutOfPages`` (installed via the module-global
+                            ``fault_hook`` to avoid an import cycle)
+``engine.decode_logprobs``  per-round (R, l) segment logprobs pulled by
+                            ``TreeEngine.decode_segments``
+``engine.fork_logprobs``    per-call (F,) divergence draws pulled by
+                            ``TreeEngine.sample_pending_batch``
+``trainer.batch_logprobs``  the (N, L) rollout-logprobs plane fed to the
+                            jitted update (NaN here poisons loss *and*
+                            grads inside jit)
+``kill:<point>``            process-interrupt points — ``ckpt.pre_write``,
+                            ``ckpt.pre_rename``, ``ckpt.post_rename``
+                            (checkpoint store) and ``train.step`` (launch
+                            driver) raise :class:`InjectedCrash`
+==========================  ================================================
+
+Only one injector may be active at a time (no nesting); arming installs
+the KV-cache hook and disarming removes it, even on exceptions.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+
+class InjectedFault(RuntimeError):
+    """Base class for all injector-raised failures."""
+
+
+class InjectedCrash(InjectedFault):
+    """Simulated process interrupt (``kill -9``) at a named kill point."""
+
+
+@dataclasses.dataclass
+class _Spec:
+    site: str
+    at: int                       # 1-based event index that fires
+    times: int = 1                # consecutive events that fire
+    rows: Tuple[int, ...] = (0,)  # rows to corrupt (corrupt_array sites)
+    value: float = float("nan")
+    prob: float = 0.0             # extra per-event probability (seeded)
+
+    def covers(self, n: int) -> bool:
+        return self.at <= n < self.at + self.times
+
+
+class FaultInjector:
+    """Seeded, deterministic fault-injection harness (context manager)."""
+
+    def __init__(self, seed: int = 0):
+        self.rng = np.random.default_rng(seed)
+        self._specs: Dict[str, List[_Spec]] = {}
+        self.counters: Dict[str, int] = {}
+        self.fired: List[Tuple[str, int]] = []   # (site, event#) log
+
+    # -- spec builders (chainable) ----------------------------------------
+
+    def on(self, site: str, at: int, *, times: int = 1,
+           rows: Tuple[int, ...] = (0,), value: float = float("nan"),
+           prob: float = 0.0) -> "FaultInjector":
+        self._specs.setdefault(site, []).append(
+            _Spec(site, at, times, tuple(rows), value, prob))
+        return self
+
+    def page_exhaustion(self, at_alloc: int,
+                        times: int = 1) -> "FaultInjector":
+        return self.on("page_pool.alloc", at_alloc, times=times)
+
+    def nan_logits(self, at_round: int,
+                   rows: Tuple[int, ...] = (0,)) -> "FaultInjector":
+        return self.on("engine.decode_logprobs", at_round, rows=rows)
+
+    def nan_fork_logits(self, at_call: int,
+                        rows: Tuple[int, ...] = (0,)) -> "FaultInjector":
+        return self.on("engine.fork_logprobs", at_call, rows=rows)
+
+    def nan_grads(self, at_step: int) -> "FaultInjector":
+        return self.on("trainer.batch_logprobs", at_step)
+
+    def kill(self, point: str, at: int = 1) -> "FaultInjector":
+        return self.on("kill:" + point, at)
+
+    # -- firing ------------------------------------------------------------
+
+    def _match(self, site: str) -> Optional[_Spec]:
+        n = self.counters.get(site, 0) + 1
+        self.counters[site] = n
+        for spec in self._specs.get(site, ()):
+            if spec.covers(n) or (spec.prob > 0.0
+                                  and self.rng.random() < spec.prob):
+                self.fired.append((site, n))
+                return spec
+        return None
+
+    def fires(self, site: str) -> bool:
+        return self._match(site) is not None
+
+    def corrupt_array(self, site: str, arr: np.ndarray,
+                      col: int = 0) -> np.ndarray:
+        spec = self._match(site)
+        if spec is None:
+            return arr
+        self.fired.pop()              # re-log below with row detail
+        out = np.array(arr, copy=True)
+        flat = out.reshape(out.shape[0], -1) if out.ndim > 1 \
+            else out.reshape(-1, 1)
+        for r in spec.rows:
+            r = r % flat.shape[0]
+            flat[r, col % flat.shape[1]] = spec.value
+            self.fired.append((site, self.counters[site]))
+        return out
+
+    def kill_point(self, point: str) -> None:
+        if self.fires("kill:" + point):
+            raise InjectedCrash(point)
+
+    # -- arming ------------------------------------------------------------
+
+    def __enter__(self) -> "FaultInjector":
+        global _ACTIVE
+        if _ACTIVE is not None:
+            raise RuntimeError("FaultInjector does not nest")
+        _ACTIVE = self
+        import repro.kv.cache as kvc   # lazy: avoids core<->kv cycle
+        self._prev_hook = kvc.fault_hook
+        kvc.fault_hook = self.fires
+        return self
+
+    def __exit__(self, *exc) -> None:
+        global _ACTIVE
+        _ACTIVE = None
+        import repro.kv.cache as kvc
+        kvc.fault_hook = self._prev_hook
+        return None
+
+
+# -- module-level helpers (cheap no-ops when disarmed) ----------------------
+
+_ACTIVE: Optional[FaultInjector] = None
+
+
+def active() -> Optional[FaultInjector]:
+    return _ACTIVE
+
+
+def fires(site: str) -> bool:
+    a = _ACTIVE
+    return False if a is None else a.fires(site)
+
+
+def corrupt_array(site: str, arr, col: int = 0):
+    a = _ACTIVE
+    return arr if a is None else a.corrupt_array(site, arr, col)
+
+
+def kill_point(point: str) -> None:
+    a = _ACTIVE
+    if a is not None:
+        a.kill_point(point)

@@ -83,6 +83,10 @@ class QueryTree:
     root_id: int = dataclasses.field(default_factory=_next_node_id)
     active: List[Path] = dataclasses.field(default_factory=list)
     finished: List[Path] = dataclasses.field(default_factory=list)
+    # paths retracted under KV pressure (ep released, tokens kept);
+    # regenerated via TreeEngine.restore_path when the pool recovers, or
+    # finished FAILED("preempted") at end of rollout (docs/robustness.md)
+    preempted: List[Path] = dataclasses.field(default_factory=list)
     init_div: int = 1
     total_segments: int = 0
     # J - 1 of the padded ancestor rows recorded by add_finished (set by
@@ -134,7 +138,11 @@ class QueryTree:
         return [p for p in self.finished
                 if p.status == Status.LEAF
                 and p.finish_reason in ("eos", "boxed")
-                and len(p.seg_bounds) > 2]
+                and len(p.seg_bounds) > 2
+                # a leaf whose retained KV was reclaimed under pool
+                # pressure can no longer seed an engine fork
+                and not (p.ep is not None
+                         and getattr(p.ep, "released", False))]
 
 
 def new_node_id() -> int:

@@ -27,7 +27,50 @@ from repro.configs.base import ModelConfig
 
 
 class OutOfPages(RuntimeError):
-    pass
+    """KV page / slot pool exhaustion, carrying allocator diagnostics.
+
+    The allocator fills in pool occupancy; the engine/sampler *annotate*
+    the in-flight exception with live-path and per-query page counts so a
+    real exhaustion is debuggable from the exception text alone (under
+    the pressure protocol — `docs/robustness.md` — one of these escaping
+    a rollout is itself a bug report)."""
+
+    def __init__(self, msg: str, *, pages_in_use: Optional[int] = None,
+                 num_pages: Optional[int] = None):
+        super().__init__(msg)
+        self.base_msg = msg
+        self.pages_in_use = pages_in_use
+        self.num_pages = num_pages
+        self.live_paths: Optional[int] = None
+        self.per_query_pages: Optional[Dict[int, int]] = None
+
+    def annotate(self, *, live_paths: Optional[int] = None,
+                 per_query_pages: Optional[Dict[int, int]] = None
+                 ) -> "OutOfPages":
+        if live_paths is not None:
+            self.live_paths = live_paths
+        if per_query_pages is not None:
+            self.per_query_pages = dict(per_query_pages)
+        return self
+
+    def __str__(self) -> str:
+        parts = [self.base_msg]
+        if self.pages_in_use is not None and self.num_pages is not None:
+            parts.append(f"pages_in_use={self.pages_in_use}"
+                         f"/{self.num_pages}")
+        if self.live_paths is not None:
+            parts.append(f"live_paths={self.live_paths}")
+        if self.per_query_pages:
+            per_q = ", ".join(f"q{q}:{n}" for q, n in
+                              sorted(self.per_query_pages.items()))
+            parts.append(f"per_query_pages={{{per_q}}}")
+        return " | ".join(parts)
+
+
+# Fault-injection hook (see repro.core.faults).  FaultInjector installs
+# its `fires` callable here on arm — a module global rather than an
+# import, because repro.core.engine imports this module at package init.
+fault_hook = None
 
 
 def bucket_pow2(n: int, minimum: int = 1) -> int:
@@ -46,14 +89,23 @@ class PagePool:
         self.refcount = np.zeros(self.num_pages, dtype=np.int32)
         self.free: List[int] = list(range(self.num_pages - 1, -1, -1))
         self._in_use = 0          # incremental |{p: refcount[p] > 0}|
+        self.peak_in_use = 0      # high-water mark (pool-sizing signal)
 
     def alloc(self) -> int:
+        if fault_hook is not None and fault_hook("page_pool.alloc"):
+            raise OutOfPages("injected page exhaustion",
+                             pages_in_use=self._in_use,
+                             num_pages=self.num_pages)
         if not self.free:
-            raise OutOfPages(f"pool exhausted ({self.num_pages} pages)")
+            raise OutOfPages("pool exhausted",
+                             pages_in_use=self._in_use,
+                             num_pages=self.num_pages)
         pid = self.free.pop()
         assert self.refcount[pid] == 0
         self.refcount[pid] = 1
         self._in_use += 1
+        if self._in_use > self.peak_in_use:
+            self.peak_in_use = self._in_use
         return pid
 
     def retain(self, pid: int) -> None:
@@ -73,6 +125,16 @@ class PagePool:
         # path and an O(num_pages) refcount scan here dominated them.
         return self._in_use
 
+    @property
+    def num_free(self) -> int:
+        return len(self.free)
+
+    @property
+    def watermark(self) -> float:
+        """Pool occupancy in [0, 1] — the pressure signal the engine and
+        branching heuristic consult (`docs/robustness.md`)."""
+        return self._in_use / max(self.num_pages, 1)
+
 
 class SlotAllocator:
     """Fixed pool of per-path slots (recurrent state / scratch rows)."""
@@ -83,7 +145,8 @@ class SlotAllocator:
 
     def alloc(self) -> int:
         if not self.free:
-            raise OutOfPages(f"slots exhausted ({self.num_slots})")
+            raise OutOfPages(
+                f"slots exhausted ({self.in_use}/{self.num_slots} slots)")
         return self.free.pop()
 
     def release(self, slot: int) -> None:
@@ -92,6 +155,10 @@ class SlotAllocator:
     @property
     def in_use(self) -> int:
         return self.num_slots - len(self.free)
+
+    @property
+    def watermark(self) -> float:
+        return self.in_use / max(self.num_slots, 1)
 
 
 class PagedKVState:

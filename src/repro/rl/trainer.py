@@ -57,6 +57,7 @@ import numpy as np
 
 from repro.configs.base import ModelConfig, TrainConfig, TreeConfig
 from repro.core import advantage as adv_mod
+from repro.core import faults
 from repro.core.engine import TreeEngine
 from repro.core.guard import annotated_transfer
 from repro.core.loss import token_logprobs_from_logits
@@ -73,6 +74,7 @@ from repro.data.synthetic_math import MathTaskGenerator
 from repro.data.tokenizer import ByteTokenizer
 from repro.models.model import forward, init_params
 from repro.optim import (
+    AdamWState,
     adamw_init,
     adamw_update,
     clip_by_global_norm,
@@ -235,6 +237,47 @@ class RLTrainer:
         self._rng = np.random.default_rng(seed)
         import random as _random
         self._pyrng = _random.Random(seed)
+
+    # -- crash-safe state (docs/robustness.md) -----------------------------------
+
+    def state_dict(self) -> Dict[str, Any]:
+        """Complete resumable training state.
+
+        Covers every source of run-to-run divergence: params, optimizer
+        moments, the step counter, the metrics cursor (how many rows of
+        the JSONL stream were already emitted), and all three host RNGs —
+        ``_rng`` (numpy; also seeds each rollout engine's device keys, so
+        capturing it captures device sampling), ``_pyrng`` (tree
+        branching), and ``gen.rng`` (task generation).  RNG states are
+        pickled to bytes: numpy's PCG64 state carries 128-bit ints that
+        overflow msgpack, and ``random.Random`` state is a nested tuple —
+        an opaque bytes blob round-trips both exactly.
+        """
+        import pickle
+
+        return {
+            "params": self.params,
+            "opt_state": self.opt_state,
+            "step": int(self.step),
+            "metrics_cursor": len(self.metrics_log),
+            "np_rng": pickle.dumps(self._rng.bit_generator.state),
+            "py_rng": pickle.dumps(self._pyrng.getstate()),
+            "gen_rng": pickle.dumps(self.gen.rng.getstate()),
+        }
+
+    def load_state_dict(self, state: Dict[str, Any]) -> None:
+        """Restore :meth:`state_dict` output — the next ``train_step``
+        is bit-identical to the one an uninterrupted run would take."""
+        import pickle
+
+        self.params = state["params"]
+        # the checkpoint skeleton round-trips NamedTuples as plain tuples
+        self.opt_state = AdamWState(*state["opt_state"])
+        self.step = int(state["step"])
+        del self.metrics_log[int(state["metrics_cursor"]):]
+        self._rng.bit_generator.state = pickle.loads(state["np_rng"])
+        self._pyrng.setstate(pickle.loads(state["py_rng"]))
+        self.gen.rng.setstate(pickle.loads(state["gen_rng"]))
 
     # -- engine ----------------------------------------------------------------
 
@@ -469,6 +512,11 @@ class RLTrainer:
         resp_lens[:N] = batch.resp_lens
         lp_old = np.zeros((Nb, L), np.float32)
         lp_old[:N] = batch.logprobs_old
+        # fault-injection site: poisoning one response-position logprob
+        # NaNs the loss/grads inside the jitted scan, which the
+        # nonfinite guard must absorb (tests/test_faults.py)
+        lp_old = faults.corrupt_array("trainer.batch_logprobs", lp_old,
+                                      col=int(batch.prompt_lens[0]))
         adv_traj = np.zeros((Nb,), np.float32)
         adv_traj[:N] = batch.adv_traj
         fn = self._get_update_fn(Nb, L)
@@ -521,6 +569,11 @@ class RLTrainer:
         tokens[:N] = batch.tokens
         lp_old = np.zeros((Nb, L), np.float32)
         lp_old[:N] = batch.logprobs_old
+        # fault-injection site (see update()): poison the first response
+        # token of row 0's first packed segment
+        lp_old = faults.corrupt_array(
+            "trainer.batch_logprobs", lp_old,
+            col=int(batch.seg_prompt_lens[0, 0]))
         seg_plens = np.zeros((Nb, S), np.int32)   # padded rows: 0-width segs
         seg_plens[:N] = batch.seg_prompt_lens
         seg_rlens = np.zeros((Nb, S), np.int32)

@@ -205,6 +205,8 @@ def make_ppo_update(cfg: ModelConfig, tc: TrainConfig, *,
     if lr_fn is None:
         lr_fn = lambda step: jnp.asarray(tc.learning_rate, jnp.float32)
 
+    guard = bool(tc.nonfinite_guard)
+
     def update(params, opt_state, batch: Batch, step):
         lr = lr_fn(step)
 
@@ -217,13 +219,39 @@ def make_ppo_update(cfg: ModelConfig, tc: TrainConfig, *,
                 params, grads, opt_state, lr=lr, beta1=tc.beta1,
                 beta2=tc.beta2, eps=tc.eps, weight_decay=tc.weight_decay)
             metrics = dict(metrics, loss=loss, grad_norm=gnorm, lr=lr)
+            if guard:
+                # numeric quarantine (docs/robustness.md): a poisoned
+                # batch must not corrupt params — select the OLD
+                # params/opt-state leafwise (bitwise-preserving) when
+                # loss or any grad leaf is non-finite, and report the
+                # skip instead of the silent NaN cascade
+                ok = _all_finite(loss, grads)
+                new_params = jax.tree.map(
+                    lambda n, o: jnp.where(ok, n, o), new_params, params)
+                new_opt = jax.tree.map(
+                    lambda n, o: jnp.where(ok, n, o), new_opt, opt_state)
+                metrics = dict(
+                    metrics,
+                    skipped_nonfinite=1.0 - ok.astype(jnp.float32))
             return (new_params, new_opt), metrics
 
         (params, opt_state), ms = jax.lax.scan(
             epoch, (params, opt_state), None, length=K)
         metrics = {k: v[-1] for k, v in ms.items()}
+        if guard:
+            # total skips across the K epochs, not just the last one
+            metrics["skipped_nonfinite"] = ms["skipped_nonfinite"].sum()
         if donate_logprobs:
             return params, opt_state, batch["logprobs_old"], metrics
         return params, opt_state, metrics
 
     return update
+
+
+def _all_finite(loss, grads) -> jnp.ndarray:
+    """Scalar bool: the loss and every grad leaf are finite.  Runs fully
+    inside the jitted scan epoch — no host sync on the hot path."""
+    ok = jnp.isfinite(loss)
+    for g in jax.tree.leaves(grads):
+        ok = ok & jnp.all(jnp.isfinite(g))
+    return ok

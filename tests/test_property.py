@@ -88,6 +88,43 @@ def test_page_pool_invariants(ops):
         assert len(pool.free) == 16 - len(in_use)
 
 
+@SETTINGS
+@given(st.lists(st.tuples(st.sampled_from(["alloc", "fork", "grow",
+                                           "preempt"]),
+                          st.integers(0, 10**6)),
+                max_size=150))
+def test_page_pool_preempt_interleaving(ops):
+    """Refcount hygiene under the pressure protocol's op mix: path
+    tables fork (retain every page), grow (alloc), and preempt (release
+    the whole table at once).  After draining, the pool must be exactly
+    empty — no leaked or double-freed page, and the high-water mark
+    never exceeds the pool."""
+    pool = PagePool(24)
+    tables = []
+    for op, r in ops:
+        if op == "alloc" and pool.num_free:
+            tables.append([pool.alloc()])
+        elif op == "fork" and tables:
+            src = tables[r % len(tables)]
+            for pid in src:
+                pool.retain(pid)
+            tables.append(list(src))
+        elif op == "grow" and tables and pool.num_free:
+            tables[r % len(tables)].append(pool.alloc())
+        elif op == "preempt" and tables:
+            for pid in tables.pop(r % len(tables)):
+                pool.release(pid)
+        assert (pool.refcount >= 0).all()
+        held = {p for t in tables for p in t}
+        assert set(np.nonzero(pool.refcount)[0]) == held
+        assert pool.pages_in_use == len(held) <= pool.peak_in_use <= 24
+        assert 0.0 <= pool.watermark <= 1.0
+    for tbl in tables:
+        for pid in tbl:
+            pool.release(pid)
+    assert pool.pages_in_use == 0 and pool.num_free == 24
+
+
 # ---------------------------------------------------------------------------
 # advantage
 # ---------------------------------------------------------------------------

@@ -53,6 +53,18 @@ TRACE_ENTRIES: Dict[str, Tuple[int, ...]] = {
     "jax.experimental.pallas.pallas_call": (0,),
 }
 
+# modules whose functions are host-side BY CONTRACT even when invoked
+# from hot-path code: the fault-injection hooks (inert no-ops unless a
+# test installs an injector) and the transfer-guard helpers (annotation
+# wrappers around explicit, intentional transfers).  The traced-closure
+# BFS does not descend into them, so their host ops (np.isfinite,
+# device_get inside annotated_transfer, ...) are not flagged as traced
+# transfers — they already ARE the audited boundary.
+TRACED_EXEMPT_MODULES: Set[str] = {
+    "repro.core.faults",
+    "repro.core.guard",
+}
+
 # import roots we canonicalize even without seeing their definition
 _WELL_KNOWN = {
     "jnp": "jax.numpy",
@@ -600,6 +612,8 @@ class Index:
             fi = work.pop()
             if fi.fid in seen:
                 continue
+            if fi.fid[0] in TRACED_EXEMPT_MODULES:
+                continue  # host-by-contract helpers (see constant above)
             seen.add(fi.fid)
             fi.traced = True
             for callee in list(fi.calls):

@@ -12,6 +12,9 @@
 #       interpreter (mamba/wkv6 segment-reset parity lives here)
 #   hypothesis-gated — tests/test_property.py importorskips hypothesis;
 #       absent the optional dep the property suite self-skips
+#   fault — the deterministic fault-injection suite (tests/test_faults.py:
+#       KV-pressure degradation, NaN quarantine, crash-safe resume). Runs
+#       in BOTH full and short mode; -m fault selects just it
 # Extra args are forwarded to pytest.
 set -euo pipefail
 cd "$(dirname "$0")/.."
