@@ -339,10 +339,16 @@ class TreeEngine:
         position = self.n_prefix + len(tokens)
         child = EnginePath(table=[], slot=-1, qslot=-1, position=position,
                            pending_token=0, pending_logprob=0.0)
-        self._ensure_capacity(child, position)
-        if self.has_rec:
-            child.slot = self._alloc_slot()
-        self._replay_prefix(child, list(tokens))
+        try:
+            self._ensure_capacity(child, position)
+            if self.has_rec:
+                child.slot = self._alloc_slot()
+            self._replay_prefix(child, list(tokens))
+        except Exception:
+            # an OutOfPages mid-restore must not leak the pages already
+            # replayed into the half-built path (R5 kv-lifecycle)
+            self.release_partial([child])
+            raise
         self.sample_pending_batch([child])
         self.stats.regenerated_paths += 1
         return child
@@ -432,6 +438,16 @@ class TreeEngine:
         if qslot >= 0:
             self.qslot_alloc.append(qslot)
 
+    def release_partial(self, paths: Sequence[EnginePath]) -> None:
+        """Error-path cleanup for a partially constructed batch: when an
+        ``OutOfPages`` (or a fault-injection kill point) unwinds mid-
+        construction, every page/slot the batch acquired so far goes
+        back to the pool.  Safe on half-built paths — empty tables,
+        unset slots and already-released paths are all no-ops."""
+        for path in paths:
+            self.release_path(path)
+        self._track_pages()
+
     # -- prefill ------------------------------------------------------------------
 
     def prefill_queries(self, prompts: List[List[int]],
@@ -460,26 +476,38 @@ class TreeEngine:
         tables = np.zeros((Qb, self.MP), np.int32)
         slots = np.zeros((Qb,), np.int32)
         qslots = np.zeros((Qb,), np.int32)
-        for i in range(Qb):
-            if i < Q:
-                pth = EnginePath(table=[], slot=-1, qslot=-1,
-                                 position=int(lengths[i]),
-                                 pending_token=0, pending_logprob=0.0)
-                self._ensure_capacity(pth, int(lengths[i]))
-                if self.has_rec:
-                    pth.slot = self._alloc_slot()
-                if self.has_cross or n_pre:
-                    pth.qslot = self.qslot_alloc.pop() \
-                        if self.has_cross else -1
-                paths.append(pth)
-                row = pth.table + [-1] * (self.MP - len(pth.table))
-                tables[i] = row
-                slots[i] = pth.slot if pth.slot >= 0 else self.scratch_slot
-                qslots[i] = max(pth.qslot, 0)
-            else:
-                tables[i, 0] = self.garbage_page
-                tables[i, 1:] = -1
-                slots[i] = max(self.scratch_slot, 0)
+        try:
+            for i in range(Qb):
+                if i < Q:
+                    pth = EnginePath(table=[], slot=-1, qslot=-1,
+                                     position=int(lengths[i]),
+                                     pending_token=0, pending_logprob=0.0)
+                    # appended before the allocs so the error path below
+                    # can clean up the half-built root too
+                    paths.append(pth)
+                    self._ensure_capacity(pth, int(lengths[i]))
+                    if self.has_rec:
+                        pth.slot = self._alloc_slot()
+                    if self.has_cross or n_pre:
+                        pth.qslot = self.qslot_alloc.pop() \
+                            if self.has_cross else -1
+                    row = pth.table + [-1] * (self.MP - len(pth.table))
+                    tables[i] = row
+                    slots[i] = pth.slot if pth.slot >= 0 \
+                        else self.scratch_slot
+                    qslots[i] = max(pth.qslot, 0)
+                else:
+                    tables[i, 0] = self.garbage_page
+                    tables[i, 1:] = -1
+                    slots[i] = max(self.scratch_slot, 0)
+        except Exception:
+            # OutOfPages mid-batch: return the roots built so far (pages,
+            # slots *and* popped query slots) before propagating
+            for pth in paths:
+                if pth.qslot >= 0:
+                    self.release_qslot(pth.qslot)
+            self.release_partial(paths)
+            raise
 
         if prefix_embeds is not None:
             pe = np.zeros((Qb,) + prefix_embeds.shape[1:],
@@ -528,24 +556,33 @@ class TreeEngine:
         page_dst: List[int] = []
         slot_src: List[int] = []
         slot_dst: List[int] = []
-        for parent in parents:
-            child = EnginePath(
-                table=self.kv.fork_table(parent.table),
-                slot=-1, qslot=parent.qslot, position=parent.position,
-                pending_token=parent.pending_token,
-                pending_logprob=parent.pending_logprob,
-                logits_buf=parent.logits_buf,
-                logits_row=parent.logits_row)
-            if parent.position % self.page_size != 0:
-                ps, pd = self._cow_pages(
-                    child, [parent.position // self.page_size])
-                page_src += ps
-                page_dst += pd
-            if parent.slot >= 0:
-                child.slot = self._alloc_slot()
-                slot_src.append(parent.slot)
-                slot_dst.append(child.slot)
-            children.append(child)
+        try:
+            for parent in parents:
+                child = EnginePath(
+                    table=self.kv.fork_table(parent.table),
+                    slot=-1, qslot=parent.qslot, position=parent.position,
+                    pending_token=parent.pending_token,
+                    pending_logprob=parent.pending_logprob,
+                    logits_buf=parent.logits_buf,
+                    logits_row=parent.logits_row)
+                # appended before the COW/slot allocs so the error path
+                # below also releases the partially built child
+                children.append(child)
+                if parent.position % self.page_size != 0:
+                    ps, pd = self._cow_pages(
+                        child, [parent.position // self.page_size])
+                    page_src += ps
+                    page_dst += pd
+                if parent.slot >= 0:
+                    child.slot = self._alloc_slot()
+                    slot_src.append(parent.slot)
+                    slot_dst.append(child.slot)
+        except Exception:
+            # OutOfPages mid-round: drop every fork_table retain / COW
+            # page / slot the round acquired so far, then propagate —
+            # the parents stay intact (their refcounts were only added to)
+            self.release_partial(children)
+            raise
         if page_src or slot_src:
             self.kv.apply_forks(page_src, page_dst, slot_src, slot_dst)
             self.stats.fork_dispatches += 1
@@ -578,6 +615,21 @@ class TreeEngine:
             table=self.kv.fork_table(src.table[:n_pages]),
             slot=-1, qslot=src.qslot, position=prefix_position,
             pending_token=0, pending_logprob=0.0)
+        try:
+            self._fork_from_prefix_arm(child, prefix_position,
+                                       replay_tokens)
+        except Exception:
+            # OutOfPages mid-fallback-fork: the shared-prefix retains and
+            # any COW pages / slot must go back before propagating
+            self.release_partial([child])
+            raise
+        self.sample_pending_batch([child])
+        self.stats.forks += 1
+        return child
+
+    def _fork_from_prefix_arm(self, child: EnginePath,
+                              prefix_position: int,
+                              replay_tokens: Optional[List[int]]) -> None:
         if self.has_rec:
             assert replay_tokens is not None and \
                 len(replay_tokens) >= prefix_position - self.n_prefix, \
@@ -608,9 +660,6 @@ class TreeEngine:
                 self.stats.fork_dispatches += 1
             self._refeed(child, replay_tokens[prefix_position
                                               - self.n_prefix - 1])
-        self.sample_pending_batch([child])
-        self.stats.forks += 1
-        return child
 
     def _replay_prefix(self, child: EnginePath, tokens: List[int]) -> None:
         """Recurrent-arch fallback: prefill the prefix into the child's

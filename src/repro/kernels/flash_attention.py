@@ -37,11 +37,15 @@ _NEG_INF = -1e30
 def _flash_kernel(q_ref, k_ref, v_ref, *refs,
                   scale: float, causal: bool, window: int, q_offset: int,
                   blk_q: int, blk_k: int, sq: int, skv: int,
-                  has_seg: bool):
+                  has_seg: bool, has_bias: bool):
+    refs = list(refs)
     if has_seg:
-        qseg_ref, kseg_ref, o_ref, acc_ref, m_ref, l_ref = refs
-    else:
-        o_ref, acc_ref, m_ref, l_ref = refs
+        qseg_ref, kseg_ref = refs[:2]
+        refs = refs[2:]
+    if has_bias:
+        bias_ref = refs[0]
+        refs = refs[1:]
+    o_ref, acc_ref, m_ref, l_ref = refs
     iq = pl.program_id(2)
     ik = pl.program_id(3)
     nk = pl.num_programs(3)
@@ -73,6 +77,10 @@ def _flash_kernel(q_ref, k_ref, v_ref, *refs,
         mask &= ((qseg[:, None] == kseg[None, :])
                  | (kseg[None, :] == SHARED_SEGMENT_ID))
     s = jnp.where(mask, s, _NEG_INF)
+    if has_bias:
+        # same order as attention_ref: bias lands on the already-masked
+        # logits, so a masked score stays ~-1e30 for any finite bias
+        s = s + bias_ref[0, 0, :, :].astype(jnp.float32)
 
     m_prev = m_ref[...]                                 # (blk_q,)
     m_cur = jnp.maximum(m_prev, s.max(axis=1))
@@ -97,19 +105,25 @@ def _flash_kernel(q_ref, k_ref, v_ref, *refs,
 def flash_attention_pallas(q, k, v, *, causal: bool = True, window: int = 0,
                            scale=None, q_offset: int = 0, blk_q: int = 128,
                            blk_k: int = 128, interpret: bool = False,
-                           segment_ids=None):
+                           segment_ids=None, bias=None):
     """q: (B, Sq, Hq, D); k/v: (B, Skv, Hkv, D) -> (B, Sq, Hq, D).
 
     ``segment_ids``: optional (B, Skv) int32 labels over the key axis:
     restrict attention to same-segment pairs (sequence-packed rows).
     When Sq < Skv (chunked prefill) the q chunk's labels are the slice at
-    ``q_offset``; ``SHARED_SEGMENT_ID`` kv tokens are visible to all."""
+    ``q_offset``; ``SHARED_SEGMENT_ID`` kv tokens are visible to all.
+
+    ``bias``: optional additive attention bias broadcastable to
+    (B, Hq, Sq, Skv) (ALiBi slopes, relative-position buckets, soft
+    prompt masks); added to the masked logits exactly as in
+    ``attention_ref``, streamed as (blk_q, blk_k) tiles."""
     B, Sq, Hq, D = q.shape
     Skv, Hkv = k.shape[1], k.shape[2]
     group = Hq // Hkv
     if scale is None:
         scale = 1.0 / (D ** 0.5)
     has_seg = segment_ids is not None
+    has_bias = bias is not None
     if has_seg and (segment_ids.shape[1] != Skv or q_offset + Sq > Skv):
         raise ValueError("segment_ids labels the kv axis (B, Skv); the q "
                          "chunk is its slice at q_offset")
@@ -146,12 +160,24 @@ def flash_attention_pallas(q, k, v, *, causal: bool = True, window: int = 0,
             pl.BlockSpec((1, blk_k), lambda b, h, i, j: (b, j)),
         ]
         inputs += [qseg, kseg]
+    if has_bias:
+        bias_full = jnp.broadcast_to(jnp.asarray(bias, jnp.float32),
+                                     (B, Hq, Sq, Skv))
+        # zero on the pad tail: padded scores are already masked to
+        # _NEG_INF, the bias must not resurrect them
+        bias_full = jnp.pad(bias_full,
+                            ((0, 0), (0, 0), (0, pad_q), (0, pad_k)))
+        in_specs += [
+            pl.BlockSpec((1, 1, blk_q, blk_k),
+                         lambda b, h, i, j: (b, h, i, j)),
+        ]
+        inputs += [bias_full]
 
     out = pl.pallas_call(
         functools.partial(
             _flash_kernel, scale=float(scale), causal=causal, window=window,
             q_offset=q_offset, blk_q=blk_q, blk_k=blk_k, sq=Sq, skv=Skv,
-            has_seg=has_seg),
+            has_seg=has_seg, has_bias=has_bias),
         grid=(B, Hq, nq, nk),
         in_specs=in_specs,
         out_specs=pl.BlockSpec((1, blk_q, 1, D),

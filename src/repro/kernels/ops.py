@@ -47,7 +47,7 @@ def rmsnorm(x, scale, eps: float = 1e-6):
 
 def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
                     scale: float | None = None, q_offset: int = 0,
-                    segment_ids=None):
+                    segment_ids=None, bias=None):
     """q: (B, Sq, Hq, D); k/v: (B, Skv, Hkv, D). Returns (B, Sq, Hq, D).
 
     ``window``: sliding-window size (0 = full). ``q_offset``: absolute
@@ -57,6 +57,9 @@ def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
     to same-segment pairs.  With Sq < Skv (chunked prefill) the q chunk's
     labels are the slice at ``q_offset``; kv labels equal to
     ``SHARED_SEGMENT_ID`` (a per-row modality prefix) are visible to all.
+    ``bias``: optional additive attention bias broadcastable to
+    (B, Hq, Sq, Skv), added to the masked logits (ALiBi, relative
+    position, soft prompt masks); supported by both backends.
     """
     # the Pallas kernel tiles one head dim for q/k/v; MLA prefill attends
     # with qk_head_dim != v_head_dim, which only the reference supports.
@@ -65,12 +68,13 @@ def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
 
         return flash_attention_pallas(q, k, v, causal=causal, window=window,
                                       scale=scale, q_offset=q_offset,
-                                      segment_ids=segment_ids,
+                                      segment_ids=segment_ids, bias=bias,
                                       interpret=_interpret())
     from repro.kernels.ref import attention_ref
 
     return attention_ref(q, k, v, causal=causal, window=window, scale=scale,
-                         q_offset=q_offset, segment_ids=segment_ids)
+                         q_offset=q_offset, segment_ids=segment_ids,
+                         bias=bias)
 
 
 # ---------------------------------------------------------------------------

@@ -1,4 +1,4 @@
-"""repro-lint (tools/analyze) rule suite: every rule R1-R4 is proven by
+"""repro-lint (tools/analyze) rule suite: every rule R1-R8 is proven by
 a failing bad-fixture and a passing good-fixture, the baseline
 round-trips, stale baseline entries fail loudly, and the repo itself is
 exactly clean against the checked-in baseline.
@@ -404,6 +404,272 @@ def test_r4_ref_only_op_is_allowed():
 
 
 # ---------------------------------------------------------------------------
+# R5 — KV page/slot lifecycle (CFG dataflow over alloc/release tails)
+# ---------------------------------------------------------------------------
+
+R5_LEAK_ON_EXIT = '''
+def grab(pool):
+    pid = pool.alloc()
+    return 0
+'''
+
+R5_LEAK_ON_RAISE = '''
+def build_pair(pool):
+    a = pool.alloc()
+    b = pool.alloc()       # may raise OutOfPages: `a` leaks
+    pool.release(a)
+    pool.release(b)
+'''
+
+R5_RAISE_SAFE = '''
+def build_pair(pool):
+    a = pool.alloc()
+    try:
+        b = pool.alloc()
+    except Exception:
+        pool.release(a)
+        raise
+    pool.release(a)
+    pool.release(b)
+'''
+
+R5_DOUBLE_RELEASE = '''
+def drop_twice(pool):
+    pid = pool.alloc()
+    pool.release(pid)
+    pool.release(pid)
+'''
+
+R5_USE_AFTER_RELEASE = '''
+def regrow(self):
+    child = self.make_child()
+    self._ensure_capacity(child, 4)
+    self.release_path(child)
+    self._ensure_capacity(child, 8)
+'''
+
+R5_TRANSFERRED = '''
+def grab(pool, paths):
+    pid = pool.alloc()
+    paths.append(pid)      # ownership moves to the container
+    return 0
+'''
+
+
+def test_r5_leak_on_exit_fires():
+    f = analyze_sources({"src/pkg/kv.py": R5_LEAK_ON_EXIT})
+    assert any(x.detail == "leak:pid" for x in f), _keys(f)
+
+
+def test_r5_leak_on_raise_fires_and_tryexcept_is_clean():
+    bad = analyze_sources({"src/pkg/kv.py": R5_LEAK_ON_RAISE})
+    assert any(x.detail == "leak-on-raise:a" for x in bad), _keys(bad)
+    good = analyze_sources({"src/pkg/kv.py": R5_RAISE_SAFE})
+    assert "R5" not in _rules_hit(good), _keys(good)
+
+
+def test_r5_double_release_fires():
+    f = analyze_sources({"src/pkg/kv.py": R5_DOUBLE_RELEASE})
+    assert any(x.detail == "double-release:pid" for x in f), _keys(f)
+
+
+def test_r5_use_after_release_fires():
+    f = analyze_sources({"src/pkg/kv.py": R5_USE_AFTER_RELEASE})
+    assert any(x.detail == "use-after-release:child" for x in f), _keys(f)
+
+
+def test_r5_ownership_transfer_is_clean():
+    f = analyze_sources({"src/pkg/kv.py": R5_TRANSFERRED})
+    assert "R5" not in _rules_hit(f), _keys(f)
+
+
+# ---------------------------------------------------------------------------
+# R6 — path-FSM conformance (declared transition table)
+# ---------------------------------------------------------------------------
+
+R6_UNDECLARED = '''
+def rogue_cleanup(engine, path):
+    engine.release_path(path)
+'''
+
+R6_DOUBLE_RELEASE_PATH = '''
+def drop(engine, path):
+    engine.release_path(path)
+    engine.release_path(path)
+'''
+
+R6_BRANCH_AFTER_PREEMPT = '''
+def bad_branch(engine, path):
+    engine.preempt_path(path)
+    engine.fork_paths([path])
+'''
+
+R6_USE_AFTER_RELEASE_PATH = '''
+def bad_decode(engine, path):
+    engine.release_path(path)
+    engine.decode_segments([path])
+'''
+
+# a declared site (module + qualname in FSM_TRANSITIONS) is legal
+R6_DECLARED = '''
+def _release_leaf_kv(engine, path):
+    engine.release_path(path)
+'''
+
+R6_RESTORE_THEN_BRANCH = '''
+def ok_branch(engine, path):
+    engine.preempt_path(path)
+    path = engine.restore_path([1, 2])
+    engine.fork_paths([path])
+'''
+
+
+def test_r6_undeclared_transition_fires():
+    f = analyze_sources({"src/pkg/fsm.py": R6_UNDECLARED})
+    assert any(x.detail == "undeclared:release" for x in f), _keys(f)
+
+
+def test_r6_declared_site_is_clean():
+    f = analyze_sources({"src/repro/core/sampler.py": R6_DECLARED})
+    assert "R6" not in _rules_hit(f), _keys(f)
+
+
+def test_r6_double_release_path_fires():
+    f = analyze_sources({"src/pkg/fsm.py": R6_DOUBLE_RELEASE_PATH})
+    assert any(x.detail == "double-release-path:path" for x in f), _keys(f)
+
+
+def test_r6_branch_after_preempt_fires_and_restore_clears():
+    bad = analyze_sources({"src/pkg/fsm.py": R6_BRANCH_AFTER_PREEMPT})
+    assert any(x.detail == "branch-after-preempt:path"
+               for x in bad), _keys(bad)
+    good = analyze_sources({"src/pkg/fsm.py": R6_RESTORE_THEN_BRANCH})
+    assert not any(x.detail.startswith("branch-after-preempt")
+                   for x in good), _keys(good)
+
+
+def test_r6_use_after_release_path_fires():
+    f = analyze_sources({"src/pkg/fsm.py": R6_USE_AFTER_RELEASE_PATH})
+    assert any(x.detail == "use-after-release-path:path"
+               for x in f), _keys(f)
+
+
+# ---------------------------------------------------------------------------
+# R7 — PRNG-key discipline
+# ---------------------------------------------------------------------------
+
+R7_KEY_REUSE = '''
+import jax
+
+def sample(key):
+    a = jax.random.normal(key, (2,))
+    b = jax.random.uniform(key, (2,))
+    return a + b
+'''
+
+R7_SPLIT_OK = '''
+import jax
+
+def sample(key):
+    k1, k2 = jax.random.split(key)
+    a = jax.random.normal(k1, (2,))
+    b = jax.random.uniform(k2, (2,))
+    return a + b
+'''
+
+R7_SPLIT_DROP = '''
+import jax
+
+def advance(key):
+    extra = jax.random.split(key)
+    return key
+'''
+
+R7_HOST_RNG = '''
+import random
+
+def make_rng(seed):
+    return random.Random(seed)
+'''
+
+
+def test_r7_key_reuse_fires_and_split_is_clean():
+    bad = analyze_sources({"src/pkg/rng.py": R7_KEY_REUSE})
+    assert any(x.detail == "key-reuse:key" for x in bad), _keys(bad)
+    good = analyze_sources({"src/pkg/rng.py": R7_SPLIT_OK})
+    assert "R7" not in _rules_hit(good), _keys(good)
+
+
+def test_r7_split_and_drop_fires():
+    f = analyze_sources({"src/pkg/rng.py": R7_SPLIT_DROP})
+    assert any(x.detail == "split-drop:extra" for x in f), _keys(f)
+
+
+def test_r7_host_rng_fires_outside_captured_modules():
+    bad = analyze_sources({"src/pkg/rng.py": R7_HOST_RNG})
+    assert any(x.detail == "host-rng:random.Random" for x in bad), _keys(bad)
+    # the trainer's generators ARE the checkpoint-captured state
+    good = analyze_sources({"src/repro/rl/trainer.py": R7_HOST_RNG})
+    assert not any(x.detail.startswith("host-rng") for x in good), _keys(good)
+
+
+# ---------------------------------------------------------------------------
+# R8 — sharding-spec consistency (needs a declared mesh to arm)
+# ---------------------------------------------------------------------------
+
+_R8_MESH = '''
+import jax
+
+def build_mesh(devices):
+    return jax.make_mesh((2, 4), ("data", "model"))
+'''
+
+_R8_BAD_AXIS = '''
+from jax.sharding import PartitionSpec as P
+
+def spec():
+    return P("data", "modle")
+'''
+
+_R8_GOOD_AXIS = '''
+from jax.sharding import PartitionSpec as P
+
+def spec():
+    return P("data", None, "model")
+'''
+
+_R8_BAD_DONATE = '''
+import jax
+from jax.sharding import PartitionSpec as P
+
+def jit_step(fn):
+    shard = (P("data"), P("model"))
+    return jax.jit(fn, in_shardings=shard, donate_argnums=(0, 5))
+'''
+
+
+def test_r8_bad_axis_fires_and_good_axes_clean():
+    bad = analyze_sources({"src/pkg/mesh.py": _R8_MESH,
+                           "src/pkg/spec.py": _R8_BAD_AXIS})
+    assert any(x.detail == "bad-axis:modle" for x in bad), _keys(bad)
+    good = analyze_sources({"src/pkg/mesh.py": _R8_MESH,
+                            "src/pkg/spec.py": _R8_GOOD_AXIS})
+    assert "R8" not in _rules_hit(good), _keys(good)
+
+
+def test_r8_donate_out_of_range_fires():
+    f = analyze_sources({"src/pkg/mesh.py": _R8_MESH,
+                         "src/pkg/spec.py": _R8_BAD_DONATE})
+    assert any(x.detail == "donate-out-of-range:5" for x in f), _keys(f)
+
+
+def test_r8_inert_without_declared_mesh():
+    # no mesh anywhere in the index -> nothing to validate against
+    f = analyze_sources({"src/pkg/spec.py": _R8_BAD_AXIS})
+    assert "R8" not in _rules_hit(f), _keys(f)
+
+
+# ---------------------------------------------------------------------------
 # baseline round-trip + staleness
 # ---------------------------------------------------------------------------
 
@@ -467,8 +733,8 @@ def test_repo_is_clean_against_baseline():
 
 def test_repo_rule_set_is_non_empty_and_proven():
     """The analyzer is not vacuous: the baseline carries real findings
-    from >1 rule, and RULES documents all four."""
-    assert set(RULES) == {"R1", "R2", "R3", "R4"}
+    from >1 rule, and RULES documents all eight."""
+    assert set(RULES) == {"R1", "R2", "R3", "R4", "R5", "R6", "R7", "R8"}
     assert len(_REPO_BASELINE) >= 1
     assert len({k.split(":", 1)[0] for k in _REPO_BASELINE}) >= 2
 
@@ -499,6 +765,53 @@ def test_cli_nonzero_on_new_finding(tmp_path):
                        env=env, capture_output=True, text=True)
     assert r.returncode == 1
     assert "does not donate" in r.stdout
+
+
+def test_cli_github_format_emits_error_annotations(tmp_path):
+    pkg = tmp_path / "src" / "pkg"
+    pkg.mkdir(parents=True)
+    (pkg / "upd.py").write_text(R2_BAD)
+    env = dict(os.environ, PYTHONPATH=_ROOT)
+    r = subprocess.run([sys.executable, "-m", "tools.analyze",
+                        "--no-baseline", "--format", "github",
+                        "--root", str(tmp_path), "src/pkg"],
+                       cwd=str(tmp_path), env=env,
+                       capture_output=True, text=True)
+    assert r.returncode == 1
+    assert "::error file=src/pkg/upd.py,line=" in r.stdout
+    assert "title=R2" in r.stdout
+
+
+def test_cli_stale_entry_suggests_nearest_live_key(tmp_path):
+    pkg = tmp_path / "src" / "pkg"
+    pkg.mkdir(parents=True)
+    (pkg / "upd.py").write_text(R2_BAD)
+    findings = analyze_sources({"src/pkg/upd.py": R2_BAD})
+    live_key = next(k for k in _keys(findings) if k.endswith(":params"))
+    bl = tmp_path / "baseline.json"
+    typo = live_key.replace(":params", ":paramz")
+    bl.write_text(json.dumps({
+        "version": 1,
+        "entries": {k: "ok" for k in _keys(findings) if k != live_key}
+        | {typo: "typo'd entry"}}))
+    env = dict(os.environ, PYTHONPATH=_ROOT)
+    r = subprocess.run([sys.executable, "-m", "tools.analyze",
+                        "--baseline", str(bl), "--root", str(tmp_path),
+                        "src/pkg"], cwd=str(tmp_path), env=env,
+                       capture_output=True, text=True)
+    assert r.returncode == 1
+    assert "stale baseline" in r.stdout
+    assert f"nearest live finding: {live_key}" in r.stdout
+
+
+def test_cli_changed_only_is_clean_on_repo():
+    """--changed-only narrows reporting to the git diff (stale detection
+    off); on the repo it must agree with the full run's exit 0."""
+    env = dict(os.environ, PYTHONPATH=_ROOT)
+    r = subprocess.run([sys.executable, "-m", "tools.analyze",
+                        "--changed-only", "src/repro"], cwd=_ROOT,
+                       env=env, capture_output=True, text=True)
+    assert r.returncode == 0, r.stdout + r.stderr
 
 
 def test_index_resolves_aliased_imports():

@@ -32,6 +32,7 @@ from repro.core import branching as br
 from repro.core import faults
 from repro.core.engine import TreeEngine
 from repro.core.faults import FaultInjector, InjectedCrash
+from repro.core.lifecycle import lifecycle_guard
 from repro.core.sampler import sample_trees
 from repro.core.tree import Status
 from repro.kv.cache import OutOfPages, PagePool
@@ -39,6 +40,16 @@ from repro.models.model import init_params
 from repro.rl.trainer import RLTrainer, TrainerMode
 
 pytestmark = pytest.mark.fault
+
+
+@pytest.fixture(autouse=True)
+def _lifecycle_tracker():
+    """Every fault test runs with the runtime lifecycle tracker armed:
+    any page/slot refcount or path-FSM violation under injected faults
+    fails the test at teardown (docs/static_analysis.md, R5/R6 runtime
+    twin)."""
+    with lifecycle_guard() as rep:
+        yield rep
 
 ENGINE_KW = dict(num_pages=256, page_size=16, max_slots=32, max_queries=16,
                  max_prompt_len=128)

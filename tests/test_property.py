@@ -10,6 +10,7 @@ from hypothesis import given, settings, strategies as st
 from repro.core.advantage import treepo_advantage
 from repro.core.early_stop import has_repetition
 from repro.core.engine import _bucket, _top_p_mask
+from repro.core.lifecycle import lifecycle_guard
 from repro.core.tree import Path, ancestor_matrix
 from repro.data.reward import extract_boxed, reward_fn, verify_answer
 from repro.data.tokenizer import ByteTokenizer
@@ -123,6 +124,56 @@ def test_page_pool_preempt_interleaving(ops):
         for pid in tbl:
             pool.release(pid)
     assert pool.pages_in_use == 0 and pool.num_free == 24
+
+
+@SETTINGS
+@given(st.lists(st.tuples(st.sampled_from(["alloc", "fork", "release",
+                                           "preempt", "restore"]),
+                          st.integers(0, 10**6)),
+                max_size=120),
+       st.booleans())
+def test_lifecycle_tracker_interleavings(ops, inject):
+    """The runtime lifecycle tracker (repro.core.lifecycle) must stay
+    silent across arbitrary clean alloc/fork/release/preempt/restore
+    interleavings, and must flag an injected double release in every
+    one of them — the dynamic twin of static rule R5."""
+    pool = PagePool(32)
+    live, preempted = [], []
+    with lifecycle_guard(raise_on_violation=False) as rep:
+        for op, r in ops:
+            if op == "alloc" and pool.num_free:
+                live.append([pool.alloc()])
+            elif op == "fork" and live:
+                src = live[r % len(live)]
+                for pid in src:
+                    pool.retain(pid)
+                live.append(list(src))
+            elif op == "release" and live:
+                for pid in live.pop(r % len(live)):
+                    pool.release(pid)
+            elif op == "preempt" and live:
+                tbl = live.pop(r % len(live))
+                preempted.append(len(tbl))
+                for pid in tbl:
+                    pool.release(pid)
+            elif op == "restore" and preempted:
+                n = preempted.pop()
+                if pool.num_free >= n:
+                    live.append([pool.alloc() for _ in range(n)])
+        for tbl in live:
+            for pid in tbl:
+                pool.release(pid)
+        assert rep.violations == []
+        if inject:
+            try:
+                pool.release(0)       # everything was drained above
+            except AssertionError:
+                pass
+    if inject:
+        assert any("double release" in v for v in rep.violations)
+    else:
+        assert rep.violations == []
+    assert pool.pages_in_use == 0
 
 
 # ---------------------------------------------------------------------------

@@ -6,9 +6,11 @@ Exit status: 0 = clean (every finding baselined, no stale entries),
 from __future__ import annotations
 
 import argparse
+import difflib
 import os
+import subprocess
 import sys
-from typing import List
+from typing import List, Set
 
 from . import (DEFAULT_BASELINE, analyze_paths, apply_baseline,
                load_baseline, write_baseline)
@@ -32,11 +34,30 @@ def _explain(rule_id: str) -> int:
     return 0
 
 
+def _changed_files(root: str) -> Set[str]:
+    """Repo-relative paths touched vs HEAD, plus untracked files."""
+    changed: Set[str] = set()
+    for cmd in (["git", "diff", "--name-only", "HEAD"],
+                ["git", "ls-files", "--others", "--exclude-standard"]):
+        try:
+            out = subprocess.run(cmd, cwd=root, capture_output=True,
+                                 text=True, check=True).stdout
+        except (OSError, subprocess.CalledProcessError) as e:
+            print(f"--changed-only: {' '.join(cmd)} failed ({e}); "
+                  "analyzing everything", file=sys.stderr)
+            return set()
+        changed.update(line.strip() for line in out.splitlines()
+                       if line.strip())
+    return changed
+
+
 def main(argv: List[str] | None = None) -> int:
     ap = argparse.ArgumentParser(
         prog="python -m tools.analyze",
-        description="repro-lint: hot-path static analyzer (R1 host-sync, "
-                    "R2 donation, R3 recompile, R4 kernel parity)")
+        description="repro-lint: hot-path static analyzer + verifier "
+                    "(R1 host-sync, R2 donation, R3 recompile, R4 kernel "
+                    "parity, R5 KV lifecycle, R6 path FSM, R7 RNG "
+                    "discipline, R8 sharding specs)")
     ap.add_argument("paths", nargs="*", default=None,
                     help="files/dirs to analyze (default: src/repro)")
     ap.add_argument("--root", default=None,
@@ -53,6 +74,14 @@ def main(argv: List[str] | None = None) -> int:
                     help="print a rule's rationale and doc anchor")
     ap.add_argument("--list-rules", action="store_true",
                     help="list rule ids and titles")
+    ap.add_argument("--format", choices=("text", "github"), default="text",
+                    help="finding output format; 'github' emits workflow "
+                         "::error annotations")
+    ap.add_argument("--changed-only", action="store_true",
+                    help="report findings only in files changed vs HEAD "
+                         "(plus untracked); stale-baseline detection is "
+                         "skipped — unchanged files aren't analyzed, so "
+                         "their entries can't be confirmed live")
     args = ap.parse_args(argv)
 
     if args.explain:
@@ -74,10 +103,24 @@ def main(argv: List[str] | None = None) -> int:
 
     baseline = {} if args.no_baseline else load_baseline(args.baseline)
     new, stale = apply_baseline(findings, baseline)
+    live_keys = sorted({f.key for f in findings})
+
+    if args.changed_only:
+        changed = _changed_files(root)
+        if changed:
+            new = [f for f in new if f.path in changed]
+        # a full-tree index was still built (cross-module rules need
+        # it); only the *reporting* narrows to the diff
+        stale = []
 
     for f in new:
-        print(f.render())
-    if new:
+        if args.format == "github":
+            title = RULES[f.rule].title
+            print(f"::error file={f.path},line={f.lineno},"
+                  f"title={f.rule} {title}::{f.message}")
+        else:
+            print(f.render())
+    if new and args.format == "text":
         rules_hit = sorted({f.rule for f in new})
         print(f"\n{len(new)} new finding(s) "
               f"[{', '.join(rules_hit)}] — run "
@@ -90,6 +133,14 @@ def main(argv: List[str] | None = None) -> int:
               " still listed — regenerate with --write-baseline):")
         for k in stale:
             print(f"  {k}")
+            near = difflib.get_close_matches(k, live_keys, n=1, cutoff=0.6)
+            if near:
+                print(f"    nearest live finding: {near[0]}")
+        if args.format == "github":
+            for k in stale:
+                print(f"::error title=repro-lint stale baseline::{k} has "
+                      "no matching finding — regenerate with "
+                      "--write-baseline")
     if not new and not stale:
         print(f"repro-lint: clean ({len(findings)} baselined finding(s),"
               f" {len(RULES)} rules)")

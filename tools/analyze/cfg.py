@@ -1,0 +1,347 @@
+"""Intraprocedural control-flow graphs for the verification rules.
+
+The lint rules (R1–R4) answer *where* questions — is this call inside a
+traced function, does this jit donate — and a flat ``shallow_walk`` is
+enough.  The verification rules (R5–R8, ``tools/analyze/verify.py``)
+answer *ordering* questions: does every page allocation reach a release
+on every exit, including the exception exit an ``OutOfPages`` raise
+takes; is a PRNG key consumed twice without an interleaving ``split``.
+Those need a CFG.
+
+``build_cfg(fn_node, may_raise)`` returns a :class:`CFG` of statement
+blocks with three virtual endpoints: ``entry``, ``exit`` (return /
+fall-off) and ``raise_exit`` (an exception escaping the function).  The
+caller supplies ``may_raise(stmt) -> bool``; a statement it flags is
+isolated in its own single-statement block with ``raises=True`` and an
+``"exc"`` edge to the innermost enclosing handler (or ``raise_exit``).
+Keeping raising statements isolated lets a dataflow pass distinguish
+the state *before* the statement (what the exception path sees — an
+``x = pool.alloc()`` that raises never bound ``x``) from the state
+after it (what the fall-through path sees).
+
+Modeling choices, deliberately simple and documented:
+
+* **exception edges go to the handler chain, not past it** — we do not
+  track exception *types*, so a ``try`` body's raising statements edge
+  to every handler of that ``try``; only an explicit ``raise`` inside a
+  handler propagates outward.  This under-approximates propagation of
+  unmatched exception types and over-approximates which handler runs;
+  both are benign for the lifecycle rules (handlers around alloc code
+  in this repo catch ``OutOfPages`` / clean up unconditionally).
+* **finally bodies are duplicated per continuation** (normal /
+  exception / return), the classic lowering — each copy sees the state
+  of the path that entered it.
+* branch/loop conditions and ``for`` iterables are materialized into
+  the graph as synthetic ``ast.Expr`` / ``ast.Assign`` statements so a
+  dataflow pass sees every expression exactly once, uniformly.
+* nested ``def`` / ``class`` / ``lambda`` bodies are opaque single
+  statements (they have their own CFG), matching ``shallow_walk``.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+from typing import Callable, Dict, List, Optional, Tuple
+
+__all__ = ["Block", "CFG", "build_cfg"]
+
+
+@dataclasses.dataclass
+class Block:
+    bid: int
+    stmts: List[ast.stmt] = dataclasses.field(default_factory=list)
+    succs: List[Tuple[int, str]] = dataclasses.field(default_factory=list)
+    # True iff this block holds exactly one statement that may raise;
+    # its "exc" edge carries the state from *before* the statement.
+    raises: bool = False
+
+    def add_succ(self, bid: int, kind: str) -> None:
+        if (bid, kind) not in self.succs:
+            self.succs.append((bid, kind))
+
+
+@dataclasses.dataclass
+class CFG:
+    blocks: Dict[int, Block]
+    entry: int
+    exit: int
+    raise_exit: int
+
+    def preds(self) -> Dict[int, List[Tuple[int, str]]]:
+        out: Dict[int, List[Tuple[int, str]]] = {b: [] for b in self.blocks}
+        for blk in self.blocks.values():
+            for bid, kind in blk.succs:
+                out[bid].append((blk.bid, kind))
+        return out
+
+    def rpo(self) -> List[int]:
+        """Reverse post-order from entry (loops converge fast)."""
+        seen, order = set(), []
+
+        def visit(bid: int) -> None:
+            stack = [(bid, iter(self.blocks[bid].succs))]
+            seen.add(bid)
+            while stack:
+                cur, it = stack[-1]
+                advanced = False
+                for nxt, _kind in it:
+                    if nxt not in seen:
+                        seen.add(nxt)
+                        stack.append((nxt, iter(self.blocks[nxt].succs)))
+                        advanced = True
+                        break
+                if not advanced:
+                    order.append(cur)
+                    stack.pop()
+
+        visit(self.entry)
+        return list(reversed(order))
+
+
+_OPAQUE = (ast.FunctionDef, ast.AsyncFunctionDef, ast.ClassDef)
+
+
+class _Builder:
+    def __init__(self, may_raise: Callable[[ast.stmt], bool]):
+        self.may_raise = may_raise
+        self.blocks: Dict[int, Block] = {}
+        self.entry = self._new()
+        self.exit = self._new()
+        self.raise_exit = self._new()
+        self.cur: Optional[int] = self.entry
+        # innermost-first stacks
+        self.exc_targets: List[List[int]] = [[self.raise_exit]]
+        self.loop_stack: List[Tuple[int, int]] = []   # (continue, break)
+        # pending finally bodies (innermost last); Return/Break/Continue
+        # and escaping exceptions must thread through copies of these
+        self.finally_stack: List[List[ast.stmt]] = []
+
+    # -- graph primitives ---------------------------------------------------
+
+    def _new(self) -> int:
+        bid = len(self.blocks)
+        self.blocks[bid] = Block(bid=bid)
+        return bid
+
+    def _edge(self, frm: Optional[int], to: int, kind: str = "next") -> None:
+        if frm is not None:
+            self.blocks[frm].add_succ(to, kind)
+
+    def _start(self) -> int:
+        """Seal the current block and open a fresh one chained to it."""
+        nxt = self._new()
+        self._edge(self.cur, nxt)
+        self.cur = nxt
+        return nxt
+
+    def _emit(self, stmt: ast.stmt) -> None:
+        if self.cur is None:          # unreachable code after return/raise
+            self.cur = self._new()
+        if self.may_raise(stmt):
+            blk = self._start()
+            self.blocks[blk].stmts.append(stmt)
+            self.blocks[blk].raises = True
+            for tgt in self.exc_targets[-1]:
+                self._edge(blk, tgt, "exc")
+            self._start()
+        else:
+            self.blocks[self.cur].stmts.append(stmt)
+
+    def _thread_finallies(self, upto: int) -> None:
+        """Emit copies of the pending finally bodies (innermost first)
+        down to stack depth ``upto`` — used by Return/Break/Continue."""
+        for body in reversed(self.finally_stack[upto:]):
+            for s in body:
+                self._emit(s)
+
+    # -- statement visitors --------------------------------------------------
+
+    def build(self, fn: ast.FunctionDef) -> CFG:
+        self.visit_body(fn.body)
+        self._edge(self.cur, self.exit)
+        return CFG(blocks=self.blocks, entry=self.entry, exit=self.exit,
+                   raise_exit=self.raise_exit)
+
+    def visit_body(self, body: List[ast.stmt]) -> None:
+        for stmt in body:
+            self.visit(stmt)
+
+    def visit(self, stmt: ast.stmt) -> None:
+        if isinstance(stmt, _OPAQUE):
+            self._emit(stmt)
+        elif isinstance(stmt, ast.Return):
+            self._emit(stmt)
+            self._thread_finallies(0)
+            self._edge(self.cur, self.exit)
+            self.cur = None
+        elif isinstance(stmt, ast.Raise):
+            blk = self._start()
+            self.blocks[blk].stmts.append(stmt)
+            self.blocks[blk].raises = True
+            for tgt in self.exc_targets[-1]:
+                self._edge(blk, tgt, "exc")
+            self.cur = None
+        elif isinstance(stmt, (ast.Break, ast.Continue)):
+            if self.loop_stack:
+                cont, brk = self.loop_stack[-1]
+                self._edge(self.cur, brk if isinstance(stmt, ast.Break)
+                           else cont)
+            self.cur = None
+        elif isinstance(stmt, ast.If):
+            self._visit_if(stmt)
+        elif isinstance(stmt, (ast.While,)):
+            self._visit_while(stmt)
+        elif isinstance(stmt, (ast.For, ast.AsyncFor)):
+            self._visit_for(stmt)
+        elif isinstance(stmt, ast.Try):
+            self._visit_try(stmt)
+        elif isinstance(stmt, (ast.With, ast.AsyncWith)):
+            for item in stmt.items:
+                self._emit(ast.copy_location(
+                    ast.Expr(value=item.context_expr), stmt))
+                if item.optional_vars is not None:
+                    self._emit(ast.copy_location(
+                        ast.Assign(targets=[item.optional_vars],
+                                   value=item.context_expr), stmt))
+            self.visit_body(stmt.body)
+        else:
+            self._emit(stmt)
+
+    def _visit_if(self, stmt: ast.If) -> None:
+        self._emit(ast.copy_location(ast.Expr(value=stmt.test), stmt))
+        cond = self.cur
+        join = self._new()
+        # true arm
+        self.cur = self._new()
+        self._edge(cond, self.cur, "true")
+        self.visit_body(stmt.body)
+        self._edge(self.cur, join)
+        # false arm
+        if stmt.orelse:
+            self.cur = self._new()
+            self._edge(cond, self.cur, "false")
+            self.visit_body(stmt.orelse)
+            self._edge(self.cur, join)
+        else:
+            self._edge(cond, join, "false")
+        self.cur = join
+
+    def _visit_while(self, stmt: ast.While) -> None:
+        head = self._start()
+        self.blocks[head].stmts.append(
+            ast.copy_location(ast.Expr(value=stmt.test), stmt))
+        after = self._new()
+        body = self._new()
+        self._edge(head, body, "true")
+        self._edge(head, after, "false")
+        self.loop_stack.append((head, after))
+        self.cur = body
+        self.visit_body(stmt.body)
+        self._edge(self.cur, head, "back")
+        self.loop_stack.pop()
+        if stmt.orelse:
+            self.cur = after
+            self.visit_body(stmt.orelse)
+        else:
+            self.cur = after
+
+    def _visit_for(self, stmt) -> None:
+        self._emit(ast.copy_location(ast.Expr(value=stmt.iter), stmt))
+        head = self._start()
+        # loop variable binding, once per iteration
+        self.blocks[head].stmts.append(ast.copy_location(
+            ast.Assign(targets=[stmt.target], value=stmt.iter), stmt))
+        after = self._new()
+        body = self._new()
+        self._edge(head, body, "true")
+        self._edge(head, after, "false")
+        self.loop_stack.append((head, after))
+        self.cur = body
+        self.visit_body(stmt.body)
+        self._edge(self.cur, head, "back")
+        self.loop_stack.pop()
+        if stmt.orelse:
+            self.cur = after
+            self.visit_body(stmt.orelse)
+        else:
+            self.cur = after
+
+    def _visit_try(self, stmt: ast.Try) -> None:
+        has_fin = bool(stmt.finalbody)
+        after = self._new()
+
+        handler_entries: List[int] = []
+        for _h in stmt.handlers:
+            handler_entries.append(self._new())
+
+        # exceptions raised in the body go to the handlers (or, with no
+        # handlers, through a finally copy to the outer target)
+        if handler_entries:
+            body_exc = handler_entries
+        elif has_fin:
+            body_exc = [self._build_finally_exc(stmt.finalbody)]
+        else:
+            body_exc = self.exc_targets[-1]
+
+        self._start()
+        self.exc_targets.append(body_exc)
+        if has_fin:
+            self.finally_stack.append(stmt.finalbody)
+        self.visit_body(stmt.body)
+        if stmt.orelse:
+            self.visit_body(stmt.orelse)
+        if has_fin:
+            self.finally_stack.pop()
+            self._thread_finallies_copy(stmt.finalbody)
+        self.exc_targets.pop()
+        self._edge(self.cur, after)
+
+        # handlers: exceptions inside a handler (incl. bare `raise`)
+        # escape past this try — through a finally copy if present
+        for h, entry in zip(stmt.handlers, handler_entries):
+            self.cur = entry
+            if h.name and h.type is not None:
+                self._emit(ast.copy_location(
+                    ast.Assign(targets=[ast.Name(id=h.name, ctx=ast.Store())],
+                               value=h.type), h))
+            if has_fin:
+                outer = [self._build_finally_exc(stmt.finalbody)]
+                self.exc_targets.append(outer)
+                self.finally_stack.append(stmt.finalbody)
+            self.visit_body(h.body)
+            if has_fin:
+                self.finally_stack.pop()
+                self.exc_targets.pop()
+                self._thread_finallies_copy(stmt.finalbody)
+            self._edge(self.cur, after)
+
+        self.cur = after
+
+    def _thread_finallies_copy(self, body: List[ast.stmt]) -> None:
+        """Normal-completion copy of one finally body, inline."""
+        if self.cur is None:
+            return
+        for s in body:
+            self._emit(s)
+
+    def _build_finally_exc(self, body: List[ast.stmt]) -> int:
+        """Exception-path copy of a finally body: runs the cleanup, then
+        continues to the enclosing exception target."""
+        saved = self.cur
+        self.cur = self._new()
+        entry = self.cur
+        for s in body:
+            self._emit(s)
+        for tgt in self.exc_targets[-1]:
+            self._edge(self.cur, tgt, "exc")
+        # the finally-on-exception path re-raises; it has no normal succ
+        self.cur = saved
+        return entry
+
+
+def build_cfg(fn: ast.FunctionDef,
+              may_raise: Optional[Callable[[ast.stmt], bool]] = None) -> CFG:
+    """CFG of one function body.  ``may_raise`` marks statements that get
+    their own block + an exception edge; default: explicit ``raise`` only
+    (which is always modeled regardless)."""
+    return _Builder(may_raise or (lambda s: False)).build(fn)

@@ -926,3 +926,13 @@ def run_rules(index: Index) -> List[Finding]:
         findings.extend(rule(index))
     findings.sort(key=lambda f: (f.path, f.lineno, f.rule, f.detail))
     return findings
+
+
+# ---------------------------------------------------------------------------
+# verification rules (R5-R8) compose onto the lint rules; see verify.py
+# ---------------------------------------------------------------------------
+
+from .verify import VERIFY_DOCS, VERIFY_RULES  # noqa: E402
+
+RULES.update(VERIFY_DOCS)
+ALL_RULES = tuple(ALL_RULES) + tuple(VERIFY_RULES)

@@ -1,0 +1,1056 @@
+"""repro-verify: lifecycle & state-machine verification rules (R5–R8).
+
+Where the lint rules (R1–R4, ``rules.py``) flag *placement* mistakes —
+a host sync inside a traced region, a jit without donation — these
+rules verify *orderings* over the intraprocedural CFG (``cfg.py``):
+
+* **R5 kv-lifecycle** — every ``PagePool`` / ``SlotAllocator`` /
+  ``fork_table`` acquisition must reach a release or an ownership
+  transfer (publication) on every exit, *including the exception exit*
+  an ``OutOfPages`` raise or a fault-injection kill point takes;
+  double-release and mutate-after-release are flagged; COW
+  subscript-stores must be paired with a release of the displaced page.
+* **R6 path-fsm** — every path-lifecycle mutation site (release /
+  preempt / restore / branch / finish / status flips) must appear in
+  the declared transition table ``FSM_TRANSITIONS``; illegal orderings
+  (double ``release_path``, branching a preempted path, decoding a
+  released one) are flagged from the CFG.
+* **R7 rng-discipline** — a JAX PRNG key consumed twice without an
+  interleaving ``split`` breaks fault-replay determinism; so does
+  splitting and dropping the result, and host-RNG seeding outside the
+  trainer's checkpoint-captured state.
+* **R8 sharding-specs** — ``PartitionSpec`` axis names must be axes of
+  a declared mesh, and ``donate_argnums`` must index into the
+  ``in_shardings`` tuple they ride with.
+
+The dataflow is a *may*-analysis over per-name state **sets** (merge =
+union), so a name can simultaneously be "held on the else path" and
+"released on the then path"; leak checks require ``H`` present and no
+publication, which keeps the classic optimistic/pessimistic merge
+trade-off honest.  Publication (``P``) means ownership left the
+function: the value was returned, stored into a container/field, or
+passed to another function — interprocedural lifetime is the runtime
+twin's job (``repro.core.lifecycle``).
+
+Deliberate scope limits (documented, stable):
+
+* Only plain local names (and, for R6, ``name.attr`` slugs) are
+  tracked; ``self.x`` fields and subscripted cells are publication
+  sinks, not tracked resources.
+* R5 "use-after-release" means a *consuming* use — re-growing,
+  re-allocating into, or mutating a released resource.  Plain reads of
+  a released page id stay legal: the COW idiom releases the source's
+  refcount and then reads its id for the batched device copy.
+* R7 tracks canonical ``jax.random.*`` producers/consumers only; keys
+  threaded through local helpers are the runtime twin's problem.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, FrozenSet, Iterable, List, Optional, Sequence, \
+    Set, Tuple
+
+from .cfg import CFG, build_cfg
+from .core import FuncInfo, Index, ModuleInfo
+from .rules import Finding, RuleDoc, _expr_slug
+
+__all__ = ["VERIFY_DOCS", "VERIFY_RULES", "FSM_TRANSITIONS"]
+
+VERIFY_DOCS: Dict[str, RuleDoc] = {
+    "R5": RuleDoc(
+        rule_id="R5",
+        title="KV page/slot lifecycle",
+        rationale=(
+            "Tree rollouts share KV pages copy-on-write; a page acquired "
+            "on a path that raises (OutOfPages, fault kill points) and "
+            "never released leaks pool capacity until the engine dies — "
+            "exactly under the KV pressure that triggers those raises. "
+            "Every acquisition must reach a release or an ownership "
+            "transfer on all CFG exits, including the exception exit; "
+            "double-release and mutate-after-release corrupt refcounts "
+            "or the slot free list silently."),
+        doc_anchor="docs/static_analysis.md#r5-kv-lifecycle",
+    ),
+    "R6": RuleDoc(
+        rule_id="R6",
+        title="path-FSM conformance",
+        rationale=(
+            "The path lifecycle (active → branched/released/preempted/"
+            "restored/finished/FAILED) is a state machine spread over "
+            "five modules; an undeclared mutation site — restoring a "
+            "released leaf, double release_path, branching a preempted "
+            "path — corrupts rollouts in ways only visible as wrong "
+            "advantages much later.  Every mutation site must be in the "
+            "declared transition table FSM_TRANSITIONS, and illegal "
+            "orderings within a function fail the build."),
+        doc_anchor="docs/static_analysis.md#r6-path-fsm",
+    ),
+    "R7": RuleDoc(
+        rule_id="R7",
+        title="PRNG-key discipline",
+        rationale=(
+            "Fault determinism and crash-safe resume replay the exact "
+            "RNG stream; a JAX key consumed twice without split silently "
+            "correlates draws, a split whose result is dropped desyncs "
+            "the stream across resume, and host-RNG seeded outside the "
+            "trainer's checkpoint-captured generators diverges on "
+            "restore.  All three are statically visible."),
+        doc_anchor="docs/static_analysis.md#r7-rng-discipline",
+    ),
+    "R8": RuleDoc(
+        rule_id="R8",
+        title="sharding-spec consistency",
+        rationale=(
+            "PartitionSpec axis names are stringly-typed: an axis that "
+            "is not in the declared mesh only fails at dispatch time on "
+            "a real multi-device mesh, which CI never has.  Axis names "
+            "and donate_argnums/in_shardings arity are checkable "
+            "statically against the jax.make_mesh declarations."),
+        doc_anchor="docs/static_analysis.md#r8-sharding-specs",
+    ),
+}
+
+
+# ---------------------------------------------------------------------------
+# shared helpers
+# ---------------------------------------------------------------------------
+
+_OPAQUE = (ast.FunctionDef, ast.AsyncFunctionDef, ast.ClassDef)
+
+
+def _nodes(stmt: ast.stmt) -> Iterable[ast.AST]:
+    """All AST nodes of one statement; opaque nested defs yield nothing
+    (they are analyzed as their own functions)."""
+    if isinstance(stmt, _OPAQUE):
+        return
+    yield from ast.walk(stmt)
+
+
+def _calls(stmt: ast.stmt) -> Iterable[ast.Call]:
+    for n in _nodes(stmt):
+        if isinstance(n, ast.Call):
+            yield n
+
+
+def _tail(call: ast.Call) -> Optional[str]:
+    f = call.func
+    if isinstance(f, ast.Name):
+        return f.id
+    if isinstance(f, ast.Attribute):
+        return f.attr
+    return None
+
+
+def _arg_names(call: ast.Call) -> Iterable[str]:
+    """Plain-Name arguments, walking into list/tuple literals."""
+    todo = list(call.args) + [kw.value for kw in call.keywords]
+    while todo:
+        a = todo.pop()
+        if isinstance(a, ast.Name):
+            yield a.id
+        elif isinstance(a, (ast.List, ast.Tuple)):
+            todo.extend(a.elts)
+        elif isinstance(a, ast.Starred):
+            todo.append(a.value)
+
+
+def _fn_stmts(fn: FuncInfo) -> Iterable[ast.stmt]:
+    """Shallow statement walk of a function body (no nested defs)."""
+    todo = list(fn.node.body)
+    while todo:
+        s = todo.pop()
+        if isinstance(s, _OPAQUE):
+            continue
+        yield s
+        for fld in ("body", "orelse", "finalbody"):
+            todo.extend(getattr(s, fld, []) or [])
+        for h in getattr(s, "handlers", []) or []:
+            todo.extend(h.body)
+
+
+def _join(old: Optional[Dict[str, FrozenSet[str]]],
+          new: Dict[str, FrozenSet[str]]) -> Dict[str, FrozenSet[str]]:
+    """May-merge: per-name union of state sets."""
+    if old is None:
+        return dict(new)
+    out = dict(old)
+    for k, v in new.items():
+        cur = out.get(k)
+        out[k] = v if cur is None else (cur | v)
+    return out
+
+
+def _dataflow(cfg: CFG, step, entry_state=None
+              ) -> Dict[int, Optional[Dict[str, FrozenSet[str]]]]:
+    """Fixpoint over the CFG.  ``step(block, in_state) -> (out, exc)``;
+    the ``exc`` state feeds "exc" edges of raising blocks (it carries
+    the state *before* the isolated raising statement)."""
+    in_map: Dict[int, Optional[Dict[str, FrozenSet[str]]]] = {
+        bid: None for bid in cfg.blocks}
+    in_map[cfg.entry] = dict(entry_state or {})
+    order = cfg.rpo()
+    for _ in range(64):
+        changed = False
+        for bid in order:
+            st = in_map[bid]
+            if st is None:
+                continue
+            out, exc = step(cfg.blocks[bid], dict(st))
+            for succ, kind in cfg.blocks[bid].succs:
+                nxt = exc if (kind == "exc" and cfg.blocks[bid].raises) \
+                    else out
+                merged = _join(in_map[succ], nxt)
+                if merged != in_map[succ]:
+                    in_map[succ] = merged
+                    changed = True
+        if not changed:
+            break
+    return in_map
+
+
+# ---------------------------------------------------------------------------
+# R5: KV page / slot lifecycle
+# ---------------------------------------------------------------------------
+
+# low-level acquisition tails: pool/slot allocators and the refcounting
+# table fork.  Engine-level entry points (fork_paths, restore_path, ...)
+# are the *verified* surface, not re-modeled at their call sites — the
+# sampler-level lifecycle is R6's domain.
+ALLOC_TAILS = {"alloc", "_alloc_page", "_alloc_slot", "fork_table"}
+# calls that acquire pages *into* their first argument and may raise
+# mid-way (the partial growth is visible on the exception path too)
+GROW_TAILS = {"_ensure_capacity", "_cow_pages", "_replay_prefix",
+              "_fork_from_prefix_arm"}
+RELEASE_TAILS = {"release", "release_table", "release_path",
+                 "release_qslot", "release_partial", "preempt_path"}
+
+_R5_ALL_TAILS = ALLOC_TAILS | GROW_TAILS | RELEASE_TAILS
+
+_H, _R, _P = "H", "R", "P"          # held / released / published
+
+
+def _has_alloc_call(expr: ast.AST) -> bool:
+    for n in ast.walk(expr):
+        if isinstance(n, ast.Call) and _tail(n) in ALLOC_TAILS:
+            return True
+    return False
+
+
+class _R5Pre:
+    """Flow-insensitive prepass: which names are containers of acquired
+    resources, which are published-at-birth via append, where each name
+    was first acquired (for leak linenos)."""
+
+    def __init__(self, fn: FuncInfo):
+        self.ever_alloc: Set[str] = set()
+        self.appended: Set[str] = set()      # names pushed into containers
+        self.containers: Set[str] = set()
+        self.local_ctor: Set[str] = set()    # bound from a constructor call
+        self.alloc_lineno: Dict[str, int] = {}
+        appends: List[Tuple[str, str]] = []  # (container, member)
+        sub_stored: Set[str] = set()         # published into a cell
+        for stmt in _fn_stmts(fn):
+            tgt = None
+            if isinstance(stmt, ast.Assign) and len(stmt.targets) == 1:
+                tgt, val = stmt.targets[0], stmt.value
+            elif isinstance(stmt, ast.AnnAssign) and stmt.value is not None:
+                tgt, val = stmt.target, stmt.value
+            else:
+                tgt, val = None, None
+            if isinstance(tgt, ast.Name) and val is not None:
+                if _has_alloc_call(val):
+                    self.ever_alloc.add(tgt.id)
+                    self.alloc_lineno.setdefault(tgt.id, stmt.lineno)
+                if isinstance(val, ast.Call):
+                    self.local_ctor.add(tgt.id)
+            if isinstance(tgt, ast.Subscript) and isinstance(val, ast.Name):
+                sub_stored.add(val.id)
+            for call in _calls(stmt):
+                t = _tail(call)
+                if t in GROW_TAILS and call.args \
+                        and isinstance(call.args[0], ast.Name):
+                    self.ever_alloc.add(call.args[0].id)
+                    self.alloc_lineno.setdefault(call.args[0].id,
+                                                 stmt.lineno)
+                if t in ("append", "extend") \
+                        and isinstance(call.func, ast.Attribute) \
+                        and isinstance(call.func.value, ast.Name) \
+                        and call.args \
+                        and isinstance(call.args[0], ast.Name):
+                    appends.append((call.func.value.id, call.args[0].id))
+        for cont, member in appends:
+            # a member that is also stored into some other container's
+            # cell (the COW copy-pair manifests) is owned there, not by
+            # the list it is *recorded* in
+            if member in self.ever_alloc and member not in sub_stored:
+                self.containers.add(cont)
+                self.appended.add(member)
+                self.alloc_lineno.setdefault(
+                    cont, self.alloc_lineno.get(member, fn.node.lineno))
+
+
+def _r5_function(fn: FuncInfo, mod: ModuleInfo,
+                 findings: List[Finding]) -> None:
+    pre = _R5Pre(fn)
+    tracked_alloc = pre.ever_alloc - pre.appended
+
+    def may_raise(stmt: ast.stmt) -> bool:
+        return any(_tail(c) in ALLOC_TAILS or _tail(c) in GROW_TAILS
+                   for c in _calls(stmt))
+
+    cfg = build_cfg(fn.node, may_raise)
+    seen: Set[str] = set()
+
+    def report(detail: str, lineno: int, message: str) -> None:
+        if detail in seen:
+            return
+        seen.add(detail)
+        findings.append(Finding(
+            rule="R5", module=mod.name, path=mod.path, lineno=lineno,
+            func=fn.qualname, detail=detail, message=message))
+
+    def release_one(name: str, st, lineno: int, reporting: bool) -> None:
+        cur = st.get(name, frozenset())
+        if reporting and _R in cur:
+            report(f"double-release:{name}", lineno,
+                   f"`{name}` may already be released here — a second "
+                   "release corrupts the refcount / free list")
+        st[name] = frozenset({_R})
+
+    def publish(st, name: str) -> None:
+        cur = st.get(name)
+        if cur and _H in cur:
+            st[name] = (cur - {_H}) | {_P}
+
+    def consuming_use(name: str, st, lineno: int, reporting: bool,
+                      what: str) -> None:
+        if reporting and _R in st.get(name, frozenset()):
+            report(f"use-after-release:{name}", lineno,
+                   f"`{name}` may be released here but is {what} — "
+                   "released resources must not be mutated or re-grown")
+
+    def apply_stmt(stmt: ast.stmt, st, reporting: bool) -> None:
+        # call effects, in source order
+        for call in _calls(stmt):
+            t = _tail(call)
+            if t in RELEASE_TAILS:
+                for a in list(call.args) + [k.value for k in call.keywords]:
+                    todo = [a]
+                    while todo:
+                        x = todo.pop()
+                        if isinstance(x, ast.Name):
+                            release_one(x.id, st, stmt.lineno, reporting)
+                        elif isinstance(x, (ast.List, ast.Tuple)):
+                            todo.extend(x.elts)
+                        elif isinstance(x, ast.Attribute) \
+                                and isinstance(x.value, ast.Name) \
+                                and _H in st.get(x.value.id, frozenset()):
+                            release_one(x.value.id, st, stmt.lineno,
+                                        reporting)
+            elif t in GROW_TAILS:
+                if call.args and isinstance(call.args[0], ast.Name):
+                    n = call.args[0].id
+                    consuming_use(n, st, stmt.lineno, reporting,
+                                  f"grown by `{t}`")
+                    # growing only transfers ownership to *locally
+                    # constructed* objects; growing a caller-owned path
+                    # (decode over `paths`) stays the caller's lifetime
+                    if n not in pre.appended and n not in st \
+                            and n in pre.local_ctor:
+                        st[n] = frozenset({_H})
+            elif t in ALLOC_TAILS:
+                pass                     # handled at the binding
+            else:
+                for n in _arg_names(call):
+                    publish(st, n)
+                for a in call.args:
+                    if isinstance(a, ast.Attribute) \
+                            and isinstance(a.value, ast.Name):
+                        publish(st, a.value.id)
+        # bindings
+        tgt = val = None
+        if isinstance(stmt, ast.Assign) and len(stmt.targets) == 1:
+            tgt, val = stmt.targets[0], stmt.value
+        elif isinstance(stmt, ast.AnnAssign) and stmt.value is not None:
+            tgt, val = stmt.target, stmt.value
+        elif isinstance(stmt, ast.Assign):
+            for t_ in stmt.targets:
+                for n in ast.walk(t_):
+                    if isinstance(n, ast.Name):
+                        st.pop(n.id, None)
+        if tgt is not None:
+            if isinstance(tgt, ast.Name):
+                n = tgt.id
+                if _has_alloc_call(val) and n not in pre.appended:
+                    st[n] = frozenset({_H})
+                elif n in pre.containers:
+                    st[n] = frozenset({_H})
+                else:
+                    # NB: a Name-to-Name copy (incl. the synthetic
+                    # for-loop binding) deliberately does NOT transfer
+                    # ownership — iterating a held container must not
+                    # double-count its members
+                    st.pop(n, None)
+            elif isinstance(tgt, ast.Attribute):
+                if isinstance(tgt.value, ast.Name):
+                    consuming_use(tgt.value.id, st, stmt.lineno, reporting,
+                                  "mutated (attribute store)")
+                # storing an acquisition into obj.attr publishes it into
+                # the object (self fields / path.slot); the object's own
+                # lifetime covers it
+            elif isinstance(tgt, ast.Subscript):
+                if isinstance(val, ast.Name):
+                    publish(st, val.id)   # stored into a container cell
+                if isinstance(tgt.value, ast.Name):
+                    consuming_use(tgt.value.id, st, stmt.lineno, reporting,
+                                  "mutated (subscript store)")
+            elif isinstance(tgt, (ast.Tuple, ast.List)):
+                for n in ast.walk(tgt):
+                    if isinstance(n, ast.Name):
+                        st.pop(n.id, None)
+        # returning publishes
+        if isinstance(stmt, ast.Return) and stmt.value is not None:
+            for n in ast.walk(stmt.value):
+                if isinstance(n, ast.Name):
+                    publish(st, n.id)
+
+    def step(block, st, reporting=False):
+        exc = dict(st)
+        if block.raises and block.stmts:
+            # partial growth is visible to the exception path
+            for call in _calls(block.stmts[0]):
+                if _tail(call) in GROW_TAILS and call.args \
+                        and isinstance(call.args[0], ast.Name):
+                    n = call.args[0].id
+                    if n not in pre.appended and n not in exc \
+                            and n in pre.local_ctor:
+                        exc[n] = frozenset({_H})
+        for s in block.stmts:
+            apply_stmt(s, st, reporting)
+        return st, exc
+
+    in_map = _dataflow(cfg, step)
+
+    # reporting sweep: re-run each reachable block once with checks on,
+    # and check leaks on edges into the exits
+    for bid, st in in_map.items():
+        if st is None:
+            continue
+        blk = cfg.blocks[bid]
+        out, exc = step(blk, dict(st), reporting=True)
+        for succ, kind in blk.succs:
+            is_exc = kind == "exc" and blk.raises
+            state = exc if is_exc else out
+            if succ == cfg.exit or succ == cfg.raise_exit:
+                suffix = "-on-raise" if succ == cfg.raise_exit else ""
+                for name, s in sorted(state.items()):
+                    if _H in s and _P not in s:
+                        lineno = (blk.stmts[0].lineno if is_exc and
+                                  blk.stmts else
+                                  pre.alloc_lineno.get(name,
+                                                       fn.node.lineno))
+                        where = ("the exception path" if suffix
+                                 else "a normal exit")
+                        report(f"leak{suffix}:{name}", lineno,
+                               f"`{name}` holds pages/slots that never "
+                               f"reach a release on {where} — KV pool "
+                               "capacity leaks exactly under the "
+                               "OutOfPages pressure that raises here")
+
+    # COW conservation: a subscript store of an acquisition into a table
+    # must be paired with a release of the page it displaces
+    alloc_stores: List[Tuple[str, int]] = []
+    sub_loads: Dict[str, Set[str]] = {}
+    released_names: Set[str] = set()
+    for stmt in _fn_stmts(fn):
+        tgt = val = None
+        if isinstance(stmt, ast.Assign) and len(stmt.targets) == 1:
+            tgt, val = stmt.targets[0], stmt.value
+        if tgt is None:
+            continue
+        if isinstance(tgt, ast.Subscript) and (
+                (isinstance(val, ast.Name) and val.id in pre.ever_alloc)
+                or _has_alloc_call(val)):
+            alloc_stores.append((_expr_slug(tgt.value), stmt.lineno))
+        if isinstance(tgt, ast.Name) and isinstance(val, ast.Subscript):
+            sub_loads.setdefault(_expr_slug(val.value),
+                                 set()).add(tgt.id)
+    for stmt in _fn_stmts(fn):
+        for call in _calls(stmt):
+            if _tail(call) in RELEASE_TAILS:
+                released_names.update(_arg_names(call))
+    for slug, lineno in alloc_stores:
+        if not (sub_loads.get(slug, set()) & released_names):
+            report(f"cow-no-release:{slug}", lineno,
+                   f"a fresh page is stored into `{slug}[...]` but no "
+                   "page loaded from it is ever released — the displaced "
+                   "COW source keeps its refcount forever")
+
+
+def rule_r5(index: Index) -> List[Finding]:
+    findings: List[Finding] = []
+    for fn in index.all_functions():
+        mod = index.modules[fn.module]
+        if any(_tail(c) in _R5_ALL_TAILS
+               for s in _fn_stmts(fn) for c in _calls(s)):
+            _r5_function(fn, mod, findings)
+    return findings
+
+
+# ---------------------------------------------------------------------------
+# R6: path-FSM conformance
+# ---------------------------------------------------------------------------
+
+# call tails that are FSM transitions, and the op they perform
+FSM_CALL_OPS: Dict[str, str] = {
+    "release_path": "release",
+    "release_partial": "release",
+    "preempt_path": "preempt",
+    "restore_path": "restore",
+    "fork_paths": "branch",
+    "fork_from_prefix": "branch-prefix",
+    "_finish_path": "finish",
+    "add_finished": "record-finished",
+}
+
+# calls that *use* a path as a live decoding context
+FSM_USE_TAILS = {"fork_paths", "fork_path", "fork_from_prefix",
+                 "decode_segments", "sample_pending_batch"}
+FSM_BRANCH_TAILS = {"fork_paths", "fork_path", "fork_from_prefix"}
+
+# The declared path-lifecycle transition table: op -> sites allowed to
+# perform it, as (module, function qualname).  Every mutation site the
+# analyzer finds must appear here; adding a new transition to the
+# engine/sampler means extending this table in the same PR, which is
+# the point — the diff review *is* the FSM review.
+FSM_TRANSITIONS: Dict[str, Set[Tuple[str, str]]] = {
+    "release": {
+        ("repro.core.engine", "TreeEngine.preempt_path"),
+        ("repro.core.engine", "TreeEngine.release_partial"),
+        # error-path cleanup: constructors release their partial batch
+        # before re-raising OutOfPages / fault kills (R5)
+        ("repro.core.engine", "TreeEngine.prefill_queries"),
+        ("repro.core.engine", "TreeEngine.fork_paths"),
+        ("repro.core.engine", "TreeEngine.restore_path"),
+        ("repro.core.engine", "TreeEngine.fork_from_prefix"),
+        ("repro.core.sampler", "_finish_path"),
+        ("repro.core.sampler", "_release_leaf_kv"),
+        ("repro.core.sampler", "sample_trees"),
+    },
+    "preempt": {
+        ("repro.core.sampler", "_admit_for_decode"),
+    },
+    "preempt-enqueue": {
+        ("repro.core.sampler", "_admit_for_decode"),
+    },
+    "restore": {
+        ("repro.core.sampler", "_regenerate_tree"),
+    },
+    "branch": {
+        ("repro.core.engine", "TreeEngine.fork_path"),
+        ("repro.core.sampler", "_branch_tree"),
+        ("repro.core.sampler", "sample_trees"),
+    },
+    "branch-prefix": {
+        ("repro.core.sampler", "_fallback_tree"),
+    },
+    "finish": {
+        ("repro.core.sampler", "_admit_for_decode"),
+        ("repro.core.sampler", "_process_segment"),
+        ("repro.core.sampler", "_branch_tree"),
+        ("repro.core.sampler", "_quarantine_nonfinite"),
+        ("repro.core.sampler", "sample_trees"),
+    },
+    "record-finished": {
+        ("repro.core.sampler", "_finish_path"),
+    },
+    "status-set:dynamic": {
+        ("repro.core.sampler", "_finish_path"),
+    },
+    "released-set": {
+        ("repro.core.engine", "TreeEngine.release_path"),
+    },
+}
+
+
+def _stmt_fsm_ops(stmt: ast.stmt) -> Iterable[Tuple[str, ast.AST]]:
+    for call in _calls(stmt):
+        t = _tail(call)
+        if t in FSM_CALL_OPS:
+            yield FSM_CALL_OPS[t], call
+        if t == "append" and isinstance(call.func, ast.Attribute) \
+                and isinstance(call.func.value, ast.Attribute) \
+                and call.func.value.attr == "preempted":
+            yield "preempt-enqueue", call
+    tgt = None
+    if isinstance(stmt, ast.Assign) and len(stmt.targets) == 1:
+        tgt = stmt.targets[0]
+    elif isinstance(stmt, (ast.AnnAssign, ast.AugAssign)):
+        tgt = stmt.target
+    if isinstance(tgt, ast.Attribute):
+        v = getattr(stmt, "value", None)
+        if v is None:
+            return
+        if tgt.attr == "status":
+            if isinstance(v, ast.Attribute) and \
+                    isinstance(v.value, ast.Name) and v.value.id == "Status":
+                yield f"status-set:{v.attr}", stmt
+            else:
+                yield "status-set:dynamic", stmt
+        elif tgt.attr == "released":
+            yield "released-set", stmt
+
+
+def _clear_slug(st: Dict[str, FrozenSet[str]], slug: str) -> None:
+    st.pop(slug, None)
+    for k in [k for k in st if k.startswith(slug + ".")]:
+        st.pop(k, None)
+
+
+def _r6_function(fn: FuncInfo, mod: ModuleInfo,
+                 findings: List[Finding]) -> None:
+    seen: Set[str] = set()
+
+    def report(detail: str, lineno: int, message: str) -> None:
+        if detail in seen:
+            return
+        seen.add(detail)
+        findings.append(Finding(
+            rule="R6", module=mod.name, path=mod.path, lineno=lineno,
+            func=fn.qualname, detail=detail, message=message))
+
+    # 1) every transition site must be declared
+    for stmt in _fn_stmts(fn):
+        for op, node in _stmt_fsm_ops(stmt):
+            if (mod.name, fn.qualname) not in FSM_TRANSITIONS.get(op, ()):
+                report(f"undeclared:{op}", node.lineno,
+                       f"path-FSM transition `{op}` at "
+                       f"`{fn.qualname}` is not in the declared "
+                       "lifecycle table — add it to FSM_TRANSITIONS "
+                       "(tools/analyze/verify.py) with review, or fix "
+                       "the call site")
+
+    # 2) illegal orderings within the function
+    def arg_slugs(call: ast.Call) -> Iterable[str]:
+        for a in list(call.args) + [k.value for k in call.keywords]:
+            for n in ast.walk(a):
+                if isinstance(n, (ast.Name, ast.Attribute)):
+                    slug = _expr_slug(n)
+                    if slug:
+                        yield slug
+
+    def apply_stmt(stmt: ast.stmt, st, reporting: bool) -> None:
+        for call in _calls(stmt):
+            t = _tail(call)
+            if t in FSM_USE_TAILS:
+                for slug in arg_slugs(call):
+                    s = st.get(slug, frozenset())
+                    if not reporting:
+                        continue
+                    if "released" in s:
+                        report(f"use-after-release-path:{slug}",
+                               stmt.lineno,
+                               f"`{slug}` may be released here but is "
+                               f"handed to `{t}` — released paths hold "
+                               "no pages to decode or fork from")
+                    elif "preempted" in s and t in FSM_BRANCH_TAILS:
+                        report(f"branch-after-preempt:{slug}",
+                               stmt.lineno,
+                               f"`{slug}` may be preempted here but is "
+                               f"branched via `{t}` — preempted paths "
+                               "must be restored before branching")
+            if t == "release_path":
+                for a in call.args:
+                    if isinstance(a, (ast.Name, ast.Attribute)):
+                        slug = _expr_slug(a)
+                        if reporting and \
+                                "released" in st.get(slug, frozenset()):
+                            report(f"double-release-path:{slug}",
+                                   stmt.lineno,
+                                   f"`{slug}` may already be released "
+                                   "when release_path is called again")
+                        st[slug] = frozenset({"released"})
+            elif t == "preempt_path":
+                for a in call.args:
+                    if isinstance(a, (ast.Name, ast.Attribute)):
+                        st[_expr_slug(a)] = frozenset({"preempted"})
+        # rebinding a slug (path.ep = restore_path(...), loop vars)
+        # clears its state and its fields'
+        tgt = None
+        if isinstance(stmt, ast.Assign) and len(stmt.targets) == 1:
+            tgt = stmt.targets[0]
+        elif isinstance(stmt, ast.AnnAssign):
+            tgt = stmt.target
+        if isinstance(tgt, (ast.Name, ast.Attribute)):
+            _clear_slug(st, _expr_slug(tgt))
+        elif isinstance(tgt, (ast.Tuple, ast.List)):
+            for n in ast.walk(tgt):
+                if isinstance(n, ast.Name):
+                    _clear_slug(st, n.id)
+
+    def step(block, st, reporting=False):
+        exc = dict(st)
+        for s in block.stmts:
+            apply_stmt(s, st, reporting)
+        return st, exc
+
+    cfg = build_cfg(fn.node)
+    in_map = _dataflow(cfg, step)
+    for bid, st in in_map.items():
+        if st is not None:
+            step(cfg.blocks[bid], dict(st), reporting=True)
+
+
+def rule_r6(index: Index) -> List[Finding]:
+    findings: List[Finding] = []
+    for fn in index.all_functions():
+        mod = index.modules[fn.module]
+        if any(True for s in _fn_stmts(fn) for _ in _stmt_fsm_ops(s)):
+            _r6_function(fn, mod, findings)
+    return findings
+
+
+# ---------------------------------------------------------------------------
+# R7: PRNG-key discipline
+# ---------------------------------------------------------------------------
+
+_KEY_PRODUCERS = {"PRNGKey", "key", "split", "fold_in"}
+_KEY_CONSUMERS = {"categorical", "normal", "uniform", "bernoulli",
+                  "gumbel", "randint", "truncated_normal", "permutation",
+                  "choice", "exponential", "gamma", "beta", "dirichlet",
+                  "poisson", "laplace", "split", "shuffle"}
+_KEY_PARAM_NAMES = {"key", "rng_key", "prng_key"}
+
+# host-RNG constructors/seeders that break resume parity when they live
+# outside checkpoint-captured state
+_HOST_RNG = {"random.Random", "random.seed", "numpy.random.default_rng",
+             "numpy.random.seed", "numpy.random.RandomState"}
+# modules whose host RNGs *are* the checkpoint-captured state (trainer
+# state_dict) or the deterministic fault-injection plan
+R7_HOST_RNG_OK = {"repro.rl.trainer", "repro.core.faults"}
+
+
+def _jax_random_fn(index: Index, mod: ModuleInfo,
+                   call: ast.Call) -> Optional[str]:
+    name = index.dotted_name(mod, call.func)
+    if name and name.startswith("jax.random."):
+        return name.rsplit(".", 1)[1]
+    return None
+
+
+def _key_arg(call: ast.Call) -> Optional[ast.AST]:
+    for kw in call.keywords:
+        if kw.arg == "key":
+            return kw.value
+    return call.args[0] if call.args else None
+
+
+def _r7_function(fn: FuncInfo, mod: ModuleInfo, index: Index,
+                 findings: List[Finding]) -> None:
+    seen: Set[str] = set()
+
+    def report(detail: str, lineno: int, message: str) -> None:
+        if detail in seen:
+            return
+        seen.add(detail)
+        findings.append(Finding(
+            rule="R7", module=mod.name, path=mod.path, lineno=lineno,
+            func=fn.qualname, detail=detail, message=message))
+
+    def apply_stmt(stmt: ast.stmt, st, reporting: bool) -> None:
+        for call in _calls(stmt):
+            jfn = _jax_random_fn(index, mod, call)
+            if jfn in _KEY_CONSUMERS:
+                a = _key_arg(call)
+                if isinstance(a, ast.Name):
+                    if reporting and "consumed" in st.get(a.id,
+                                                         frozenset()):
+                        report(f"key-reuse:{a.id}", stmt.lineno,
+                               f"PRNG key `{a.id}` may already be "
+                               f"consumed when `jax.random.{jfn}` "
+                               "draws from it again — reused keys "
+                               "correlate draws and break fault-replay "
+                               "determinism; split first")
+                    st[a.id] = frozenset({"consumed"})
+        tgt = val = None
+        if isinstance(stmt, ast.Assign) and len(stmt.targets) == 1:
+            tgt, val = stmt.targets[0], stmt.value
+        elif isinstance(stmt, ast.AnnAssign) and stmt.value is not None:
+            tgt, val = stmt.target, stmt.value
+        if tgt is None:
+            return
+        produced = isinstance(val, ast.Call) and \
+            _jax_random_fn(index, mod, val) in _KEY_PRODUCERS
+        names = [tgt] if isinstance(tgt, ast.Name) else (
+            [e for e in tgt.elts if isinstance(e, ast.Name)]
+            if isinstance(tgt, (ast.Tuple, ast.List)) else [])
+        for n in names:
+            if produced:
+                st[n.id] = frozenset({"fresh"})
+            else:
+                st.pop(n.id, None)
+
+    def step(block, st, reporting=False):
+        exc = dict(st)
+        for s in block.stmts:
+            apply_stmt(s, st, reporting)
+        return st, exc
+
+    cfg = build_cfg(fn.node)
+    entry_state = {p: frozenset({"fresh"}) for p in fn.params
+                   if p in _KEY_PARAM_NAMES}
+    in_map = _dataflow(cfg, step, entry_state)
+    for bid, st in in_map.items():
+        if st is not None:
+            step(cfg.blocks[bid], dict(st), reporting=True)
+
+    # split-and-drop: a split result that is never read desyncs the
+    # stream relative to a resumed run that *does* read it
+    split_targets: Dict[str, int] = {}
+    loads: Dict[str, int] = {}
+    for stmt in _fn_stmts(fn):
+        if isinstance(stmt, ast.Expr) and isinstance(stmt.value, ast.Call):
+            if _jax_random_fn(index, mod, stmt.value) == "split":
+                a = _key_arg(stmt.value)
+                report(f"split-drop:{_expr_slug(a) if a is not None else '?'}",
+                       stmt.lineno,
+                       "the result of `jax.random.split` is discarded — "
+                       "the stream advances but nothing consumes the new "
+                       "keys (resume will not replay this)")
+        tgt = val = None
+        if isinstance(stmt, ast.Assign) and len(stmt.targets) == 1:
+            tgt, val = stmt.targets[0], stmt.value
+        if tgt is not None and isinstance(val, ast.Call) and \
+                _jax_random_fn(index, mod, val) == "split":
+            elts = [tgt] if isinstance(tgt, ast.Name) else (
+                list(tgt.elts) if isinstance(tgt, (ast.Tuple, ast.List))
+                else [])
+            for e in elts:
+                if isinstance(e, ast.Name) and not e.id.startswith("_"):
+                    split_targets.setdefault(e.id, stmt.lineno)
+        for n in _nodes(stmt):
+            if isinstance(n, ast.Name) and isinstance(n.ctx, ast.Load):
+                loads[n.id] = loads.get(n.id, 0) + 1
+    for name, lineno in sorted(split_targets.items()):
+        if loads.get(name, 0) == 0:
+            report(f"split-drop:{name}", lineno,
+                   f"`{name}` is split off a PRNG key but never used — "
+                   "dead splits hide a missing consumer or a stream "
+                   "desync (prefix with `_` if intentional)")
+
+
+def rule_r7(index: Index) -> List[Finding]:
+    findings: List[Finding] = []
+    for mod in index.modules.values():
+        # host-RNG seeding: module-wide, function or module level
+        for node in ast.walk(mod.tree):
+            if isinstance(node, ast.Call):
+                name = index.dotted_name(mod, node.func)
+                if name in _HOST_RNG and mod.name not in R7_HOST_RNG_OK:
+                    func = "<module>"
+                    for fn in mod.functions.values():
+                        if fn.node.lineno <= node.lineno <= max(
+                                (n.lineno for n in ast.walk(fn.node)
+                                 if hasattr(n, "lineno")),
+                                default=fn.node.lineno):
+                            func = fn.qualname
+                    findings.append(Finding(
+                        rule="R7", module=mod.name, path=mod.path,
+                        lineno=node.lineno, func=func,
+                        detail=f"host-rng:{name}",
+                        message=f"`{name}` seeds host RNG state outside "
+                                "the trainer's checkpoint-captured "
+                                "generators — draws from it diverge "
+                                "across crash-safe resume"))
+    for fn in index.all_functions():
+        mod = index.modules[fn.module]
+        uses_jax_random = any(
+            _jax_random_fn(index, mod, c) is not None
+            for s in _fn_stmts(fn) for c in _calls(s))
+        if uses_jax_random or (set(fn.params) & _KEY_PARAM_NAMES):
+            _r7_function(fn, mod, index, findings)
+    return findings
+
+
+# ---------------------------------------------------------------------------
+# R8: sharding-spec consistency
+# ---------------------------------------------------------------------------
+
+_MESH_CTORS = {"jax.make_mesh", "jax.sharding.Mesh",
+               "jax.experimental.mesh_utils.Mesh"}
+
+
+def _str_tuple(node: ast.AST) -> Optional[List[str]]:
+    if isinstance(node, (ast.Tuple, ast.List)) and node.elts and all(
+            isinstance(e, ast.Constant) and isinstance(e.value, str)
+            for e in node.elts):
+        return [e.value for e in node.elts]
+    return None
+
+
+def _axis_names_from(node: ast.AST,
+                     local_assigns: Dict[str, ast.AST]) -> List[str]:
+    """Axis names out of a make_mesh axis argument: a literal tuple, an
+    IfExp over literal tuples, or a Name assigned one of those."""
+    out: List[str] = []
+    direct = _str_tuple(node)
+    if direct:
+        return direct
+    if isinstance(node, ast.IfExp):
+        return _axis_names_from(node.body, local_assigns) + \
+            _axis_names_from(node.orelse, local_assigns)
+    if isinstance(node, ast.Name) and node.id in local_assigns:
+        return _axis_names_from(local_assigns[node.id], local_assigns)
+    return out
+
+
+def _collect_declared_axes(index: Index) -> Set[str]:
+    axes: Set[str] = set()
+    for mod in index.modules.values():
+        for fn in mod.functions.values():
+            local_assigns: Dict[str, ast.AST] = {}
+            for stmt in _fn_stmts(fn):
+                if isinstance(stmt, ast.Assign) and \
+                        len(stmt.targets) == 1 and \
+                        isinstance(stmt.targets[0], ast.Name):
+                    local_assigns[stmt.targets[0].id] = stmt.value
+            for stmt in _fn_stmts(fn):
+                for call in _calls(stmt):
+                    name = index.dotted_name(mod, call.func)
+                    if (name in _MESH_CTORS or _tail(call) == "make_mesh") \
+                            and len(call.args) >= 2:
+                        axes.update(_axis_names_from(call.args[1],
+                                                     local_assigns))
+                    for kw in call.keywords:
+                        if kw.arg == "axis_names" and (
+                                name in _MESH_CTORS
+                                or _tail(call) == "make_mesh"):
+                            axes.update(_axis_names_from(kw.value,
+                                                         local_assigns))
+    return axes
+
+
+def _pspec_aliases(mod: ModuleInfo) -> Set[str]:
+    out = set()
+    for alias, (src, attr) in mod.from_imports.items():
+        if attr == "PartitionSpec" and src.startswith("jax"):
+            out.add(alias)
+    return out
+
+
+def _r8_module(mod: ModuleInfo, index: Index, axes: Set[str],
+               findings: List[Finding]) -> None:
+    aliases = _pspec_aliases(mod)
+    seen: Set[Tuple[str, str]] = set()
+
+    def report(func: str, detail: str, lineno: int, message: str) -> None:
+        if (func, detail) in seen:
+            return
+        seen.add((func, detail))
+        findings.append(Finding(
+            rule="R8", module=mod.name, path=mod.path, lineno=lineno,
+            func=func, detail=detail, message=message))
+
+    def check_axis(value: str, func: str, lineno: int, where: str) -> None:
+        if value not in axes:
+            report(func, f"bad-axis:{value}", lineno,
+                   f"axis `{value}` in {where} is not an axis of any "
+                   f"declared mesh ({', '.join(sorted(axes))}) — this "
+                   "only fails at dispatch time on a real multi-device "
+                   "mesh")
+
+    def is_pspec_call(call: ast.Call) -> bool:
+        if isinstance(call.func, ast.Name) and call.func.id in aliases:
+            return True
+        name = index.dotted_name(mod, call.func)
+        return bool(name) and name.endswith(".PartitionSpec")
+
+    for fn in mod.functions.values():
+        local_tuples: Dict[str, ast.AST] = {}
+        for stmt in _fn_stmts(fn):
+            if isinstance(stmt, ast.Assign) and len(stmt.targets) == 1 \
+                    and isinstance(stmt.targets[0], ast.Name):
+                local_tuples[stmt.targets[0].id] = stmt.value
+        for stmt in _fn_stmts(fn):
+            # PartitionSpec axis arguments
+            for call in _calls(stmt):
+                if is_pspec_call(call):
+                    for a in call.args:
+                        if isinstance(a, ast.Constant) and \
+                                isinstance(a.value, str):
+                            check_axis(a.value, fn.qualname, call.lineno,
+                                       "a PartitionSpec")
+                        elif isinstance(a, (ast.Tuple, ast.List)):
+                            for e in a.elts:
+                                if isinstance(e, ast.Constant) and \
+                                        isinstance(e.value, str):
+                                    check_axis(e.value, fn.qualname,
+                                               call.lineno,
+                                               "a PartitionSpec")
+                # donate_argnums must index into in_shardings
+                kwargs = {k.arg: k.value for k in call.keywords}
+                if "donate_argnums" in kwargs and "in_shardings" in kwargs:
+                    shard = kwargs["in_shardings"]
+                    if isinstance(shard, ast.Name):
+                        shard = local_tuples.get(shard.id, shard)
+                    if isinstance(shard, (ast.Tuple, ast.List)):
+                        n = len(shard.elts)
+                        donate = kwargs["donate_argnums"]
+                        if isinstance(donate, ast.IfExp):
+                            arms = (donate.body, donate.orelse)
+                        else:
+                            arms = (donate,)
+                        for arm in arms:
+                            if isinstance(arm, (ast.Tuple, ast.List)):
+                                for e in arm.elts:
+                                    if isinstance(e, ast.Constant) and \
+                                            isinstance(e.value, int) and \
+                                            e.value >= n:
+                                        report(
+                                            fn.qualname,
+                                            f"donate-out-of-range:"
+                                            f"{e.value}",
+                                            call.lineno,
+                                            f"donate_argnums={e.value} "
+                                            f"but in_shardings has only "
+                                            f"{n} entries — donation "
+                                            "silently targets the wrong "
+                                            "buffer")
+            # spec-element assignments: spec[0] = "data"
+            tgt = val = None
+            if isinstance(stmt, ast.Assign) and len(stmt.targets) == 1:
+                tgt, val = stmt.targets[0], stmt.value
+            if tgt is not None and isinstance(val, ast.Constant) and \
+                    isinstance(val.value, str) and \
+                    "spec" in _expr_slug(tgt).lower():
+                check_axis(val.value, fn.qualname, stmt.lineno,
+                           f"`{_expr_slug(tgt)}`")
+            # mesh.shape["data"]
+            for n in _nodes(stmt):
+                if isinstance(n, ast.Subscript) and \
+                        isinstance(n.value, ast.Attribute) and \
+                        n.value.attr == "shape" and \
+                        "mesh" in _expr_slug(n.value.value).lower() and \
+                        isinstance(n.slice, ast.Constant) and \
+                        isinstance(n.slice.value, str):
+                    check_axis(n.slice.value, fn.qualname, n.lineno,
+                               f"`{_expr_slug(n.value)}[...]`")
+
+
+def rule_r8(index: Index) -> List[Finding]:
+    axes = _collect_declared_axes(index)
+    if not axes:
+        return []        # no mesh declared anywhere: nothing to check
+    findings: List[Finding] = []
+    for mod in index.modules.values():
+        declares = any(
+            _tail(c) == "make_mesh" or
+            (index.dotted_name(mod, c.func) or "") in _MESH_CTORS
+            for fn in mod.functions.values()
+            for s in _fn_stmts(fn) for c in _calls(s))
+        if _pspec_aliases(mod) or declares:
+            _r8_module(mod, index, axes, findings)
+    return findings
+
+
+VERIFY_RULES: Sequence = (rule_r5, rule_r6, rule_r7, rule_r8)

@@ -19,10 +19,21 @@
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
-# repro-lint first: the static half of the device-residency gate (R1-R4,
-# baseline-checked; see docs/static_analysis.md). Fails fast on any new
-# finding or stale baseline entry before the test suite spends minutes.
-python -m tools.analyze src/repro
+# repro-lint + repro-verify first: the static half of the residency and
+# lifecycle gates (R1-R8, baseline-checked; see docs/static_analysis.md).
+# Fails fast on any new finding or stale baseline entry before the test
+# suite spends minutes.  Knobs:
+#   REPRO_LINT_CHANGED_ONLY=1  — report findings only in the git diff
+#       (stale-baseline check off); fast inner loop on a big tree
+#   GITHUB_ACTIONS=true        — emit ::error workflow annotations
+LINT_ARGS=()
+if [[ "${REPRO_LINT_CHANGED_ONLY:-0}" == "1" ]]; then
+  LINT_ARGS+=(--changed-only)
+fi
+if [[ "${GITHUB_ACTIONS:-false}" == "true" ]]; then
+  LINT_ARGS+=(--format github)
+fi
+python -m tools.analyze "${LINT_ARGS[@]}" src/repro
 ARGS=(-x -q)
 if [[ "${REPRO_TIER1_SHORT:-0}" == "1" ]]; then
   ARGS+=(-m "not pallas_interpret" --ignore tests/test_dryrun_integration.py)
