@@ -16,6 +16,7 @@ import traceback
 from benchmarks import (
     decode_hotpath,
     robustness_degradation,
+    serve_continuous,
     train_hotpath,
     fig4_depth_segment,
     fig5_rollout_scaling,
@@ -30,6 +31,7 @@ from benchmarks import (
 
 BENCHES = [
     ("decode_hotpath", decode_hotpath),
+    ("serve_continuous", serve_continuous),
     ("train_hotpath", train_hotpath),
     ("robustness_degradation", robustness_degradation),
     ("table2_efficiency", table2_efficiency),

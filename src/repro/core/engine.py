@@ -33,6 +33,18 @@ Device functions are cached per static shape bucket:
                           returns last-position logits (kept on device).
   decode   (R, l)       — lax.scan over l tokens; paged attention per attn
                           layer; on-device temperature/top-p sampling.
+  serve    (R, l)       — decode variant for the continuous-batching
+                          scheduler: per-step forced tokens (chunked
+                          prompt prefill mixed into the decode dispatch)
+                          and per-row position-derived sampling keys, so
+                          a request's stream is bitwise independent of
+                          how arrivals were batched around it.
+
+The device half (params, KV pools, jitted-fn caches) lives on
+:class:`ModelRunner`; :class:`TreeEngine` layers path scheduling policy
+(allocation, forks, preemption, pressure) on top — the SGL-JAX-style
+Scheduler / ModelRunner split.  ``repro.core.scheduler`` drives the
+runner's serve functions directly for continuous batching.
 """
 from __future__ import annotations
 
@@ -176,6 +188,24 @@ def fork_sample(logits_rows: jnp.ndarray, rows: jnp.ndarray, key, *,
     return sample_tokens(key, logits_rows[rows], temperature, top_p)
 
 
+def sample_rows(keys: jnp.ndarray, logits: jnp.ndarray,
+                temperature: float, top_p: float
+                ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Per-row keyed variant of :func:`sample_tokens` for the serve loop.
+
+    keys: (R, 2) raw uint32 PRNG keys, one per row — each derived from
+    (request key, absolute position), so row i's draw depends only on its
+    own request identity, position and logits, never on which other
+    requests happened to share the batch.  logits: (R, V).
+    """
+    lg = logits.astype(jnp.float32) / max(temperature, 1e-6)
+    lg_samp = _top_p_mask(lg, top_p) if top_p < 1.0 else lg
+    tok = jax.vmap(jax.random.categorical)(keys, lg_samp)
+    logp = jax.nn.log_softmax(lg, axis=-1)
+    lp = jnp.take_along_axis(logp, tok[:, None], axis=-1)[:, 0]
+    return tok.astype(jnp.int32), lp
+
+
 def sample_token_host(rng: np.random.Generator, logits: np.ndarray,
                       temperature: float, top_p: float
                       ) -> Tuple[int, float]:
@@ -210,64 +240,121 @@ _bucket = bucket_pow2
 # ---------------------------------------------------------------------------
 
 class TreeEngine:
-    """Paged tree-decoding engine for one model replica."""
+    """Paged tree-decoding engine for one model replica.
+
+    Scheduling-policy half of the Scheduler / ModelRunner split: owns path
+    lifecycle (alloc/fork/preempt/release), pressure handling and host
+    packing; every device concern (params, KV pools, jitted prefill /
+    decode / serve functions) is delegated to ``self.runner``.
+    """
 
     def __init__(self, params, cfg: ModelConfig, tree_cfg: TreeConfig, *,
                  num_pages: int = 4096, page_size: Optional[int] = None,
                  max_slots: int = 256, max_queries: int = 64,
                  max_prompt_len: int = 512, enc_len: int = 64,
                  dtype=jnp.float32, seed: int = 0):
-        self.params = params
-        self.cfg = cfg
-        self.tree_cfg = tree_cfg
-        self.page_size = page_size or min(64, tree_cfg.segment_len)
-        self.max_prompt_len = max_prompt_len
-        self.dtype = dtype
-        max_len = max_prompt_len + tree_cfg.max_response_len + enc_len
-        self.MP = -(-max_len // self.page_size) + 1
-        self.kv = PagedKVState(cfg, num_pages, self.page_size, max_slots,
-                               dtype)
-        # page 0 = garbage sink for padded-position writes; slot 0 = scratch
-        self.garbage_page = self.kv.pool.alloc()
-        assert self.garbage_page == 0
-        self.scratch_slot = self.kv.slots.alloc() if self.kv.rec_state else -1
-        self.has_rec = bool(self.kv.rec_state)
-        self.has_cross = cfg.encoder is not None
-        self.enc_len = enc_len
-        self.cross_pool: Dict[int, Dict[str, jnp.ndarray]] = {}
-        self.qslot_alloc: List[int] = list(range(max_queries - 1, -1, -1))
-        if self.has_cross:
-            hd = cfg.resolved_head_dim
-            for i in range(cfg.num_layers):
-                self.cross_pool[i] = {
-                    "k": jnp.zeros((max_queries, enc_len, cfg.num_kv_heads,
-                                    hd), dtype),
-                    "v": jnp.zeros((max_queries, enc_len, cfg.num_kv_heads,
-                                    hd), dtype),
-                }
-        self.n_prefix = (cfg.frontend.num_prefix_tokens
-                         if cfg.frontend is not None
-                         and cfg.frontend.kind == "vision" else 0)
-        self._decode_fns: Dict[Tuple[int, int], Any] = {}
-        self._prefill_fns: Dict[Tuple[int, int], Any] = {}
-        self._key = jax.random.PRNGKey(seed)
+        self.runner = ModelRunner(
+            params, cfg, tree_cfg, num_pages=num_pages,
+            page_size=page_size, max_slots=max_slots,
+            max_queries=max_queries, max_prompt_len=max_prompt_len,
+            enc_len=enc_len, dtype=dtype, seed=seed)
         self.stats = EngineStats()
         # pressure callback: called with the page deficit when an alloc
         # fails; frees pages (retracting retained/active KV) and the
         # allocation is retried once (docs/robustness.md)
         self._pressure_cb: Optional[Any] = None
+        # optional cross-request radix cache (repro.kv.radix): its LRU
+        # leaves are evicted before the preemption callback is consulted
+        self._radix: Optional[Any] = None
+
+    # -- runner delegation ----------------------------------------------------
+    # Device state lives on the ModelRunner; these keep the engine's public
+    # surface (and the sampler/trainer/tests that use it) unchanged.
+
+    @property
+    def params(self):
+        return self.runner.params
+
+    @params.setter
+    def params(self, value) -> None:
+        self.runner.params = value
+
+    @property
+    def cfg(self) -> ModelConfig:
+        return self.runner.cfg
+
+    @property
+    def tree_cfg(self) -> TreeConfig:
+        return self.runner.tree_cfg
+
+    @property
+    def kv(self) -> PagedKVState:
+        return self.runner.kv
+
+    @property
+    def cross_pool(self):
+        return self.runner.cross_pool
+
+    @cross_pool.setter
+    def cross_pool(self, value) -> None:
+        self.runner.cross_pool = value
+
+    @property
+    def qslot_alloc(self) -> List[int]:
+        return self.runner.qslot_alloc
+
+    @property
+    def page_size(self) -> int:
+        return self.runner.page_size
+
+    @property
+    def max_prompt_len(self) -> int:
+        return self.runner.max_prompt_len
+
+    @property
+    def dtype(self):
+        return self.runner.dtype
+
+    @property
+    def MP(self) -> int:
+        return self.runner.MP
+
+    @property
+    def garbage_page(self) -> int:
+        return self.runner.garbage_page
+
+    @property
+    def scratch_slot(self) -> int:
+        return self.runner.scratch_slot
+
+    @property
+    def has_rec(self) -> bool:
+        return self.runner.has_rec
+
+    @property
+    def has_cross(self) -> bool:
+        return self.runner.has_cross
+
+    @property
+    def enc_len(self) -> int:
+        return self.runner.enc_len
+
+    @property
+    def n_prefix(self) -> int:
+        return self.runner.n_prefix
+
+    @property
+    def _decode_fns(self):
+        return self.runner._decode_fns
+
+    @property
+    def _prefill_fns(self):
+        return self.runner._prefill_fns
 
     # -- misc -----------------------------------------------------------------
 
     def _next_key(self):
-        self._key, sub = jax.random.split(self._key)
-        return sub
-
-    def _window(self, layer_idx: int) -> int:
-        if (self.cfg.sliding_window > 0
-                and not self.cfg.is_global_attn_layer(layer_idx)):
-            return self.cfg.sliding_window
-        return 0
+        return self.runner.next_key()
 
     def _track_pages(self):
         self.stats.peak_pages = max(self.stats.peak_pages,
@@ -275,9 +362,24 @@ class TreeEngine:
 
     # -- pressure / preemption ----------------------------------------------
 
+    def attach_radix(self, radix) -> None:
+        """Register a cross-request radix cache (``repro.kv.radix``).
+
+        Under pressure the engine evicts the cache's LRU leaves before
+        consulting the preemption callback, and :meth:`pressure` discounts
+        cache-held pages that could be reclaimed on demand — a pool kept
+        warm by the cache must not throttle branching or trigger
+        preemption while eviction can still satisfy the demand."""
+        self._radix = radix
+
     def pressure(self) -> float:
-        """KV pool occupancy in [0, 1] — the branching throttle signal."""
-        return self.kv.pool.watermark
+        """Effective KV pool occupancy in [0, 1] — the branching throttle
+        signal.  Evictable radix-cache pages count as free."""
+        pool = self.kv.pool
+        if self._radix is None:
+            return pool.watermark
+        held = pool.pages_in_use - self._radix.evictable_pages
+        return max(held, 0) / max(pool.num_pages, 1)
 
     def pages_free(self) -> int:
         return self.kv.pool.num_free
@@ -300,12 +402,27 @@ class TreeEngine:
             return self.kv.pool.alloc()
         except OutOfPages:
             self.stats.pressure_events += 1
+            # eviction before preemption: cache-held prefix KV is
+            # recomputable, a live path's working set is not — reclaim
+            # LRU radix leaves first and only then consult the
+            # preemption callback
+            if self._radix is not None and self._radix.evict(1) > 0:
+                try:
+                    return self.kv.pool.alloc()
+                except OutOfPages:
+                    pass
             if self._pressure_cb is not None:
                 self._pressure_cb(1)
             # retry once: an injected fault's spec is consumed and a real
             # exhaustion either recovered via the callback or re-raises
             # with full allocator diagnostics
-            return self.kv.pool.alloc()
+            try:
+                return self.kv.pool.alloc()
+            except OutOfPages as exc:
+                if self._radix is not None:
+                    exc.annotate(radix_pages=self._radix.cached_pages,
+                                 radix_evictable=self._radix.evictable_pages)
+                raise
 
     def _alloc_slot(self) -> int:
         try:
@@ -519,8 +636,8 @@ class TreeEngine:
             ef[:Q] = enc_frames
             enc_frames = ef
 
-        fn = self._get_prefill_fn(Qb, Sp, prefix_embeds is not None,
-                                  enc_frames is not None)
+        fn = self.runner.get_prefill_fn(Qb, Sp, prefix_embeds is not None,
+                                        enc_frames is not None)
         # one batched h2d push for the whole prefill pack
         (tokens, lengths, tables, slots, qslots, prefix_embeds,
          enc_frames) = annotated_transfer(
@@ -673,7 +790,7 @@ class TreeEngine:
         slots = np.asarray([child.slot if child.slot >= 0
                             else self.scratch_slot], np.int32)
         qslots = np.asarray([max(child.qslot, 0)], np.int32)
-        fn = self._get_prefill_fn(1, Sp, False, False)
+        fn = self.runner.get_prefill_fn(1, Sp, False, False)
         toks, lengths, tables, slots, qslots = annotated_transfer(
             (toks, lengths, tables, slots, qslots), to="device",
             reason="replay-pack")
@@ -726,7 +843,7 @@ class TreeEngine:
             qslots[i] = max(p.qslot, 0)
         tables[R:, 0] = self.garbage_page
 
-        fn = self._get_decode_fn(Rb, l)
+        fn = self.runner.get_decode_fn(Rb, l)
         tok0, lp0, pos0, tables, slots, qslots = annotated_transfer(
             (tok0, lp0, pos0, tables, slots, qslots), to="device",
             reason="decode-pack")
@@ -773,10 +890,76 @@ class TreeEngine:
 
     # handled inside prefill via enc_frames; decode gathers by qslot.
 
+
+# ---------------------------------------------------------------------------
+# model runner: device state + jitted device functions
+# ---------------------------------------------------------------------------
+
+class ModelRunner:
+    """Device-execution half of the Scheduler / ModelRunner split.
+
+    Owns the params, the paged KV state, the cross-attention pools and the
+    per-shape caches of jitted prefill / decode / serve functions.  It
+    knows nothing about paths, forks or preemption — ``TreeEngine`` (tree
+    rollouts) and ``repro.core.scheduler.Scheduler`` (continuous batching)
+    are its two scheduling frontends.
+    """
+
+    def __init__(self, params, cfg: ModelConfig, tree_cfg: TreeConfig, *,
+                 num_pages: int = 4096, page_size: Optional[int] = None,
+                 max_slots: int = 256, max_queries: int = 64,
+                 max_prompt_len: int = 512, enc_len: int = 64,
+                 dtype=jnp.float32, seed: int = 0):
+        self.params = params
+        self.cfg = cfg
+        self.tree_cfg = tree_cfg
+        self.page_size = page_size or min(64, tree_cfg.segment_len)
+        self.max_prompt_len = max_prompt_len
+        self.dtype = dtype
+        max_len = max_prompt_len + tree_cfg.max_response_len + enc_len
+        self.MP = -(-max_len // self.page_size) + 1
+        self.kv = PagedKVState(cfg, num_pages, self.page_size, max_slots,
+                               dtype)
+        # page 0 = garbage sink for padded-position writes; slot 0 = scratch
+        self.garbage_page = self.kv.pool.alloc()
+        assert self.garbage_page == 0
+        self.scratch_slot = self.kv.slots.alloc() if self.kv.rec_state else -1
+        self.has_rec = bool(self.kv.rec_state)
+        self.has_cross = cfg.encoder is not None
+        self.enc_len = enc_len
+        self.cross_pool: Dict[int, Dict[str, jnp.ndarray]] = {}
+        self.qslot_alloc: List[int] = list(range(max_queries - 1, -1, -1))
+        if self.has_cross:
+            hd = cfg.resolved_head_dim
+            for i in range(cfg.num_layers):
+                self.cross_pool[i] = {
+                    "k": jnp.zeros((max_queries, enc_len, cfg.num_kv_heads,
+                                    hd), dtype),
+                    "v": jnp.zeros((max_queries, enc_len, cfg.num_kv_heads,
+                                    hd), dtype),
+                }
+        self.n_prefix = (cfg.frontend.num_prefix_tokens
+                         if cfg.frontend is not None
+                         and cfg.frontend.kind == "vision" else 0)
+        self._decode_fns: Dict[Tuple[int, int], Any] = {}
+        self._prefill_fns: Dict[Tuple[int, int, bool, bool], Any] = {}
+        self._serve_fns: Dict[Tuple[int, int], Any] = {}
+        self._key = jax.random.PRNGKey(seed)
+
+    def next_key(self):
+        self._key, sub = jax.random.split(self._key)
+        return sub
+
+    def _window(self, layer_idx: int) -> int:
+        if (self.cfg.sliding_window > 0
+                and not self.cfg.is_global_attn_layer(layer_idx)):
+            return self.cfg.sliding_window
+        return 0
+
     # =================== jitted device functions =================================
 
-    def _get_prefill_fn(self, Q: int, Sp: int, has_prefix: bool,
-                        has_frames: bool):
+    def get_prefill_fn(self, Q: int, Sp: int, has_prefix: bool,
+                       has_frames: bool):
         key = (Q, Sp, has_prefix, has_frames)
         if key not in self._prefill_fns:
             self._prefill_fns[key] = self._build_prefill(Q, Sp)
@@ -897,17 +1080,26 @@ class TreeEngine:
 
         return jax.jit(prefill_fn)
 
-    def _get_decode_fn(self, R: int, l: int):
+    def get_decode_fn(self, R: int, l: int):
         key = (R, l)
         if key not in self._decode_fns:
             self._decode_fns[key] = self._build_decode(R, l)
         return self._decode_fns[key]
 
-    def _build_decode(self, R: int, l: int):
+    def get_serve_fn(self, R: int, l: int):
+        key = (R, l)
+        if key not in self._serve_fns:
+            self._serve_fns[key] = self._build_serve(R, l)
+        return self._serve_fns[key]
+
+    def _make_token_forward(self, R: int):
+        """One decoding step for a (R,)-row batch, shared by the tree
+        decode and the continuous-batching serve scan bodies: embed the
+        incoming token, write its KV into the block-table page, run every
+        layer through the paged kernels, return the next-token logits."""
         cfg = self.cfg
         page = self.page_size
         pool_dtype = self.dtype
-        tc = self.tree_cfg
         window_of = self._window
         has_cross = self.has_cross
 
@@ -932,6 +1124,112 @@ class TreeEngine:
                            w_uv.astype(jnp.float32))
             return o.reshape(o.shape[0], -1)
 
+        def token_forward(params, pools, rec_g, cross_g, tok, pos, tables):
+            x = embed(params["embed"], tok)            # (R,d)
+            if cfg.encoder is not None:
+                pe = sinusoidal_positions(
+                    cfg.max_position_embeddings, cfg.d_model)
+                x = x + pe[pos].astype(x.dtype)
+            lengths = pos + 1
+            pids = jnp.take_along_axis(
+                jnp.maximum(tables, 0), (pos // page)[:, None],
+                axis=1)[:, 0]
+            offs = pos % page
+            new_rec_g = dict(rec_g)
+            new_pools = dict(pools)
+            for i, lp_ in enumerate(params["layers"]):
+                kind = cfg.layer_kind(i)
+                h = rmsnorm(lp_["norm1"], x, cfg.norm_eps)
+                if kind == "attn":
+                    if cfg.attention_kind == "mla":
+                        x1 = h[:, None, :]
+                        q_nope, q_rope = attn._mla_q(
+                            lp_["attn"], cfg, x1, pos[:, None])
+                        q_nope, q_rope = q_nope[:, 0], q_rope[:, 0]
+                        ckv_t, kr_t = attn._mla_latents(
+                            lp_["attn"], cfg, x1, pos[:, None])
+                        pi = new_pools[i]
+                        pi = {
+                            "ckv": pi["ckv"].at[pids, offs].set(
+                                ckv_t[:, 0].astype(pool_dtype)),
+                            "k_rope": pi["k_rope"].at[pids, offs].set(
+                                kr_t[:, 0].astype(pool_dtype)),
+                        }
+                        new_pools[i] = pi
+                        o = mla_paged_attn(lp_["attn"], q_nope, q_rope,
+                                           pi, tables, lengths)
+                        y = o.astype(x.dtype) @ lp_["attn"]["w_o"]
+                    else:
+                        x1 = h[:, None, :]
+                        q, k, v = attn._gqa_qkv(lp_["attn"], cfg, x1,
+                                                pos[:, None])
+                        q, k, v = q[:, 0], k[:, 0], v[:, 0]
+                        pi = new_pools[i]
+                        pi = {
+                            "k": pi["k"].at[pids, offs].set(
+                                k.astype(pool_dtype)),
+                            "v": pi["v"].at[pids, offs].set(
+                                v.astype(pool_dtype)),
+                        }
+                        new_pools[i] = pi
+                        o = kops.paged_attention(
+                            q, pi["k"], pi["v"], tables, lengths,
+                            page_size=page, window=window_of(i))
+                        y = o.reshape(R, -1) @ lp_["attn"]["w_o"]
+                elif kind == "mamba":
+                    y1, st = ssm.mamba_forward(
+                        lp_["mamba"], cfg, h[:, None, :], new_rec_g[i])
+                    y = y1[:, 0]
+                    new_rec_g[i] = {
+                        "conv": st["conv"].astype(pool_dtype),
+                        "ssm": st["ssm"]}
+                elif kind == "rwkv":
+                    st_in = {"wkv": new_rec_g[i]["wkv"],
+                             "shift": new_rec_g[i]["shift"]}
+                    y1, st = ssm.rwkv6_time_mix(
+                        lp_["rwkv"], cfg, h[:, None, :], st_in)
+                    y = y1[:, 0]
+                    new_rec_g[i] = dict(
+                        new_rec_g[i], wkv=st["wkv"],
+                        shift=st["shift"].astype(pool_dtype))
+                x = x + y
+                if has_cross:
+                    hc = rmsnorm(lp_["norm_cross"], x, cfg.norm_eps)
+                    hd = cfg.resolved_head_dim
+                    qc = (hc @ lp_["cross"]["w_q"]).reshape(
+                        R, cfg.num_heads, hd)
+                    ck, cv = cross_g[i]["k"], cross_g[i]["v"]
+                    enc_lengths = jnp.full((R,), ck.shape[1], jnp.int32)
+                    oc = kops.decode_attention(qc, ck, cv, enc_lengths)
+                    x = x + oc.reshape(R, -1) @ lp_["cross"]["w_o"]
+                h = rmsnorm(lp_["norm2"], x, cfg.norm_eps)
+                if kind == "rwkv":
+                    y1, sh = ssm.rwkv6_channel_mix(
+                        lp_["ffn"], h[:, None, :],
+                        new_rec_g[i]["shift_ffn"])
+                    y = y1[:, 0]
+                    new_rec_g[i] = dict(
+                        new_rec_g[i],
+                        shift_ffn=sh.astype(pool_dtype))
+                elif "ffn_moe" in lp_:
+                    y, _ = moe_mod.moe_forward(
+                        lp_["ffn_moe"], cfg, h[:, None, :], cfg.act)
+                    y = y[:, 0]
+                else:
+                    y = mlp(lp_["ffn"], h, cfg.act)
+                x = x + y
+            xf = rmsnorm(params["norm_f"], x, cfg.norm_eps)
+            logits = unembed(params["embed"], xf, cfg.tie_embeddings)
+            return new_pools, new_rec_g, logits
+
+        return token_forward
+
+    def _build_decode(self, R: int, l: int):
+        cfg = self.cfg
+        tc = self.tree_cfg
+        has_cross = self.has_cross
+        token_forward = self._make_token_forward(R)
+
         def decode_fn(params, pools, rec, cross, tok0, lp0, pos0, tables,
                       slots, qslots, key):
             rec_g = {i: {k: v[slots] for k, v in st.items()}
@@ -940,105 +1238,11 @@ class TreeEngine:
             if has_cross:
                 cross_g = {i: {k: v[qslots] for k, v in st.items()}
                            for i, st in cross.items()}
-            ar = jnp.arange(R)
 
             def step(carry, key_t):
                 pools, rec_g, tok, lp, pos, _ = carry
-                x = embed(params["embed"], tok)            # (R,d)
-                if cfg.encoder is not None:
-                    pe = sinusoidal_positions(
-                        cfg.max_position_embeddings, cfg.d_model)
-                    x = x + pe[pos].astype(x.dtype)
-                lengths = pos + 1
-                pids = jnp.take_along_axis(
-                    jnp.maximum(tables, 0), (pos // page)[:, None],
-                    axis=1)[:, 0]
-                offs = pos % page
-                new_rec_g = dict(rec_g)
-                new_pools = dict(pools)
-                for i, lp_ in enumerate(params["layers"]):
-                    kind = cfg.layer_kind(i)
-                    h = rmsnorm(lp_["norm1"], x, cfg.norm_eps)
-                    if kind == "attn":
-                        if cfg.attention_kind == "mla":
-                            x1 = h[:, None, :]
-                            q_nope, q_rope = attn._mla_q(
-                                lp_["attn"], cfg, x1, pos[:, None])
-                            q_nope, q_rope = q_nope[:, 0], q_rope[:, 0]
-                            ckv_t, kr_t = attn._mla_latents(
-                                lp_["attn"], cfg, x1, pos[:, None])
-                            pi = new_pools[i]
-                            pi = {
-                                "ckv": pi["ckv"].at[pids, offs].set(
-                                    ckv_t[:, 0].astype(pool_dtype)),
-                                "k_rope": pi["k_rope"].at[pids, offs].set(
-                                    kr_t[:, 0].astype(pool_dtype)),
-                            }
-                            new_pools[i] = pi
-                            o = mla_paged_attn(lp_["attn"], q_nope, q_rope,
-                                               pi, tables, lengths)
-                            y = o.astype(x.dtype) @ lp_["attn"]["w_o"]
-                        else:
-                            x1 = h[:, None, :]
-                            q, k, v = attn._gqa_qkv(lp_["attn"], cfg, x1,
-                                                    pos[:, None])
-                            q, k, v = q[:, 0], k[:, 0], v[:, 0]
-                            pi = new_pools[i]
-                            pi = {
-                                "k": pi["k"].at[pids, offs].set(
-                                    k.astype(pool_dtype)),
-                                "v": pi["v"].at[pids, offs].set(
-                                    v.astype(pool_dtype)),
-                            }
-                            new_pools[i] = pi
-                            o = kops.paged_attention(
-                                q, pi["k"], pi["v"], tables, lengths,
-                                page_size=page, window=window_of(i))
-                            y = o.reshape(R, -1) @ lp_["attn"]["w_o"]
-                    elif kind == "mamba":
-                        y1, st = ssm.mamba_forward(
-                            lp_["mamba"], cfg, h[:, None, :], new_rec_g[i])
-                        y = y1[:, 0]
-                        new_rec_g[i] = {
-                            "conv": st["conv"].astype(pool_dtype),
-                            "ssm": st["ssm"]}
-                    elif kind == "rwkv":
-                        st_in = {"wkv": new_rec_g[i]["wkv"],
-                                 "shift": new_rec_g[i]["shift"]}
-                        y1, st = ssm.rwkv6_time_mix(
-                            lp_["rwkv"], cfg, h[:, None, :], st_in)
-                        y = y1[:, 0]
-                        new_rec_g[i] = dict(
-                            new_rec_g[i], wkv=st["wkv"],
-                            shift=st["shift"].astype(pool_dtype))
-                    x = x + y
-                    if has_cross:
-                        hc = rmsnorm(lp_["norm_cross"], x, cfg.norm_eps)
-                        hd = cfg.resolved_head_dim
-                        qc = (hc @ lp_["cross"]["w_q"]).reshape(
-                            R, cfg.num_heads, hd)
-                        ck, cv = cross_g[i]["k"], cross_g[i]["v"]
-                        enc_lengths = jnp.full((R,), ck.shape[1], jnp.int32)
-                        oc = kops.decode_attention(qc, ck, cv, enc_lengths)
-                        x = x + oc.reshape(R, -1) @ lp_["cross"]["w_o"]
-                    h = rmsnorm(lp_["norm2"], x, cfg.norm_eps)
-                    if kind == "rwkv":
-                        y1, sh = ssm.rwkv6_channel_mix(
-                            lp_["ffn"], h[:, None, :],
-                            new_rec_g[i]["shift_ffn"])
-                        y = y1[:, 0]
-                        new_rec_g[i] = dict(
-                            new_rec_g[i],
-                            shift_ffn=sh.astype(pool_dtype))
-                    elif "ffn_moe" in lp_:
-                        y, _ = moe_mod.moe_forward(
-                            lp_["ffn_moe"], cfg, h[:, None, :], cfg.act)
-                        y = y[:, 0]
-                    else:
-                        y = mlp(lp_["ffn"], h, cfg.act)
-                    x = x + y
-                xf = rmsnorm(params["norm_f"], x, cfg.norm_eps)
-                logits = unembed(params["embed"], xf, cfg.tie_embeddings)
+                new_pools, new_rec_g, logits = token_forward(
+                    params, pools, rec_g, cross_g, tok, pos, tables)
                 tnext, lpnext = sample_tokens(key_t, logits,
                                               tc.temperature, tc.top_p)
                 new_carry = (new_pools, new_rec_g, tnext, lpnext, pos + 1,
@@ -1061,3 +1265,65 @@ class TreeEngine:
                     last_logits)
 
         return jax.jit(decode_fn)
+
+    def _build_serve(self, R: int, l: int):
+        """Continuous-batching serve segment: like decode, but each scan
+        step can *force* the consumed token (chunked prompt prefill mixed
+        into the decode dispatch) and sampling is keyed per row by
+        (request key, absolute position) instead of a per-round split —
+        a request's token stream is a pure function of its own identity
+        and context, bitwise independent of batch composition, arrival
+        interleaving and preemption/replay.
+
+        The logprob reported for a *forced* token is its log-probability
+        under the previous step's distribution (exact mid-round; at the
+        round's first step the carried logits are zeros, but callers only
+        consume logprobs of generated tokens, whose values are exact).
+        """
+        assert not self.has_cross and self.n_prefix == 0, \
+            "serve loop needs token-complete contexts (no cross-KV / " \
+            "modality prefix)"
+        cfg = self.cfg
+        tc = self.tree_cfg
+        token_forward = self._make_token_forward(R)
+
+        def serve_fn(params, pools, rec, tok0, lp0, pos0, tables, slots,
+                     forced_tok, forced_on, row_keys):
+            rec_g = {i: {k: v[slots] for k, v in st.items()}
+                     for i, st in rec.items()}
+
+            def step(carry, xs):
+                pools, rec_g, tok, lp, pos, prev_logits = carry
+                f_tok, f_on = xs
+                tok = jnp.where(f_on, f_tok, tok)
+                prev_lsm = jax.nn.log_softmax(
+                    prev_logits / max(tc.temperature, 1e-6), axis=-1)
+                lp = jnp.where(
+                    f_on,
+                    jnp.take_along_axis(prev_lsm, f_tok[:, None],
+                                        axis=-1)[:, 0],
+                    lp)
+                new_pools, new_rec_g, logits = token_forward(
+                    params, pools, rec_g, None, tok, pos, tables)
+                keys = jax.vmap(jax.random.fold_in)(row_keys, pos + 1)
+                tnext, lpnext = sample_rows(keys, logits,
+                                            tc.temperature, tc.top_p)
+                new_carry = (new_pools, new_rec_g, tnext, lpnext, pos + 1,
+                             logits.astype(jnp.float32))
+                return new_carry, (tok, lp)
+
+            V = (params["embed"]["embedding"].shape[0]
+                 if cfg.tie_embeddings else
+                 params["embed"]["lm_head"].shape[1])
+            init = (pools, rec_g, tok0, lp0, pos0,
+                    jnp.zeros((R, V), jnp.float32))
+            (pools_f, rec_gf, pend_tok, pend_lp, _, _), outs = \
+                jax.lax.scan(step, init,
+                             (forced_tok.T, forced_on.T))
+            toks, lps = outs                                # (l, R)
+            new_rec = {i: {k: rec[i][k].at[slots].set(rec_gf[i][k])
+                           for k in rec[i]}
+                       for i in rec}
+            return pools_f, new_rec, toks.T, lps.T, pend_tok, pend_lp
+
+        return jax.jit(serve_fn)

@@ -43,14 +43,22 @@ class OutOfPages(RuntimeError):
         self.num_pages = num_pages
         self.live_paths: Optional[int] = None
         self.per_query_pages: Optional[Dict[int, int]] = None
+        self.radix_pages: Optional[int] = None
+        self.radix_evictable: Optional[int] = None
 
     def annotate(self, *, live_paths: Optional[int] = None,
-                 per_query_pages: Optional[Dict[int, int]] = None
+                 per_query_pages: Optional[Dict[int, int]] = None,
+                 radix_pages: Optional[int] = None,
+                 radix_evictable: Optional[int] = None
                  ) -> "OutOfPages":
         if live_paths is not None:
             self.live_paths = live_paths
         if per_query_pages is not None:
             self.per_query_pages = dict(per_query_pages)
+        if radix_pages is not None:
+            self.radix_pages = radix_pages
+        if radix_evictable is not None:
+            self.radix_evictable = radix_evictable
         return self
 
     def __str__(self) -> str:
@@ -64,6 +72,9 @@ class OutOfPages(RuntimeError):
             per_q = ", ".join(f"q{q}:{n}" for q, n in
                               sorted(self.per_query_pages.items()))
             parts.append(f"per_query_pages={{{per_q}}}")
+        if self.radix_pages is not None:
+            ev = 0 if self.radix_evictable is None else self.radix_evictable
+            parts.append(f"radix_pages={self.radix_pages}(evictable {ev})")
         return " | ".join(parts)
 
 

@@ -1,0 +1,221 @@
+"""Cross-request radix cache over the paged KV pool.
+
+TreePO's in-tree forks amortize KV *within* one query tree; serving real
+traffic repeats prefixes *across* requests too — system prompts, few-shot
+templates, the same benchmark question asked twice.  This module keeps a
+radix tree keyed by page-sized token blocks whose nodes own refcounted
+pages of ``PagePool`` (the SGL-JAX radix-cache design, SNIPPETS.md §1),
+so a new request's prompt prefix can point its block table at KV pages
+some earlier request already computed — the exact COW refcounting
+discipline in-tree forks use, extended across requests.
+
+Ownership protocol (what keeps ``lifecycle_guard`` conservation exact):
+
+* every page stored in the tree carries exactly ONE cache-owned refcount
+  (taken at :meth:`insert`); live paths referencing the same page hold
+  their own refs on top;
+* :meth:`match_prefix` retains every page it hands out — the caller puts
+  them straight into an ``EnginePath`` table and releases them through
+  the normal path lifecycle;
+* :meth:`evict` drops whole least-recently-used leaves, releasing the
+  cache's ref per page.  A page a live path still references therefore
+  stays allocated (its refcount just drops by one) — eviction can never
+  free KV out from under a running request.
+
+Matches are page-granular and capped one token short of the prompt
+(``(len(tokens) - 1) // page_size`` blocks): the serve loop must re-feed
+at least the final prompt token to obtain the boundary logits it samples
+the first generated token from.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from repro.kv.cache import PagePool
+
+__all__ = ["RadixCache", "RadixNode"]
+
+Block = Tuple[int, ...]
+
+
+class RadixNode:
+    """One edge of the radix tree: a run of page-sized token blocks and
+    the pages holding their KV, compressed path-style (Patricia trie)."""
+
+    __slots__ = ("blocks", "pages", "children", "parent", "last_access")
+
+    def __init__(self, blocks: List[Block], pages: List[int],
+                 parent: Optional["RadixNode"], last_access: int):
+        self.blocks = blocks
+        self.pages = pages
+        self.children: Dict[Block, "RadixNode"] = {}
+        self.parent = parent
+        self.last_access = last_access
+
+    def is_leaf(self) -> bool:
+        return not self.children
+
+
+class RadixCache:
+    """Radix tree of cached prompt-prefix KV pages over one ``PagePool``."""
+
+    def __init__(self, pool: PagePool, page_size: int):
+        self.pool = pool
+        self.page_size = page_size
+        self.root = RadixNode([], [], None, 0)
+        self._clock = 0
+        self.cached_pages = 0      # pages currently owned by the cache
+        self.hit_tokens = 0        # prompt tokens served from cache
+        self.evicted_pages = 0     # cache-owned refs dropped by eviction
+        self.insertions = 0
+        self.lookups = 0
+
+    # -- internals ----------------------------------------------------------
+
+    def _tick(self) -> int:
+        self._clock += 1
+        return self._clock
+
+    def _blocks(self, tokens: Sequence[int], n: int) -> List[Block]:
+        ps = self.page_size
+        return [tuple(tokens[i * ps:(i + 1) * ps]) for i in range(n)]
+
+    # -- lookup -------------------------------------------------------------
+
+    def match_prefix(self, tokens: Sequence[int]
+                     ) -> Tuple[List[int], int]:
+        """Longest cached page-aligned prefix of ``tokens``.
+
+        Returns ``(pages, matched_tokens)``; every returned page has been
+        retained for the caller.  The match is capped one token short of
+        the sequence so the caller always recomputes the boundary token.
+        """
+        self.lookups += 1
+        limit = max(0, (len(tokens) - 1) // self.page_size)
+        blocks = self._blocks(tokens, limit)
+        pages: List[int] = []
+        node = self.root
+        stamp = self._tick()
+        i = 0
+        while i < len(blocks):
+            child = node.children.get(blocks[i])
+            if child is None:
+                break
+            n = 0
+            while (n < len(child.blocks) and i + n < len(blocks)
+                   and child.blocks[n] == blocks[i + n]):
+                n += 1
+            pages.extend(child.pages[:n])
+            child.last_access = stamp
+            i += n
+            if n < len(child.blocks):
+                break           # partial-edge hit: take the page prefix
+            node = child
+        for pid in pages:
+            self.pool.retain(pid)
+        self.hit_tokens += i * self.page_size
+        return pages, i * self.page_size
+
+    # -- insert -------------------------------------------------------------
+
+    def insert(self, tokens: Sequence[int], pages: Sequence[int]) -> int:
+        """Cache ``pages`` as the KV of the page-aligned token prefix.
+
+        Walks the tree deduplicating against what is already cached (an
+        identical block run keeps the incumbent pages — the caller's
+        duplicates are simply not cached) and retains one cache-owned ref
+        on every page of the new suffix.  Returns how many pages the
+        cache newly took ownership of.
+        """
+        n = len(pages)
+        assert len(tokens) >= n * self.page_size, \
+            "insert needs page-aligned tokens covering every page"
+        blocks = self._blocks(tokens, n)
+        node = self.root
+        stamp = self._tick()
+        i = 0
+        while i < n:
+            child = node.children.get(blocks[i])
+            if child is None:
+                new = RadixNode(blocks[i:], list(pages[i:]), node, stamp)
+                node.children[blocks[i]] = new
+                for pid in new.pages:
+                    self.pool.retain(pid)
+                self.cached_pages += len(new.pages)
+                self.insertions += 1
+                return n - i
+            m = 0
+            while (m < len(child.blocks) and i + m < n
+                   and child.blocks[m] == blocks[i + m]):
+                m += 1
+            child.last_access = stamp
+            if m == len(child.blocks):
+                node = child
+                i += m
+                continue
+            # split the edge at the divergence point: a mid node keeps the
+            # shared block prefix (and its pages), the incumbent child
+            # re-parents under it with the suffix
+            mid = RadixNode(child.blocks[:m], child.pages[:m], node, stamp)
+            node.children[blocks[i]] = mid
+            child.blocks = child.blocks[m:]
+            child.pages = child.pages[m:]
+            child.parent = mid
+            mid.children[child.blocks[0]] = child
+            node = mid
+            i += m
+        return 0
+
+    # -- eviction -----------------------------------------------------------
+
+    def _lru_leaf(self) -> Optional[RadixNode]:
+        best: Optional[RadixNode] = None
+        stack = list(self.root.children.values())
+        while stack:
+            nd = stack.pop()
+            if nd.is_leaf():
+                if best is None or nd.last_access < best.last_access:
+                    best = nd
+            else:
+                stack.extend(nd.children.values())
+        return best
+
+    def evict(self, need: int) -> int:
+        """Drop least-recently-used whole leaves until at least ``need``
+        pages actually returned to the pool's free list (pages live paths
+        still reference stay allocated and don't count), or the cache is
+        empty.  Returns the number of pages freed to the pool."""
+        freed = 0
+        while freed < need:
+            leaf = self._lru_leaf()
+            if leaf is None:
+                break
+            for pid in leaf.pages:
+                if int(self.pool.refcount[pid]) == 1:
+                    freed += 1
+                self.pool.release(pid)
+            self.cached_pages -= len(leaf.pages)
+            self.evicted_pages += len(leaf.pages)
+            parent = leaf.parent
+            del parent.children[leaf.blocks[0]]
+            # collapse a now-childless interior run into nothing extra:
+            # its pages remain cached and it is itself a leaf candidate
+        return freed
+
+    # -- introspection ------------------------------------------------------
+
+    def _walk_pages(self) -> List[int]:
+        out: List[int] = []
+        stack = list(self.root.children.values())
+        while stack:
+            nd = stack.pop()
+            out.extend(nd.pages)
+            stack.extend(nd.children.values())
+        return out
+
+    @property
+    def evictable_pages(self) -> int:
+        """Cached pages whose only ref is the cache's — reclaimable
+        immediately without touching any live path."""
+        return sum(1 for pid in self._walk_pages()
+                   if int(self.pool.refcount[pid]) == 1)

@@ -189,6 +189,39 @@ def test_preempt_restore_roundtrip():
     assert len(res2.tokens) > 0 and res2.finite
 
 
+def test_serve_radix_eviction_before_preemption():
+    """Injected page exhaustion mid-serve: the engine reclaims radix
+    leaves (recomputable cache) before any live request is preempted
+    (non-recomputable working set), and the serve run completes."""
+    from repro.core.scheduler import Request, Scheduler
+    from repro.data.tokenizer import ByteTokenizer
+
+    tok = ByteTokenizer()
+    cfg = get_config("qwen2.5-7b", smoke=True)
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    eng = TreeEngine(params, cfg, TREE_CFG, **ENGINE_KW)
+    sched = Scheduler(eng, mode="continuous", max_running=4, base_seed=7)
+    sys_prompt = "You are a helpful math assistant. Answer concisely."
+    prompts = [tok.encode(sys_prompt + f" What is {i}+{i}?", bos=True)
+               for i in range(4)]
+    # wave 1 populates the radix (requests finish -> cache is sole owner)
+    wave1 = [Request(rid=i, prompt=p, max_new_tokens=8)
+             for i, p in enumerate(prompts[:2])]
+    sched.run(wave1)
+    assert sched.radix is not None and sched.radix.cached_pages > 0
+    # wave 2 hits an injected allocator exhaustion mid-serve
+    wave2 = [Request(rid=10 + i, prompt=p, max_new_tokens=8)
+             for i, p in enumerate(prompts[2:])]
+    with FaultInjector().page_exhaustion(at_alloc=2):
+        report = sched.run(wave2)
+    assert eng.stats.pressure_events >= 1          # the fault really fired
+    assert sched.radix.evicted_pages > 0           # eviction kicked in...
+    assert eng.stats.preempted_paths == 0          # ...before preemption
+    assert report.finished == len(wave1) + len(wave2)   # cumulative report
+    assert all(r.state == "finished" for r in wave2)
+    sched.radix.evict(eng.kv.pool.num_pages)       # drain the cache
+
+
 def test_out_of_pages_diagnostics():
     pool = PagePool(2)
     pool.alloc(), pool.alloc()
@@ -202,6 +235,11 @@ def test_out_of_pages_diagnostics():
         tr.rollout(2)
     msg = str(ei.value)
     assert "live_paths=" in msg and "per_query_pages=" in msg
+    # serving annotation: pressure failures with a radix attached report
+    # cache-held vs evictable pages, distinguishing them from path-held
+    exc = OutOfPages("pool exhausted", pages_in_use=2, num_pages=2)
+    exc.annotate(radix_pages=5, radix_evictable=3)
+    assert "radix_pages=5(evictable 3)" in str(exc)
 
 
 def test_allocator_interleaving_seeded():

@@ -1,0 +1,274 @@
+"""Property suite for the cross-request radix cache (repro.kv.radix).
+
+Two tiers: seeded always-run twins (random-walk oracle comparisons that
+run in every environment) and hypothesis properties that explore the
+same invariants adversarially where hypothesis is installed — the
+test_property.py / test_faults.py split, applied to the radix cache.
+
+The invariants:
+  * ``match_prefix`` returns exactly the longest cached page-aligned
+    prefix (vs a brute-force oracle over every inserted sequence),
+    capped one token short of the query;
+  * insert / match / evict round-trip: what was inserted is found, what
+    was evicted is not, and pages come back identical;
+  * refcount conservation: one cache-owned ref per cached page, one ref
+    per match handed out, zero net refs after eviction + caller release
+    (cross-validated by ``lifecycle_guard``'s shadow refcounts);
+  * eviction never frees a page a live path still references.
+"""
+import random
+
+import numpy as np
+import pytest
+
+from repro.core.lifecycle import lifecycle_guard
+from repro.kv.cache import PagePool
+from repro.kv.radix import RadixCache
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+pytestmark = pytest.mark.serve
+
+PS = 4   # page size for the pure host-side tests
+
+
+# ---------------------------------------------------------------------------
+# brute-force oracle
+# ---------------------------------------------------------------------------
+
+class OracleCache:
+    """Reference model: a dict from block-path tuples to page ids.  The
+    first insert of a block path wins (the radix keeps the incumbent),
+    and a lookup walks block by block until a path misses."""
+
+    def __init__(self, page_size: int):
+        self.ps = page_size
+        self.pages = {}           # block-path tuple -> page id
+
+    def _blocks(self, tokens, n):
+        return tuple(tuple(tokens[i * self.ps:(i + 1) * self.ps])
+                     for i in range(n))
+
+    def insert(self, tokens, pages):
+        n = len(pages)
+        fresh = []
+        for i in range(n):
+            path = self._blocks(tokens, i + 1)
+            if path not in self.pages:
+                self.pages[path] = pages[i]
+                fresh.append(pages[i])
+        return fresh
+
+    def match(self, tokens):
+        limit = max(0, (len(tokens) - 1) // self.ps)
+        out = []
+        for i in range(limit):
+            path = self._blocks(tokens, i + 1)
+            if path not in self.pages:
+                break
+            out.append(self.pages[path])
+        return out, len(out) * self.ps
+
+    def drop_all(self):
+        self.pages.clear()
+
+
+def _release_match(pool, pages):
+    for pid in pages:
+        pool.release(pid)
+
+
+def _sequences(rng, n, vocab=5, maxlen=6 * PS):
+    """Token sequences with heavy prefix sharing (tiny vocab)."""
+    return [[rng.randrange(vocab) for _ in range(rng.randrange(1, maxlen))]
+            for _ in range(n)]
+
+
+def _run_trace(seqs, queries):
+    """Feed insert/match traffic through cache + oracle, asserting match
+    agreement on every query; returns (pool, cache) for further checks."""
+    pool = PagePool(num_pages=512)
+    cache = RadixCache(pool, PS)
+    oracle = OracleCache(PS)
+    owned = {}                    # seq idx -> pages the "path" still refs
+    for si, seq in enumerate(seqs):
+        n = len(seq) // PS
+        pages = [pool.alloc() for _ in range(n)]
+        cache.insert(seq[: n * PS], pages)
+        oracle.insert(seq[: n * PS], pages)
+        owned[si] = pages
+    for q in queries:
+        got_pages, got_tokens = cache.match_prefix(q)
+        want_pages, want_tokens = oracle.match(q)
+        assert got_tokens == want_tokens, (q, got_tokens, want_tokens)
+        assert got_pages == want_pages, (q, got_pages, want_pages)
+        _release_match(pool, got_pages)
+    return pool, cache, owned
+
+
+# ---------------------------------------------------------------------------
+# always-run seeded twins
+# ---------------------------------------------------------------------------
+
+def test_match_is_capped_one_token_short():
+    """A fully-cached prompt still re-feeds its final token: the match
+    limit is (len-1)//ps pages, so the caller always recomputes the
+    boundary logits it samples from."""
+    pool = PagePool(num_pages=16)
+    cache = RadixCache(pool, PS)
+    seq = [1, 2, 3, 4, 5, 6, 7, 8]
+    pages = [pool.alloc(), pool.alloc()]
+    cache.insert(seq, pages)
+    got, n = cache.match_prefix(seq)
+    assert n == PS and got == pages[:1]       # 2nd page NOT returned
+    _release_match(pool, got)
+    got, n = cache.match_prefix(seq + [9])    # one past the boundary
+    assert n == 2 * PS and got == pages
+    _release_match(pool, got)
+
+
+def test_match_oracle_seeded_random_walk():
+    rng = random.Random(0xC0FFEE)
+    for round_ in range(20):
+        seqs = _sequences(rng, rng.randrange(1, 8))
+        queries = seqs + _sequences(rng, 4)
+        pool, cache, owned = _run_trace(seqs, queries)
+        # teardown: evict everything, then drop the path refs
+        cache.evict(pool.num_pages)
+        for pages in owned.values():
+            _release_match(pool, pages)
+        assert pool.pages_in_use == 0
+
+
+def test_insert_dedups_and_counts_new_pages():
+    pool = PagePool(num_pages=64)
+    cache = RadixCache(pool, PS)
+    seq = list(range(3 * PS))
+    pages = [pool.alloc() for _ in range(3)]
+    assert cache.insert(seq, pages) == 3
+    # an identical re-insert keeps the incumbent: 0 new pages owned
+    dup = [pool.alloc() for _ in range(3)]
+    assert cache.insert(seq, dup) == 0
+    assert cache.cached_pages == 3
+    # a diverging suffix shares the common prefix, owns only the tail
+    seq2 = seq[: 2 * PS] + [99] * PS
+    pages2 = [pool.alloc() for _ in range(3)]
+    assert cache.insert(seq2, pages2) == 1
+    got, n = cache.match_prefix(seq2 + [0])
+    assert n == 3 * PS and got == pages[:2] + pages2[2:]
+    _release_match(pool, got)
+    for p in pages + dup + pages2:
+        pool.release(p)
+    cache.evict(pool.num_pages)
+    assert pool.pages_in_use == 0
+
+
+def test_evict_never_frees_live_referenced_page():
+    pool = PagePool(num_pages=16)
+    cache = RadixCache(pool, PS)
+    seq = list(range(2 * PS))
+    pages = [pool.alloc(), pool.alloc()]     # the "live path" refs
+    cache.insert(seq, pages)                 # cache ref on top: rc == 2
+    assert cache.evictable_pages == 0
+    freed = cache.evict(4)
+    # eviction dropped the cache's refs but freed NOTHING to the pool
+    assert freed == 0
+    assert cache.cached_pages == 0
+    assert all(int(pool.refcount[p]) == 1 for p in pages)
+    assert pool.pages_in_use == 2            # still allocated, path-owned
+    for p in pages:
+        pool.release(p)
+    assert pool.pages_in_use == 0
+
+
+def test_evict_lru_order_and_roundtrip():
+    pool = PagePool(num_pages=64)
+    cache = RadixCache(pool, PS)
+    old = [1] * (2 * PS)
+    new = [2] * (2 * PS)
+    p_old = [pool.alloc(), pool.alloc()]
+    p_new = [pool.alloc(), pool.alloc()]
+    cache.insert(old, p_old)
+    cache.insert(new, p_new)
+    for p in p_old + p_new:
+        pool.release(p)                      # cache is now sole owner
+    m, _ = cache.match_prefix(new + [0])     # touch `new`: old is LRU
+    _release_match(pool, m)
+    assert cache.evict(1) >= 1
+    gone, n = cache.match_prefix(old + [0])
+    assert n == 0 and gone == []             # LRU leaf evicted first
+    kept, n = cache.match_prefix(new + [0])
+    assert n == 2 * PS                       # recently-used leaf survives
+    _release_match(pool, kept)
+    cache.evict(pool.num_pages)
+    assert pool.pages_in_use == 0
+
+
+def test_refcount_conservation_under_lifecycle_guard():
+    """The cache's retain/release traffic flows through the same patched
+    PagePool methods lifecycle_guard shadows — a full insert / match /
+    evict / release session must net to zero or the guard raises."""
+    with lifecycle_guard() as tracker:
+        pool = PagePool(num_pages=128)
+        cache = RadixCache(pool, PS)
+        rng = random.Random(7)
+        seqs = _sequences(rng, 6)
+        live = []
+        for seq in seqs:
+            n = len(seq) // PS
+            pages = [pool.alloc() for _ in range(n)]
+            cache.insert(seq[: n * PS], pages)
+            live.append(pages)
+        for seq in seqs:
+            got, _ = cache.match_prefix(seq + [0])
+            _release_match(pool, got)
+        cache.evict(pool.num_pages)
+        for pages in live:
+            _release_match(pool, pages)
+        assert pool.pages_in_use == 0
+    assert tracker.violations == []
+
+
+# ---------------------------------------------------------------------------
+# hypothesis properties (exploratory tier)
+# ---------------------------------------------------------------------------
+
+if HAVE_HYPOTHESIS:
+    SETTINGS = settings(max_examples=50, deadline=None)
+    token_seq = st.lists(st.integers(0, 4), min_size=1, max_size=6 * PS)
+
+    @SETTINGS
+    @given(st.lists(token_seq, max_size=8), st.lists(token_seq, max_size=8))
+    def test_prop_match_equals_bruteforce_oracle(seqs, queries):
+        pool, cache, owned = _run_trace(seqs, seqs + queries)
+        cache.evict(pool.num_pages)
+        for pages in owned.values():
+            _release_match(pool, pages)
+        assert pool.pages_in_use == 0
+
+    @SETTINGS
+    @given(st.lists(token_seq, min_size=1, max_size=8),
+           st.integers(0, 64))
+    def test_prop_evict_conserves_refcounts(seqs, need):
+        pool = PagePool(num_pages=256)
+        cache = RadixCache(pool, PS)
+        live = []
+        for seq in seqs:
+            n = len(seq) // PS
+            pages = [pool.alloc() for _ in range(n)]
+            cache.insert(seq[: n * PS], pages)
+            live.append(pages)
+        before = pool.pages_in_use
+        freed = cache.evict(need)
+        # freed pages had refcount 1 (cache-only); path-held pages remain
+        assert pool.pages_in_use == before - freed
+        assert all(int(pool.refcount[p]) >= 1
+                   for pages in live for p in pages)
+        cache.evict(pool.num_pages)
+        for pages in live:
+            _release_match(pool, pages)
+        assert pool.pages_in_use == 0

@@ -1,0 +1,216 @@
+"""Deterministic scheduler-simulation tests (repro.core.scheduler).
+
+Seeded Poisson arrival traces replay through the continuous-batching
+serve loop and must prove the scheduler's three contracts:
+
+  * liveness — every request finishes and admission wait is bounded
+    (FCFS + preempted-to-front means the queue head cannot starve);
+  * determinism — a request's token/logprob stream is bitwise
+    independent of arrival interleaving, batch composition and
+    preemption/replay (position-keyed per-row sampling);
+  * parity — continuous serving and the synchronous batch baseline
+    produce identical per-request outputs, with `lifecycle_guard`
+    armed and zero violations.
+
+All runs use the virtual round clock, so the suite is exactly
+reproducible on any host.
+"""
+import random
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.configs.base import TreeConfig
+from repro.core.engine import TreeEngine
+from repro.core.guard import hot_path_guard
+from repro.core.lifecycle import lifecycle_guard
+from repro.core.scheduler import Request, Scheduler, poisson_trace
+from repro.data.tokenizer import ByteTokenizer
+from repro.models.model import init_params
+
+pytestmark = pytest.mark.serve
+
+TOK = ByteTokenizer()
+SYS = "You are a helpful math assistant. Answer concisely."
+TREE_CFG = TreeConfig(max_depth=4, segment_len=8, max_width=4,
+                      branch_factor=2, init_divergence_low=2,
+                      init_divergence_high=2, temperature=0.9)
+
+
+@pytest.fixture(scope="module")
+def model():
+    cfg = get_config("qwen2.5-7b", smoke=True)
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+def _engine(model, num_pages=256):
+    cfg, params = model
+    return TreeEngine(params, cfg, TREE_CFG, num_pages=num_pages,
+                      page_size=8, max_slots=16, max_queries=8,
+                      max_prompt_len=128, seed=0)
+
+
+def _prompts(n):
+    return [TOK.encode(SYS + f" What is {i}+{i}?", bos=True)
+            for i in range(n)]
+
+
+def _requests(prompts, arrivals, max_new=12):
+    return [Request(rid=i, prompt=p, max_new_tokens=max_new, arrival=a)
+            for i, (p, a) in enumerate(zip(prompts, arrivals))]
+
+
+def _streams(reqs):
+    return [(r.out_tokens, r.out_logprobs) for r in reqs]
+
+
+# ---------------------------------------------------------------------------
+# trace generation
+# ---------------------------------------------------------------------------
+
+def test_poisson_trace_is_seeded_and_monotone():
+    a = poisson_trace(random.Random(123), 50, rate=2.0)
+    b = poisson_trace(random.Random(123), 50, rate=2.0)
+    c = poisson_trace(random.Random(124), 50, rate=2.0)
+    assert a == b and a != c
+    assert all(x < y for x, y in zip(a, a[1:]))
+    assert len(a) == 50 and a[0] > 0.0
+
+
+# ---------------------------------------------------------------------------
+# liveness: everything finishes, admission wait is bounded
+# ---------------------------------------------------------------------------
+
+def test_poisson_replay_no_starvation(model):
+    """8 requests through 2 slots: every request finishes, and no
+    request waits longer than the drain time of the queue ahead of it
+    (FCFS bound: ceil(N / max_running) * rounds-per-request)."""
+    prompts = _prompts(8)
+    arrivals = poisson_trace(random.Random(42), len(prompts), rate=1.0)
+    reqs = _requests(prompts, arrivals, max_new=8)
+    sched = Scheduler(_engine(model), mode="continuous", max_running=2,
+                      base_seed=3)
+    report = sched.run(reqs)
+    assert report.finished == len(reqs)
+    assert all(r.state == "finished" for r in reqs)
+    assert all(r.finish_reason in ("eos", "length") for r in reqs)
+    # rounds per request <= ceil((prompt+gen)/l) + 1; 4 waves of 2
+    per_req = -(-(len(prompts[0]) + 8) // sched.seg_len) + 1
+    assert report.max_admission_wait <= 4 * per_req
+    assert report.rounds < 200
+
+
+# ---------------------------------------------------------------------------
+# determinism: arrival interleaving, preemption replay
+# ---------------------------------------------------------------------------
+
+def test_outputs_bitwise_independent_of_arrival_interleaving(model):
+    """The same requests under three different arrival patterns (burst,
+    Poisson, widely spaced) produce bitwise-identical per-request
+    streams — batch composition never leaks into a row."""
+    prompts = _prompts(6)
+    ref = None
+    for arrivals in ([0.0] * 6,
+                     poisson_trace(random.Random(9), 6, rate=0.7),
+                     [4.0 * i for i in range(6)]):
+        reqs = _requests(prompts, arrivals)
+        sched = Scheduler(_engine(model), mode="continuous",
+                          max_running=4, base_seed=7)
+        report = sched.run(reqs)
+        assert report.finished == len(reqs)
+        if ref is None:
+            ref = _streams(reqs)
+        else:
+            assert _streams(reqs) == ref      # bitwise, tokens + logprobs
+
+
+def test_preemption_replay_is_bitwise(model):
+    """A pool too small for the full working set forces preemption;
+    replayed requests regenerate their dropped pending draws bitwise
+    (absolute-position sampling keys), so outputs match an ample-pool
+    run exactly."""
+    prompts = _prompts(6)
+    arrivals = poisson_trace(random.Random(5), 6, rate=0.8)
+
+    ample = _requests(prompts, arrivals)
+    Scheduler(_engine(model, num_pages=256), mode="continuous",
+              max_running=4, base_seed=7).run(ample)
+
+    tight = _requests(prompts, arrivals)
+    sched = Scheduler(_engine(model, num_pages=24), mode="continuous",
+                      max_running=4, base_seed=7)
+    report = sched.run(tight)
+    assert report.preemptions > 0             # the pool really was tight
+    assert report.finished == len(tight)
+    assert _streams(tight) == _streams(ample)
+
+
+def test_radix_reuse_does_not_change_outputs(model):
+    """Cross-request KV reuse is a pure optimization: staggered arrivals
+    let later requests hit the radix (reuse > 0), and their streams stay
+    bitwise identical to a radix-off run."""
+    prompts = _prompts(6)
+    arrivals = [20.0 * i for i in range(6)]   # arrive after predecessors
+
+    base = _requests(prompts, arrivals)
+    Scheduler(_engine(model), mode="continuous", max_running=4,
+              base_seed=7, radix=False).run(base)
+
+    cached = _requests(prompts, arrivals)
+    sched = Scheduler(_engine(model), mode="continuous", max_running=4,
+                      base_seed=7, radix=True)
+    report = sched.run(cached)
+    assert report.reuse_ratio > 0.3           # shared SYS prefix hits
+    assert all(r.cached_len > 0 for r in cached[1:])
+    assert _streams(cached) == _streams(base)
+
+
+# ---------------------------------------------------------------------------
+# parity: continuous vs synchronous, under the armed lifecycle guard
+# ---------------------------------------------------------------------------
+
+def test_continuous_vs_sync_parity(model):
+    """The acceptance invariant: per-request token/logprob parity
+    between continuous serving and the synchronous batch baseline, with
+    `lifecycle_guard` armed over both runs and zero violations.  Tokens
+    must match exactly; logprobs within 1e-5 (they are bitwise here)."""
+    prompts = _prompts(6)
+    with lifecycle_guard() as tracker:
+        cont = _requests(prompts,
+                         poisson_trace(random.Random(11), 6, rate=0.8))
+        rep_c = Scheduler(_engine(model), mode="continuous",
+                          max_running=4, base_seed=7).run(cont)
+        sync = _requests(prompts, [0.0] * 6)
+        rep_s = Scheduler(_engine(model), mode="sync", max_running=4,
+                          base_seed=7, radix=False).run(sync)
+    assert tracker.violations == []
+    assert rep_c.finished == rep_s.finished == len(prompts)
+    for a, b in zip(cont, sync):
+        assert a.out_tokens == b.out_tokens
+        assert a.finish_reason == b.finish_reason
+        np.testing.assert_allclose(a.out_logprobs, b.out_logprobs,
+                                   atol=1e-5)
+
+
+def test_warm_serve_zero_violations_zero_compiles(model):
+    """After a cold round compiles the (Rb, l) serve bucket, a whole
+    warm serve run performs no un-annotated transfer and no
+    recompilation — the continuous loop reuses ONE compiled shape for
+    its entire lifetime."""
+    prompts = _prompts(5)
+    eng = _engine(model)
+    sched = Scheduler(eng, mode="continuous", max_running=4, base_seed=7)
+    warm = _requests(_prompts(2), [0.0, 0.0], max_new=4)
+    sched.run(warm)                           # cold: compiles the bucket
+    with hot_path_guard(use_transfer_guard=False) as rep:
+        sched2 = Scheduler(eng, mode="continuous", max_running=4,
+                           base_seed=7)
+        report = sched2.run(_requests(prompts, [0.0] * 5))
+    assert report.finished == len(prompts)
+    assert rep.violations == []
+    assert rep.compiles == 0
+    assert "serve-pack" in rep.annotated_reasons
+    assert "serve-segment" in rep.annotated_reasons

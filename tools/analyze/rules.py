@@ -87,8 +87,10 @@ class Finding:
 # calls there must route through repro.core.guard.annotated_transfer
 HOT_PATH_MODULES: Set[str] = {
     "repro.core.engine",
+    "repro.core.scheduler",
     "repro.rl.trainer",
     "repro.kv.cache",
+    "repro.kv.radix",
 }
 
 # attributes of device values that are concrete at trace time

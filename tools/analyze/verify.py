@@ -536,9 +536,15 @@ FSM_TRANSITIONS: Dict[str, Set[Tuple[str, str]]] = {
         ("repro.core.sampler", "_finish_path"),
         ("repro.core.sampler", "_release_leaf_kv"),
         ("repro.core.sampler", "sample_trees"),
+        # serving frontend: admission-time error cleanup and request
+        # completion (repro.core.scheduler)
+        ("repro.core.scheduler", "Scheduler._build_path"),
+        ("repro.core.scheduler", "Scheduler._finish_request"),
     },
     "preempt": {
         ("repro.core.sampler", "_admit_for_decode"),
+        # serving frontend: newest-victim retraction under page pressure
+        ("repro.core.scheduler", "Scheduler._preempt_victim"),
     },
     "preempt-enqueue": {
         ("repro.core.sampler", "_admit_for_decode"),

@@ -15,6 +15,9 @@
 #   fault — the deterministic fault-injection suite (tests/test_faults.py:
 #       KV-pressure degradation, NaN quarantine, crash-safe resume). Runs
 #       in BOTH full and short mode; -m fault selects just it
+#   serve — the continuous-batching serving suite (tests/test_scheduler.py
+#       scheduler simulation + parity, tests/test_radix.py radix-cache
+#       properties). Runs in BOTH full and short mode; -m serve selects it
 # Extra args are forwarded to pytest.
 set -euo pipefail
 cd "$(dirname "$0")/.."
