@@ -24,6 +24,7 @@ from benchmarks import (
     fig7_segment_budget,
     fig8_prob_branching,
     fig9_compute_scaling,
+    profile_dma_compute,
     roofline,
     table1_training,
     table2_efficiency,
@@ -31,6 +32,7 @@ from benchmarks import (
 
 BENCHES = [
     ("decode_hotpath", decode_hotpath),
+    ("profile_dma_compute", profile_dma_compute),
     ("serve_continuous", serve_continuous),
     ("train_hotpath", train_hotpath),
     ("robustness_degradation", robustness_degradation),

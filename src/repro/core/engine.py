@@ -14,10 +14,15 @@ on fork — it is a running reduction, not a prefix.
 
 The per-segment inner loop is device-resident end to end:
 
-* **Attention decode** runs through the paged Pallas kernels
-  (GQA: ``kops.paged_attention``; MLA: ``kops.mla_paged_attention`` over
-  absorbed latent pages) — block-table indirection is resolved in scalar
-  prefetch, never as a dense HBM gather.
+* **Attention decode** runs through the paged Pallas kernels — by default
+  the pipelined fused-pool generation (GQA: ``kops.fused_paged_attention``
+  over a head-interleaved ``[K0,V0,...]`` pool; MLA:
+  ``kops.mla_fused_paged_attention`` over ``[ckv|k_rope]`` latent pages),
+  which multi-buffers its own page DMAs so the copy of page i+1 overlaps
+  the scoring of page i; ``fused_kv=False`` selects the legacy split-pool
+  kernels (``kops.paged_attention`` / ``kops.mla_paged_attention``) as the
+  parity oracle.  Block-table indirection is resolved in scalar prefetch
+  either way, never as a dense HBM gather.
 * **Fork divergence is sampled on device**: full-vocab boundary logits stay
   in a device buffer keyed by (buffer, row) on each path, and a branching
   round draws all of its divergence tokens in one jitted ``fork_sample``
@@ -62,6 +67,7 @@ from repro.core import faults
 from repro.core.guard import annotated_transfer
 from repro.kernels import ops as kops
 from repro.kv.cache import OutOfPages, PagedKVState, bucket_pow2
+from repro.kv.layout import fuse_mla, interleave_kv
 from repro.models import attention as attn
 from repro.models import moe as moe_mod
 from repro.models import ssm
@@ -252,12 +258,14 @@ class TreeEngine:
                  num_pages: int = 4096, page_size: Optional[int] = None,
                  max_slots: int = 256, max_queries: int = 64,
                  max_prompt_len: int = 512, enc_len: int = 64,
-                 dtype=jnp.float32, seed: int = 0):
+                 dtype=jnp.float32, seed: int = 0, fused_kv: bool = True,
+                 paged_num_buffers: int = 2):
         self.runner = ModelRunner(
             params, cfg, tree_cfg, num_pages=num_pages,
             page_size=page_size, max_slots=max_slots,
             max_queries=max_queries, max_prompt_len=max_prompt_len,
-            enc_len=enc_len, dtype=dtype, seed=seed)
+            enc_len=enc_len, dtype=dtype, seed=seed, fused_kv=fused_kv,
+            paged_num_buffers=paged_num_buffers)
         self.stats = EngineStats()
         # pressure callback: called with the page deficit when an alloc
         # fails; frees pages (retracting retained/active KV) and the
@@ -318,6 +326,10 @@ class TreeEngine:
     @property
     def MP(self) -> int:
         return self.runner.MP
+
+    @property
+    def fused_kv(self) -> bool:
+        return self.runner.fused_kv
 
     @property
     def garbage_page(self) -> int:
@@ -701,7 +713,16 @@ class TreeEngine:
             self.release_partial(children)
             raise
         if page_src or slot_src:
-            self.kv.apply_forks(page_src, page_dst, slot_src, slot_dst)
+            try:
+                self.kv.apply_forks(page_src, page_dst, slot_src, slot_dst)
+            except Exception:
+                # a failure inside the fork-copy dispatch (injected kill
+                # point, device OOM) leaves the pools unrebound — no child
+                # can hold copied K with stale V — but the round's fresh
+                # COW pages / slots / table retains must go back, or the
+                # half-applied fork leaks them for the rollout's lifetime
+                self.release_partial(children)
+                raise
             self.stats.fork_dispatches += 1
         self.stats.forks += len(children)
         self._track_pages()
@@ -909,17 +930,22 @@ class ModelRunner:
                  num_pages: int = 4096, page_size: Optional[int] = None,
                  max_slots: int = 256, max_queries: int = 64,
                  max_prompt_len: int = 512, enc_len: int = 64,
-                 dtype=jnp.float32, seed: int = 0):
+                 dtype=jnp.float32, seed: int = 0, fused_kv: bool = True,
+                 paged_num_buffers: int = 2):
         self.params = params
         self.cfg = cfg
         self.tree_cfg = tree_cfg
         self.page_size = page_size or min(64, tree_cfg.segment_len)
         self.max_prompt_len = max_prompt_len
         self.dtype = dtype
+        self.fused_kv = fused_kv
+        # DMA ring depth of the pipelined paged kernels (bitwise-invariant
+        # scheduling knob — benchmarks/profile_dma_compute.py sweeps it)
+        self.paged_num_buffers = paged_num_buffers
         max_len = max_prompt_len + tree_cfg.max_response_len + enc_len
         self.MP = -(-max_len // self.page_size) + 1
         self.kv = PagedKVState(cfg, num_pages, self.page_size, max_slots,
-                               dtype)
+                               dtype, fused_kv=fused_kv)
         # page 0 = garbage sink for padded-position writes; slot 0 = scratch
         self.garbage_page = self.kv.pool.alloc()
         assert self.garbage_page == 0
@@ -971,6 +997,7 @@ class ModelRunner:
         n_pre = self.n_prefix
         pool_dtype = self.dtype
         window_of = self._window
+        fused = self.fused_kv
 
         def prefill_fn(params, pools, rec, cross, tokens, lengths, tables,
                        slots, qslots, prefix_embeds, enc_frames):
@@ -1008,21 +1035,35 @@ class ModelRunner:
                     if cfg.attention_kind == "mla":
                         y, (ckv, k_rope) = attn.mla_forward(
                             lp["attn"], cfg, h, positions, i, return_kv=True)
-                        new_pools[i] = {
-                            "ckv": new_pools[i]["ckv"].at[pids, offs].set(
-                                ckv.astype(pool_dtype)),
-                            "k_rope": new_pools[i]["k_rope"]
-                            .at[pids, offs].set(k_rope.astype(pool_dtype)),
-                        }
+                        if fused:
+                            new_pools[i] = {
+                                "kv": new_pools[i]["kv"].at[pids, offs].set(
+                                    fuse_mla(ckv, k_rope)
+                                    .astype(pool_dtype)),
+                            }
+                        else:
+                            new_pools[i] = {
+                                "ckv": new_pools[i]["ckv"]
+                                .at[pids, offs].set(ckv.astype(pool_dtype)),
+                                "k_rope": new_pools[i]["k_rope"]
+                                .at[pids, offs].set(
+                                    k_rope.astype(pool_dtype)),
+                            }
                     else:
                         y, (k, v) = attn.gqa_forward(
                             lp["attn"], cfg, h, positions, i, return_kv=True)
-                        new_pools[i] = {
-                            "k": new_pools[i]["k"].at[pids, offs].set(
-                                k.astype(pool_dtype)),
-                            "v": new_pools[i]["v"].at[pids, offs].set(
-                                v.astype(pool_dtype)),
-                        }
+                        if fused:
+                            new_pools[i] = {
+                                "kv": new_pools[i]["kv"].at[pids, offs].set(
+                                    interleave_kv(k, v).astype(pool_dtype)),
+                            }
+                        else:
+                            new_pools[i] = {
+                                "k": new_pools[i]["k"].at[pids, offs].set(
+                                    k.astype(pool_dtype)),
+                                "v": new_pools[i]["v"].at[pids, offs].set(
+                                    v.astype(pool_dtype)),
+                            }
                 elif kind == "mamba":
                     y, st = ssm.mamba_forward(lp["mamba"], cfg, h,
                                               mask=mask, last_idx=last)
@@ -1102,6 +1143,8 @@ class ModelRunner:
         pool_dtype = self.dtype
         window_of = self._window
         has_cross = self.has_cross
+        fused = self.fused_kv
+        nbuf = self.paged_num_buffers
 
         def mla_paged_attn(lp_attn, q_nope, q_rope, pools_i, tables,
                            lengths):
@@ -1115,10 +1158,16 @@ class ModelRunner:
                                            m.qk_nope_head_dim)
             q_lat = jnp.einsum("bhd,rhd->bhr", q_nope.astype(jnp.float32),
                                w_uk.astype(jnp.float32))
-            o_lat = kops.mla_paged_attention(
-                q_lat, q_rope.astype(jnp.float32), pools_i["ckv"],
-                pools_i["k_rope"], tables, lengths, page_size=page,
-                scale=1.0 / (m.qk_head_dim ** 0.5))
+            if fused:
+                o_lat = kops.mla_fused_paged_attention(
+                    q_lat, q_rope.astype(jnp.float32), pools_i["kv"],
+                    tables, lengths, page_size=page,
+                    scale=1.0 / (m.qk_head_dim ** 0.5), num_buffers=nbuf)
+            else:
+                o_lat = kops.mla_paged_attention(
+                    q_lat, q_rope.astype(jnp.float32), pools_i["ckv"],
+                    pools_i["k_rope"], tables, lengths, page_size=page,
+                    scale=1.0 / (m.qk_head_dim ** 0.5))
             w_uv = lp_attn["w_uv"].reshape(m.kv_lora_rank, H, m.v_head_dim)
             o = jnp.einsum("bhr,rhd->bhd", o_lat,
                            w_uv.astype(jnp.float32))
@@ -1149,12 +1198,19 @@ class ModelRunner:
                         ckv_t, kr_t = attn._mla_latents(
                             lp_["attn"], cfg, x1, pos[:, None])
                         pi = new_pools[i]
-                        pi = {
-                            "ckv": pi["ckv"].at[pids, offs].set(
-                                ckv_t[:, 0].astype(pool_dtype)),
-                            "k_rope": pi["k_rope"].at[pids, offs].set(
-                                kr_t[:, 0].astype(pool_dtype)),
-                        }
+                        if fused:
+                            pi = {
+                                "kv": pi["kv"].at[pids, offs].set(
+                                    fuse_mla(ckv_t[:, 0], kr_t[:, 0])
+                                    .astype(pool_dtype)),
+                            }
+                        else:
+                            pi = {
+                                "ckv": pi["ckv"].at[pids, offs].set(
+                                    ckv_t[:, 0].astype(pool_dtype)),
+                                "k_rope": pi["k_rope"].at[pids, offs].set(
+                                    kr_t[:, 0].astype(pool_dtype)),
+                            }
                         new_pools[i] = pi
                         o = mla_paged_attn(lp_["attn"], q_nope, q_rope,
                                            pi, tables, lengths)
@@ -1165,16 +1221,27 @@ class ModelRunner:
                                                 pos[:, None])
                         q, k, v = q[:, 0], k[:, 0], v[:, 0]
                         pi = new_pools[i]
-                        pi = {
-                            "k": pi["k"].at[pids, offs].set(
-                                k.astype(pool_dtype)),
-                            "v": pi["v"].at[pids, offs].set(
-                                v.astype(pool_dtype)),
-                        }
-                        new_pools[i] = pi
-                        o = kops.paged_attention(
-                            q, pi["k"], pi["v"], tables, lengths,
-                            page_size=page, window=window_of(i))
+                        if fused:
+                            pi = {
+                                "kv": pi["kv"].at[pids, offs].set(
+                                    interleave_kv(k, v).astype(pool_dtype)),
+                            }
+                            new_pools[i] = pi
+                            o = kops.fused_paged_attention(
+                                q, pi["kv"], tables, lengths,
+                                page_size=page, window=window_of(i),
+                                num_buffers=nbuf)
+                        else:
+                            pi = {
+                                "k": pi["k"].at[pids, offs].set(
+                                    k.astype(pool_dtype)),
+                                "v": pi["v"].at[pids, offs].set(
+                                    v.astype(pool_dtype)),
+                            }
+                            new_pools[i] = pi
+                            o = kops.paged_attention(
+                                q, pi["k"], pi["v"], tables, lengths,
+                                page_size=page, window=window_of(i))
                         y = o.reshape(R, -1) @ lp_["attn"]["w_o"]
                 elif kind == "mamba":
                     y1, st = ssm.mamba_forward(

@@ -10,3 +10,9 @@ from jax.experimental.pallas import tpu as pltpu
 
 CompilerParams = getattr(pltpu, "CompilerParams", None) \
     or pltpu.TPUCompilerParams
+
+# HBM-resident ("don't auto-stage into VMEM") memory space for pallas_call
+# inputs the kernel DMAs manually; ``pltpu.TPUMemorySpace.ANY`` became the
+# module-level ``pltpu.ANY`` alias in newer releases.
+ANY_MEMORY_SPACE = getattr(pltpu, "ANY", None) \
+    or pltpu.TPUMemorySpace.ANY

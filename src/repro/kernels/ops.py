@@ -119,6 +119,33 @@ def paged_attention(q, k_pool, v_pool, block_tables, lengths, *,
                                window=window)
 
 
+def fused_paged_attention(q, kv_pool, block_tables, lengths, *,
+                          page_size: int, scale: float | None = None,
+                          window: int = 0, num_buffers: int = 2):
+    """Pipelined tree-decode over a fused head-interleaved KV pool.
+
+    q: (B, Hq, D); kv_pool: (num_pages, page, 2*Hkv, D) with heads
+    ``[K0,V0,K1,V1,...]`` (``repro.kv.layout.interleave_kv``);
+    block_tables: (B, max_pages) int32 page ids (-1 pad); lengths: (B,).
+    ``num_buffers``: DMA ring depth (Pallas-only scheduling knob — the
+    kernel overlaps the copy of page i+1 with the scoring of page i;
+    outputs are bitwise identical across depths).
+    """
+    if _use_pallas():
+        from repro.kernels.paged_attention import fused_paged_attention_pallas
+
+        return fused_paged_attention_pallas(q, kv_pool, block_tables,
+                                            lengths, page_size=page_size,
+                                            scale=scale, window=window,
+                                            num_buffers=num_buffers,
+                                            interpret=_interpret())
+    from repro.kernels.ref import fused_paged_attention_ref
+
+    return fused_paged_attention_ref(q, kv_pool, block_tables, lengths,
+                                     page_size=page_size, scale=scale,
+                                     window=window)
+
+
 # ---------------------------------------------------------------------------
 # MLA (absorbed-latent) paged decode attention
 # ---------------------------------------------------------------------------
@@ -144,6 +171,33 @@ def mla_paged_attention(q_lat, q_rope, ckv_pool, kr_pool, block_tables,
     return mla_paged_attention_ref(q_lat, q_rope, ckv_pool, kr_pool,
                                    block_tables, lengths,
                                    page_size=page_size, scale=scale)
+
+
+def mla_fused_paged_attention(q_lat, q_rope, kv_pool, block_tables,
+                              lengths, *, page_size: int, scale: float,
+                              num_buffers: int = 2):
+    """Pipelined absorbed-MLA tree-decode over a fused latent pool.
+
+    q_lat: (B, H, r) query pre-multiplied by W_uk; q_rope: (B, H, rd);
+    kv_pool: (num_pages, page, r + rd) with ``[ckv | k_rope]`` on the
+    feature axis (``repro.kv.layout.fuse_mla``); block_tables:
+    (B, max_pages) int32 page ids (-1 pad); lengths: (B,).  Returns the
+    latent aggregate (B, H, r).  ``num_buffers``: DMA ring depth
+    (Pallas-only scheduling knob; bitwise-invariant).
+    """
+    if _use_pallas():
+        from repro.kernels.paged_attention import (
+            mla_fused_paged_attention_pallas)
+
+        return mla_fused_paged_attention_pallas(
+            q_lat, q_rope, kv_pool, block_tables, lengths,
+            page_size=page_size, scale=scale, num_buffers=num_buffers,
+            interpret=_interpret())
+    from repro.kernels.ref import mla_fused_paged_attention_ref
+
+    return mla_fused_paged_attention_ref(q_lat, q_rope, kv_pool,
+                                         block_tables, lengths,
+                                         page_size=page_size, scale=scale)
 
 
 # ---------------------------------------------------------------------------

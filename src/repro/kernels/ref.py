@@ -9,6 +9,8 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.kv.layout import deinterleave_kv, split_mla
+
 # kv tokens carrying this segment id are attendable by EVERY query
 # (subject to the causal/window mask) — the convention sequence packing
 # uses for a per-row modality prefix that all packed segments condition
@@ -142,8 +144,25 @@ def paged_attention_ref(q, k_pool, v_pool, block_tables, lengths, *,
         valid &= pos >= (lengths[:, None] - window)
     logits = jnp.where(valid[:, None, :], logits, -1e30)
     p = jax.nn.softmax(logits, axis=-1)
+    # a fully-masked row (lengths[b] == 0 padding) must emit zeros — the
+    # uniform softmax over an all -1e30 row would aggregate page garbage
+    p = jnp.where(valid.any(axis=1)[:, None, None], p, 0.0)
     out = jnp.einsum("bhk,bkhd->bhd", p, v.astype(jnp.float32))
     return out.astype(q.dtype)
+
+
+def fused_paged_attention_ref(q, kv_pool, block_tables, lengths, *,
+                              page_size: int, scale=None, window: int = 0):
+    """Fused-layout oracle: de-interleave the ``[K0,V0,K1,V1,...]`` pool
+    (``repro.kv.layout``) and defer to :func:`paged_attention_ref`.
+
+    q: (B, Hq, D); kv_pool: (P, page, 2*Hkv, D) head-interleaved;
+    block_tables: (B, max_pages) int32 (-1 = unused); lengths: (B,).
+    """
+    k_pool, v_pool = deinterleave_kv(kv_pool)
+    return paged_attention_ref(q, k_pool, v_pool, block_tables, lengths,
+                               page_size=page_size, scale=scale,
+                               window=window)
 
 
 def mla_paged_attention_ref(q_lat, q_rope, ckv_pool, kr_pool, block_tables,
@@ -171,8 +190,25 @@ def mla_paged_attention_ref(q_lat, q_rope, ckv_pool, kr_pool, block_tables,
         & (block_tables[:, pos[0] // page_size] >= 0)
     logits = jnp.where(valid[:, None, :], logits, -1e30)
     p = jax.nn.softmax(logits, axis=-1)
+    # fully-masked (padding) rows emit zeros, not the page-0 mean
+    p = jnp.where(valid.any(axis=1)[:, None, None], p, 0.0)
     out = jnp.einsum("bhs,bsr->bhr", p, ckv)
     return out.astype(q_lat.dtype)
+
+
+def mla_fused_paged_attention_ref(q_lat, q_rope, kv_pool, block_tables,
+                                  lengths, *, page_size: int, scale: float):
+    """Fused-latent oracle: split the ``[ckv | k_rope]`` pool on the
+    feature axis (rank = q_lat's trailing dim) and defer to
+    :func:`mla_paged_attention_ref`.
+
+    q_lat: (B, H, r); q_rope: (B, H, rd); kv_pool: (P, page, r + rd);
+    block_tables: (B, max_pages) int32 (-1 = unused); lengths: (B,).
+    """
+    ckv_pool, kr_pool = split_mla(kv_pool, q_lat.shape[-1])
+    return mla_paged_attention_ref(q_lat, q_rope, ckv_pool, kr_pool,
+                                   block_tables, lengths,
+                                   page_size=page_size, scale=scale)
 
 
 def mamba_scan_ref(u, dt, B_, C_, A, D, h0, segment_ids=None):

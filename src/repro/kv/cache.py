@@ -1,8 +1,11 @@
 """Paged KV cache with tree-structured prefix sharing.
 
-The device side is a set of fixed-size pools (one K and one V array per
-attention layer, shape ``(num_pages, page_size, n_kv, head_dim)``) plus
-recurrent-state slot arrays for SSM/hybrid layers.  The host side is a page
+The device side is a set of fixed-size pools — by default one **fused**
+array per attention layer with K/V head-interleaved on the head axis
+(``(num_pages, page_size, 2*n_kv, head_dim)``, layout contract in
+``repro.kv.layout``) so one page DMA ships both halves; with
+``fused_kv=False`` the legacy split K / V pools (the parity oracle) —
+plus recurrent-state slot arrays for SSM/hybrid layers.  The host side is a page
 allocator with **refcounts**: forking a search path at a segment boundary
 copies the child's *block table* (a Python list of page ids) and bumps the
 refcount of every shared page — KV data of full pages is never copied (the
@@ -175,20 +178,28 @@ class SlotAllocator:
 class PagedKVState:
     """Device arrays + host bookkeeping for the tree engine.
 
-    Layout:
+    Layout (``fused_kv=True``, the default — ``repro.kv.layout``):
+      kv_pools: per attn layer {"kv": (P, page, 2*n_kv, hd)} with heads
+                ``[K0,V0,K1,V1,...]`` (MLA: {"kv": (P, page, r + rd)} with
+                ``[ckv | k_rope]`` on the feature axis) — one array per
+                layer, so a page is one DMA and a fork COW copy can never
+                split K from V.
+    Legacy layout (``fused_kv=False``, parity oracle):
       kv_pools: per attn layer {"k": (P, page, n_kv, hd), "v": ...}
                 (MLA layers: {"ckv": (P, page, r), "k_rope": (P, page, rd)})
+    Either way:
       rec_state: per recurrent layer, slot-indexed state arrays
                  (S_max, ...) — slot dim first.
     """
 
     def __init__(self, cfg: ModelConfig, num_pages: int, page_size: int,
-                 max_slots: int, dtype=jnp.float32):
+                 max_slots: int, dtype=jnp.float32, fused_kv: bool = True):
         self.cfg = cfg
         self.page_size = page_size
         self.pool = PagePool(num_pages)
         self.slots = SlotAllocator(max_slots)
         self.dtype = dtype
+        self.fused_kv = fused_kv
         hd = cfg.resolved_head_dim
         self.kv_pools: Dict[int, Dict[str, jnp.ndarray]] = {}
         self.rec_state: Dict[int, Dict[str, jnp.ndarray]] = {}
@@ -197,11 +208,25 @@ class PagedKVState:
             if kind == "attn":
                 if cfg.attention_kind == "mla":
                     m = cfg.mla
+                    if fused_kv:
+                        self.kv_pools[i] = {
+                            "kv": jnp.zeros(
+                                (num_pages, page_size,
+                                 m.kv_lora_rank + m.qk_rope_head_dim),
+                                dtype),
+                        }
+                    else:
+                        self.kv_pools[i] = {
+                            "ckv": jnp.zeros((num_pages, page_size,
+                                              m.kv_lora_rank), dtype),
+                            "k_rope": jnp.zeros((num_pages, page_size,
+                                                 m.qk_rope_head_dim),
+                                                dtype),
+                        }
+                elif fused_kv:
                     self.kv_pools[i] = {
-                        "ckv": jnp.zeros((num_pages, page_size,
-                                          m.kv_lora_rank), dtype),
-                        "k_rope": jnp.zeros((num_pages, page_size,
-                                             m.qk_rope_head_dim), dtype),
+                        "kv": jnp.zeros((num_pages, page_size,
+                                         2 * cfg.num_kv_heads, hd), dtype),
                     }
                 else:
                     self.kv_pools[i] = {
@@ -313,7 +338,19 @@ class PagedKVState:
         (the engine allocates fresh dst pages/slots, so a round's copies
         never alias), which is what lets dozens of per-fork-per-layer
         ``v.at[dst].set(v[src])`` dispatches collapse into one call.
+
+        Atomicity: the pools/rec trees are rebound only after the jitted
+        copy returns, so a failure here (pool OOM inside the dispatch, or
+        the ``kv.apply_forks`` injection site below) leaves device state
+        untouched — no fork can observe copied K with stale V, on either
+        layout.  The caller still owns the *host* rollback: the freshly
+        allocated dst pages/slots must go back via ``release_partial``
+        (``TreeEngine.fork_paths`` does).
         """
+        if fault_hook is not None and fault_hook("kv.apply_forks"):
+            raise OutOfPages("injected apply_forks failure",
+                             pages_in_use=self.pool.pages_in_use,
+                             num_pages=self.pool.num_pages)
         if not self.rec_state:
             slot_src, slot_dst = [], []
         if not self.kv_pools:

@@ -1,0 +1,46 @@
+"""Fused KV page-pool layout transforms.
+
+THE definitions of the fused layouts (``docs/architecture.md`` §Paged KV):
+
+* GQA/MHA: K and V are **head-interleaved** on the head axis —
+  ``[K0, V0, K1, V1, ...]`` — so a page tile is ``(page, 2*Hkv, hd)`` and
+  one page DMA ships both halves (the split layout costs two).
+* MLA: the compressed latent and the decoupled-rope key are concatenated
+  on the feature axis — ``[ckv | k_rope]`` — so a page tile is
+  ``(page, r + rd)``.
+
+Every producer/consumer of the fused layout (pool construction in
+``repro.kv.cache``, the KV writes in ``repro.core.engine``, the reference
+oracles in ``repro.kernels.ref``, the parity tests) goes through these
+four functions, so the interleaving convention has exactly one home.
+All are shape-polymorphic over leading axes: they accept per-token
+``(..., Hkv, hd)`` writes and whole pools ``(P, page, Hkv, hd)`` alike.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def interleave_kv(k, v):
+    """(..., Hkv, D) x2 -> (..., 2*Hkv, D) with heads ``[K0,V0,K1,V1,..]``."""
+    assert k.shape == v.shape, (k.shape, v.shape)
+    kv = jnp.stack([k, v], axis=-2)               # (..., Hkv, 2, D)
+    return kv.reshape(kv.shape[:-3] + (kv.shape[-3] * 2, kv.shape[-1]))
+
+
+def deinterleave_kv(kv):
+    """(..., 2*Hkv, D) -> ((..., Hkv, D) k, (..., Hkv, D) v)."""
+    h2, d = kv.shape[-2], kv.shape[-1]
+    assert h2 % 2 == 0, kv.shape
+    kv4 = kv.reshape(kv.shape[:-2] + (h2 // 2, 2, d))
+    return kv4[..., 0, :], kv4[..., 1, :]
+
+
+def fuse_mla(ckv, k_rope):
+    """(..., r) + (..., rd) -> (..., r + rd) feature-concat latent page."""
+    return jnp.concatenate([ckv, k_rope], axis=-1)
+
+
+def split_mla(kv, rank: int):
+    """(..., r + rd) -> ((..., r) ckv, (..., rd) k_rope)."""
+    return kv[..., :rank], kv[..., rank:]

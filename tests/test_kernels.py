@@ -10,16 +10,20 @@ from repro.kernels import ref
 from repro.kernels.flash_attention import flash_attention_pallas
 from repro.kernels.mamba_scan import mamba_scan_pallas
 from repro.kernels.paged_attention import (
+    fused_paged_attention_pallas,
+    mla_fused_paged_attention_pallas,
     mla_paged_attention_pallas,
     paged_attention_pallas,
 )
 from repro.kernels.rmsnorm import rmsnorm_pallas
 from repro.kernels.wkv6 import wkv6_pallas
+from repro.kv.layout import (deinterleave_kv, fuse_mla, interleave_kv,
+                             split_mla)
 
 # every test here executes real Pallas kernel bodies through the CPU
 # interpreter — select with `-m pallas_interpret`, skip with
 # `-m "not pallas_interpret"`; they run (and pass) under plain tier-1.
-pytestmark = pytest.mark.pallas_interpret
+pytestmark = [pytest.mark.pallas_interpret, pytest.mark.kernels]
 
 
 def _tol(dtype):
@@ -228,6 +232,281 @@ def test_paged_vs_dense_decode():
                                  interpret=True)
     want = ref.decode_attention_ref(q, k, v, lengths)
     assert_allclose(np.asarray(got), np.asarray(want), rtol=3e-5, atol=3e-5)
+
+
+# ---------------------------------------------------------------------------
+# pipelined fused-pool paged attention (multi-buffered page DMA)
+# ---------------------------------------------------------------------------
+
+def _fused_inputs(key, B, hq, hkv, D, P, page):
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (B, hq, D))
+    kp = jax.random.normal(ks[1], (P, page, hkv, D))
+    vp = jax.random.normal(ks[2], (P, page, hkv, D))
+    return q, kp, vp, interleave_kv(kp, vp)
+
+
+def test_kv_layout_roundtrip():
+    """interleave/deinterleave and fuse/split are exact inverses — the one
+    layout contract every producer/consumer shares."""
+    ks = jax.random.split(jax.random.PRNGKey(0), 4)
+    k = jax.random.normal(ks[0], (6, 8, 3, 16))
+    v = jax.random.normal(ks[1], (6, 8, 3, 16))
+    kv = interleave_kv(k, v)
+    assert kv.shape == (6, 8, 6, 16)
+    # head axis is [K0, V0, K1, V1, ...]
+    assert_allclose(np.asarray(kv[..., 0, :]), np.asarray(k[..., 0, :]))
+    assert_allclose(np.asarray(kv[..., 1, :]), np.asarray(v[..., 0, :]))
+    k2, v2 = deinterleave_kv(kv)
+    assert_allclose(np.asarray(k2), np.asarray(k))
+    assert_allclose(np.asarray(v2), np.asarray(v))
+    ckv = jax.random.normal(ks[2], (6, 8, 16))
+    kr = jax.random.normal(ks[3], (6, 8, 4))
+    c2, r2 = split_mla(fuse_mla(ckv, kr), 16)
+    assert_allclose(np.asarray(c2), np.asarray(ckv))
+    assert_allclose(np.asarray(r2), np.asarray(kr))
+
+
+@pytest.mark.parametrize("hq,hkv,window", [(4, 2, 0), (8, 8, 0), (4, 1, 12),
+                                           (4, 2, 5)])
+@pytest.mark.parametrize("nb", [1, 2, 4])
+def test_fused_paged_attention_parity(hq, hkv, window, nb):
+    """Pipelined fused kernel == legacy split kernel == jnp oracle across
+    buffer depths, GQA group sizes, window>0, and page counts {0, 1, many}
+    (lengths 0 / 5 / 40)."""
+    B, D, P, page = 4, 32, 24, 8
+    q, kp, vp, kv = _fused_inputs(jax.random.PRNGKey(21), B, hq, hkv, D,
+                                  P, page)
+    tables = jnp.array([[-1, -1, -1, -1, -1],
+                        [3, -1, -1, -1, -1],
+                        [0, 2, 7, 9, -1],
+                        [11, 12, 13, 14, 15]], jnp.int32)
+    lengths = jnp.array([0, 5, 26, 40], jnp.int32)
+    want = ref.paged_attention_ref(q, kp, vp, tables, lengths,
+                                   page_size=page, window=window)
+    fused_want = ref.fused_paged_attention_ref(q, kv, tables, lengths,
+                                               page_size=page, window=window)
+    assert_allclose(np.asarray(fused_want), np.asarray(want), rtol=1e-6,
+                    atol=1e-6)
+    legacy = paged_attention_pallas(q, kp, vp, tables, lengths,
+                                    page_size=page, window=window,
+                                    interpret=True)
+    got = fused_paged_attention_pallas(q, kv, tables, lengths,
+                                       page_size=page, window=window,
+                                       num_buffers=nb, interpret=True)
+    assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-5)
+    assert_allclose(np.asarray(got), np.asarray(legacy), rtol=1e-5,
+                    atol=1e-5)
+
+
+def test_fused_paged_vs_dense_decode():
+    """Pipelined fused kernel == dense decode attention on the same KV."""
+    B, S, Hq, Hkv, D, page = 2, 24, 4, 2, 16, 8
+    ks = jax.random.split(jax.random.PRNGKey(22), 3)
+    q = jax.random.normal(ks[0], (B, Hq, D))
+    k = jax.random.normal(ks[1], (B, S, Hkv, D))
+    v = jax.random.normal(ks[2], (B, S, Hkv, D))
+    lengths = jnp.array([17, 24], jnp.int32)
+    kv = interleave_kv(k.reshape(B * S // page, page, Hkv, D),
+                       v.reshape(B * S // page, page, Hkv, D))
+    tables = jnp.array([[0, 1, 2], [3, 4, 5]], jnp.int32)
+    got = fused_paged_attention_pallas(q, kv, tables, lengths,
+                                       page_size=page, interpret=True)
+    want = ref.decode_attention_ref(q, k, v, lengths)
+    assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-5)
+
+
+def test_fused_bitwise_stable_across_buffer_depths():
+    """num_buffers is a pure DMA-scheduling knob: the page-visit order and
+    online softmax are depth-independent, so outputs must be BITWISE equal
+    across depths {1, 2, 4} — for both the GQA and the MLA kernel."""
+    B, hq, hkv, D, P, page = 3, 8, 2, 32, 24, 8
+    q, _, _, kv = _fused_inputs(jax.random.PRNGKey(23), B, hq, hkv, D,
+                                P, page)
+    tables = jnp.array([[3, 5, 1, -1, -1],
+                        [0, 2, 7, 9, -1],
+                        [11, 12, 13, 14, 15]], jnp.int32)
+    lengths = jnp.array([19, 26, 40], jnp.int32)
+    outs = [np.asarray(fused_paged_attention_pallas(
+        q, kv, tables, lengths, page_size=page, num_buffers=nb,
+        interpret=True)) for nb in (1, 2, 4)]
+    assert np.array_equal(outs[0], outs[1])
+    assert np.array_equal(outs[1], outs[2])
+
+    H, r, rd = 4, 16, 8
+    ql, qr, ckv, kr = _mla_inputs(jax.random.PRNGKey(24), B, H, r, rd,
+                                  P, page, 5)
+    mkv = fuse_mla(ckv, kr)
+    mouts = [np.asarray(mla_fused_paged_attention_pallas(
+        ql, qr, mkv, tables, lengths, page_size=page, scale=0.2,
+        num_buffers=nb, interpret=True)) for nb in (1, 2, 4)]
+    assert np.array_equal(mouts[0], mouts[1])
+    assert np.array_equal(mouts[1], mouts[2])
+
+
+@pytest.mark.parametrize("nb", [1, 2, 4])
+def test_mla_fused_paged_attention_parity(nb):
+    """Pipelined fused-latent MLA kernel == legacy split kernel == oracle,
+    including a zero-length padding row."""
+    B, H, r, rd, P, page = 4, 4, 16, 8, 24, 8
+    ql, qr, ckv, kr = _mla_inputs(jax.random.PRNGKey(25), B, H, r, rd,
+                                  P, page, 5)
+    mkv = fuse_mla(ckv, kr)
+    tables = jnp.array([[-1, -1, -1, -1, -1],
+                        [3, -1, -1, -1, -1],
+                        [0, 2, 7, 9, -1],
+                        [11, 12, 13, 14, 15]], jnp.int32)
+    lengths = jnp.array([0, 5, 26, 40], jnp.int32)
+    scale = 1.0 / ((r + rd) ** 0.5)
+    want = ref.mla_paged_attention_ref(ql, qr, ckv, kr, tables, lengths,
+                                       page_size=page, scale=scale)
+    fused_want = ref.mla_fused_paged_attention_ref(
+        ql, qr, mkv, tables, lengths, page_size=page, scale=scale)
+    assert_allclose(np.asarray(fused_want), np.asarray(want), rtol=1e-6,
+                    atol=1e-6)
+    legacy = mla_paged_attention_pallas(ql, qr, ckv, kr, tables, lengths,
+                                        page_size=page, scale=scale,
+                                        interpret=True)
+    got = mla_fused_paged_attention_pallas(ql, qr, mkv, tables, lengths,
+                                           page_size=page, scale=scale,
+                                           num_buffers=nb, interpret=True)
+    assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-5)
+    assert_allclose(np.asarray(got), np.asarray(legacy), rtol=1e-5,
+                    atol=1e-5)
+
+
+def test_paged_zero_length_rows_emit_zeros_not_page0_garbage():
+    """REGRESSION (fully-masked-row bug): a row with lengths[b] == 0 — a
+    padding row in the fixed-shape serve dispatch — left m at -1e30, so
+    p = exp(s - m) = exp(0) = 1 for every masked position and the flush
+    emitted the MEAN OF PAGE 0's stale contents.  Pre-fix, every kernel
+    and both paged references returned ~1e4 here (page 0 is poisoned to
+    make the old behavior unmissable); post-fix they must return exact
+    zeros.  Covers the legacy split kernels, the pipelined fused kernels
+    at every buffer depth, and all four references."""
+    B, hq, hkv, D, P, page = 2, 4, 2, 16, 8, 8
+    ks = jax.random.split(jax.random.PRNGKey(26), 3)
+    q = jax.random.normal(ks[0], (B, hq, D))
+    # page 0 poisoned: the old bug averaged these values into the output
+    kp = jnp.full((P, page, hkv, D), 1e4)
+    vp = jnp.full((P, page, hkv, D), 1e4)
+    kv = interleave_kv(kp, vp)
+    tables = jnp.array([[-1, -1], [1, 2]], jnp.int32)
+    lengths = jnp.array([0, 12], jnp.int32)
+
+    for out in (
+        ref.paged_attention_ref(q, kp, vp, tables, lengths, page_size=page),
+        ref.fused_paged_attention_ref(q, kv, tables, lengths,
+                                      page_size=page),
+        paged_attention_pallas(q, kp, vp, tables, lengths, page_size=page,
+                               interpret=True),
+        *[fused_paged_attention_pallas(q, kv, tables, lengths,
+                                       page_size=page, num_buffers=nb,
+                                       interpret=True) for nb in (1, 2, 4)],
+    ):
+        out = np.asarray(out)
+        assert np.all(out[0] == 0.0), "padding row leaked page-0 garbage"
+        assert np.all(np.isfinite(out)) and abs(out[1]).max() > 0
+
+    H, r, rd = 4, 16, 8
+    ql = jax.random.normal(ks[1], (B, H, r))
+    qr = jax.random.normal(ks[2], (B, H, rd))
+    ckv = jnp.full((P, page, r), 1e4)
+    kr = jnp.full((P, page, rd), 1e4)
+    mkv = fuse_mla(ckv, kr)
+    for out in (
+        ref.mla_paged_attention_ref(ql, qr, ckv, kr, tables, lengths,
+                                    page_size=page, scale=0.2),
+        ref.mla_fused_paged_attention_ref(ql, qr, mkv, tables, lengths,
+                                          page_size=page, scale=0.2),
+        mla_paged_attention_pallas(ql, qr, ckv, kr, tables, lengths,
+                                   page_size=page, scale=0.2,
+                                   interpret=True),
+        *[mla_fused_paged_attention_pallas(ql, qr, mkv, tables, lengths,
+                                           page_size=page, scale=0.2,
+                                           num_buffers=nb, interpret=True)
+          for nb in (1, 2, 4)],
+    ):
+        out = np.asarray(out)
+        assert np.all(out[0] == 0.0), "padding row leaked page-0 garbage"
+        assert np.all(np.isfinite(out)) and abs(out[1]).max() > 0
+
+
+@pytest.mark.parametrize("window", [5, 12])
+def test_windowed_radix_shared_prefix_parity(window):
+    """Satellite audit: `window > 0` masking composed with radix-style
+    block tables whose LEADING pages are shared across rows (the
+    cross-request prefix-cache case) and a padded (length-0) row.
+    Positions stay consecutive per path regardless of page sharing, so
+    the windowed kernels must match a per-row dense gather exactly — no
+    double-counting across the shared/private page boundary."""
+    Hq, Hkv, D, P, page = 4, 2, 16, 16, 8
+    ks = jax.random.split(jax.random.PRNGKey(27), 3)
+    kp = jax.random.normal(ks[1], (P, page, Hkv, D))
+    vp = jax.random.normal(ks[2], (P, page, Hkv, D))
+    kv = interleave_kv(kp, vp)
+    # rows 0/1 share leading pages [2, 3] (radix-matched prefix), then
+    # diverge into private pages; row 2 is a padding row
+    tables = jnp.array([[2, 3, 5, -1],
+                        [2, 3, 9, 11],
+                        [-1, -1, -1, -1]], jnp.int32)
+    lengths = jnp.array([19, 27, 0], jnp.int32)
+    B = tables.shape[0]
+    q = jax.random.normal(ks[0], (B, Hq, D))
+
+    # independent oracle: per-row dense gather of the row's own pages,
+    # then dense decode attention with the same window
+    S = tables.shape[1] * page
+    k_dense = kp[jnp.maximum(tables, 0)].reshape(B, S, Hkv, D)
+    v_dense = vp[jnp.maximum(tables, 0)].reshape(B, S, Hkv, D)
+    want = np.array(ref.decode_attention_ref(q, k_dense, v_dense, lengths,
+                                             window=window))
+    want[np.asarray(lengths) == 0] = 0.0
+
+    legacy = paged_attention_pallas(q, kp, vp, tables, lengths,
+                                    page_size=page, window=window,
+                                    interpret=True)
+    assert_allclose(np.asarray(legacy), want, rtol=1e-5, atol=1e-5)
+    for nb in (1, 2, 4):
+        got = fused_paged_attention_pallas(q, kv, tables, lengths,
+                                           page_size=page, window=window,
+                                           num_buffers=nb, interpret=True)
+        assert_allclose(np.asarray(got), want, rtol=1e-5, atol=1e-5)
+
+
+def test_fused_dispatch_interpret(monkeypatch):
+    """REPRO_PALLAS_INTERPRET=1 routes kops.fused_paged_attention /
+    kops.mla_fused_paged_attention through the interpreted pipelined
+    kernels; parity with the forced-reference path."""
+    from repro.kernels import ops as kops
+
+    B, hq, hkv, D, P, page = 2, 4, 2, 16, 8, 8
+    q, _, _, kv = _fused_inputs(jax.random.PRNGKey(28), B, hq, hkv, D,
+                                P, page)
+    tables = jnp.array([[0, 1, -1], [2, 3, 4]], jnp.int32)
+    lengths = jnp.array([11, 22], jnp.int32)
+    kw = dict(page_size=page, window=6)
+    monkeypatch.setenv("REPRO_PALLAS_INTERPRET", "1")
+    got = kops.fused_paged_attention(q, kv, tables, lengths, **kw)
+    monkeypatch.setenv("REPRO_PALLAS_INTERPRET", "0")
+    monkeypatch.setenv("REPRO_FORCE_REF", "1")
+    want = kops.fused_paged_attention(q, kv, tables, lengths, **kw)
+    assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-5)
+
+    H, r, rd = 4, 16, 8
+    ql, qr, ckv, kr = _mla_inputs(jax.random.PRNGKey(29), B, H, r, rd,
+                                  P, page, 3)
+    mkv = fuse_mla(ckv, kr)
+    mkw = dict(page_size=page, scale=0.2)
+    monkeypatch.setenv("REPRO_FORCE_REF", "0")
+    monkeypatch.setenv("REPRO_PALLAS_INTERPRET", "1")
+    got = kops.mla_fused_paged_attention(ql, qr, mkv, tables, lengths,
+                                         **mkw)
+    monkeypatch.setenv("REPRO_PALLAS_INTERPRET", "0")
+    monkeypatch.setenv("REPRO_FORCE_REF", "1")
+    want = kops.mla_fused_paged_attention(ql, qr, mkv, tables, lengths,
+                                          **mkw)
+    assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-5)
 
 
 # ---------------------------------------------------------------------------

@@ -168,6 +168,42 @@ def test_engine_fork_release_cycle_is_silent():
     assert eng.kv.pool.pages_in_use == baseline
 
 
+@pytest.mark.parametrize("fused_kv", [True, False])
+def test_fork_copy_failure_rolls_back_cleanly(fused_kv):
+    """Satellite (K/V COW desync): a failure inside the jitted
+    ``kv.apply_forks`` dispatch must not leave half-applied fork state.
+
+    On device the copy is atomic by construction — the fused pool ships
+    K and V in one array (a child can never hold copied K with stale V),
+    and even on the legacy split path the pools are only rebound after
+    the jitted fn returns.  What CAN leak is host state: the round's
+    fresh COW pages, slots and table retains.  ``fork_paths`` must hand
+    those back via ``release_partial`` and leave the parent decodable."""
+    from repro.core.faults import FaultInjector
+    from repro.kv.cache import OutOfPages
+
+    eng = _engine(fused_kv=fused_kv)
+    with lifecycle_guard() as rep:
+        # 5 tokens, page_size 8 → partial tail page → fork must COW,
+        # so apply_forks is guaranteed to run (and to be killed)
+        [root] = eng.prefill_queries([[1, 2, 3, 4, 5]])
+        baseline = eng.kv.pool.pages_in_use
+        root_table = list(root.table)
+        with FaultInjector(seed=0).on("kv.apply_forks", at=1):
+            with pytest.raises(OutOfPages, match="injected"):
+                eng.fork_paths([root])
+        # full rollback: every COW page / table retain is back in the pool
+        assert eng.kv.pool.pages_in_use == baseline
+        # parent untouched and still usable: fork + decode succeed
+        assert root.table == root_table and not root.released
+        kids = eng.fork_paths([root])
+        eng.decode_segments([root] + kids)
+        for k in kids:
+            eng.release_path(k)
+        eng.release_path(root)
+    assert rep.violations == []
+
+
 def test_sampler_end_to_end_under_guard():
     """A full tree-sampling round must satisfy every runtime invariant."""
     eng = _engine()

@@ -48,6 +48,24 @@ def test_engine_matches_dense_forward(arch):
         np.testing.assert_allclose(ref[: len(got)], got, atol=2e-3)
 
 
+@pytest.mark.parametrize("arch", ["yi-6b", "deepseek-v3-671b"])
+def test_fused_and_split_pool_layouts_agree(arch):
+    """The fused head-interleaved pool (default) and the legacy split
+    K/V pools are pure layout choices: the same seeded rollout must emit
+    identical token sequences and matching logprobs under both."""
+    rollouts = []
+    for fused in (True, False):
+        _, _, eng = _engine(arch, fused_kv=fused)
+        trees, _ = sample_trees(eng, [[1, 2, 3, 4, 5, 6, 7]], ["x"],
+                                rng=random.Random(3))
+        rollouts.append(sorted(
+            (tuple(p.tokens), tuple(p.logprobs)) for p in trees[0].finished))
+    assert len(rollouts[0]) == len(rollouts[1]) >= 1
+    for (tok_f, lp_f), (tok_s, lp_s) in zip(*rollouts):
+        assert tok_f == tok_s
+        np.testing.assert_allclose(lp_f, lp_s, atol=2e-5)
+
+
 def test_fork_shares_pages_and_cow():
     cfg, params, eng = _engine("yi-6b")
     [root] = eng.prefill_queries([[1, 2, 3, 4, 5]])  # 5 tokens, page=8

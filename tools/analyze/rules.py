@@ -119,7 +119,7 @@ SYNC_METHODS = {"item", "tolist", "block_until_ready"}
 
 # params that only the Pallas side of a kernel may have (tuning knobs)
 _PALLAS_ONLY_PREFIXES = ("blk", "block", "grid", "num_warps",
-                        "num_stages", "debug")
+                        "num_stages", "num_buffers", "debug")
 
 
 def _is_pallas_only(param: str) -> bool:

@@ -18,6 +18,11 @@
 #   serve — the continuous-batching serving suite (tests/test_scheduler.py
 #       scheduler simulation + parity, tests/test_radix.py radix-cache
 #       properties). Runs in BOTH full and short mode; -m serve selects it
+#   kernels — the per-kernel correctness suite (tests/test_kernels.py:
+#       Pallas-vs-oracle parity incl. the pipelined fused-pool paged
+#       kernels, buffer-depth bitwise stability, the zero-length padding
+#       row regression). Same files as pallas_interpret today, but the
+#       marker is the stable name: -m kernels selects the kernel suite
 # Extra args are forwarded to pytest.
 set -euo pipefail
 cd "$(dirname "$0")/.."
